@@ -1,0 +1,31 @@
+"""Benchmark helpers: timing + CSV row emission."""
+
+import time
+from typing import Callable, List
+
+
+def time_fn(fn: Callable, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+class Rows:
+    """Collects ``name,us_per_call,derived`` CSV rows."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append(f"{name},{us_per_call:.3f},{derived}")
+
+    def emit(self):
+        for r in self.rows:
+            print(r)

@@ -1,0 +1,104 @@
+"""Kernel + model-step wall-time microbenchmarks (XLA:CPU).
+
+Wall times here are CPU numbers (the container has no TPU); they validate
+that the jit'd paths run and give the derived MXU-padding-waste metric that
+motivates the Sieve dual path.  TPU projections live in §Roofline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.kernels import ops, ref
+from repro.models import LM
+from .common import Rows, time_fn
+
+
+def kernels() -> Rows:
+    rows = Rows()
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # grouped GEMM: capacity layout, 25% fill (the bimodal regime)
+    E, C, K, N = 16, 64, 256, 256
+    buf = jax.random.normal(ks[0], (E, C, K), jnp.float32)
+    rhs = jax.random.normal(ks[1], (E, K, N), jnp.float32)
+    sizes = jnp.asarray(np.random.default_rng(0).integers(0, C // 4, size=E), jnp.int32)
+    out = ops.gmm_capacity(buf, rhs, sizes, bm=8, bk=128, bn=128, interpret=True)
+    out.block_until_ready()
+    us = time_fn(
+        lambda: ops.gmm_capacity(buf, rhs, sizes, bm=8, bk=128, bn=128,
+                                 interpret=True).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    fill = float(sizes.sum()) / (E * C)
+    rows.add("kernel/gmm_capacity_interp", us, f"fill={fill:.2f};mxu_skip={1-fill:.2f}")
+
+    # reference einsum path (what the runtime uses on CPU)
+    def einsum_path():
+        jnp.einsum("ecd,edf->ecf", buf, rhs).block_until_ready()
+
+    rows.add("kernel/gmm_dense_einsum", time_fn(einsum_path, iters=5),
+             "padding_flops_fraction=%.2f" % (1 - fill))
+
+    # expert gemv
+    S = 32
+    toks = jax.random.normal(ks[2], (S, K), jnp.float32)
+    eids = jnp.asarray(np.random.default_rng(1).integers(0, E, size=S), jnp.int32)
+    us = time_fn(
+        lambda: ops.expert_gemv(toks, rhs, eids, None, bk=128, bn=128,
+                                interpret=True).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    rows.add("kernel/expert_gemv_interp", us, f"S={S}")
+
+    # decode attention
+    B, H, Kv, dh, T = 8, 16, 4, 64, 1024
+    q = jax.random.normal(ks[3], (B, H, dh), jnp.float32)
+    ck = jax.random.normal(ks[4], (B, T, Kv, dh), jnp.float32)
+    cv = jax.random.normal(ks[5], (B, T, Kv, dh), jnp.float32)
+    lens = jnp.full((B,), T, jnp.int32)
+    us = time_fn(
+        lambda: ops.decode_attention(q, ck, cv, lens, bt=256,
+                                     interpret=True).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    kv_bytes = 2 * B * T * Kv * dh * 4
+    rows.add("kernel/decode_attention_interp", us, f"kv_bytes={kv_bytes}")
+    us_ref = time_fn(
+        lambda: ref.decode_attention_ref(q, ck, cv, lens).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    rows.add("kernel/decode_attention_ref", us_ref, "")
+    return rows
+
+
+def model_steps() -> Rows:
+    """Reduced-arch step wall times (train + decode) on CPU."""
+    rows = Rows()
+    for name in ("qwen3-moe-30b-a3b", "granite-3-2b", "rwkv6-7b"):
+        arch = get_arch(name).reduced()
+        lm = LM(arch, dtype=jnp.float32)
+        p = lm.init(jax.random.PRNGKey(0))
+        B, S = 2, 32
+        t = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, arch.vocab_size)
+        loss = jax.jit(lambda p, b: lm.loss(p, b)[0])
+        batch = {"tokens": t, "labels": t}
+        loss(p, batch).block_until_ready()
+        rows.add(f"model/{name}/loss_fwd", time_fn(
+            lambda: loss(p, batch).block_until_ready(), warmup=1, iters=5),
+            f"tokens={B*S}")
+        cache = lm.init_cache(B, S)
+        db = {"tokens": t[:, :1], "position": jnp.zeros((B,), jnp.int32)}
+        step = jax.jit(lm.decode_step)
+        step(p, db, cache)[0].block_until_ready()
+        rows.add(f"model/{name}/decode_step", time_fn(
+            lambda: step(p, db, cache)[0].block_until_ready(), warmup=1, iters=5),
+            "")
+    return rows
+
+
+ALL = [kernels, model_steps]

@@ -1,0 +1,68 @@
+"""End-to-end driver: serve a (reduced) Qwen3-MoE with batched requests.
+
+This is deliverable (b)'s end-to-end scenario for an inference paper:
+continuous batching over a slot KV cache, prefill + decode, and the Sieve
+scheduler running per MoE layer per step — feeding its EMA cost table and
+recording GPU/PIM partitions.  Compares the partition statistics across
+policies at the end.
+
+Run:  PYTHONPATH=src python examples/serve_moe.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import LM
+from repro.serving import BatchingConfig, Request, ServingEngine
+
+
+def run_policy(policy: str, lm, params, prompts):
+    engine = ServingEngine(
+        lm, params, BatchingConfig(n_slots=8, max_seq=96), policy=policy
+    )
+    for p in prompts:
+        engine.submit(Request(prompt=list(p), max_new_tokens=12))
+    done = engine.run_until_done()
+    parts = engine.stats.partitions
+    gpu_frac = (
+        np.mean([r["n_gpu"] / max(r["n_gpu"] + r["n_pim"], 1) for r in parts])
+        if parts else 0.0
+    )
+    t_est = np.mean([r["t_total_est"] for r in parts]) if parts else 0.0
+    return done, gpu_frac, t_est, engine
+
+
+def main():
+    arch = get_arch("qwen3-moe-30b-a3b").reduced()
+    lm = LM(arch, dtype=jnp.float32)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, arch.vocab_size - 1, 12) for _ in range(12)]
+
+    print(f"serving reduced {arch.name}: {arch.n_layers} layers, "
+          f"{arch.moe.n_experts} experts top-{arch.moe.top_k}\n")
+    print(f"{'policy':14s} {'requests':>8s} {'tokens':>7s} "
+          f"{'gpu_expert_frac':>16s} {'est_layer_us':>13s}")
+    baseline_out = None
+    for policy in ("sieve", "pimoe", "noexp", "allexp"):
+        done, gpu_frac, t_est, eng = run_policy(policy, lm, params, prompts)
+        toks = sum(len(r.generated) for r in done)
+        print(f"{policy:14s} {len(done):8d} {toks:7d} "
+              f"{gpu_frac:16.2f} {t_est*1e6:13.2f}")
+        outs = sorted(tuple(r.generated) for r in done)
+        if baseline_out is None:
+            baseline_out = outs
+        else:
+            assert outs == baseline_out, (
+                "policies must not change generated tokens — the Sieve "
+                "partition is an execution-placement decision only"
+            )
+    print("\nall policies produced identical generations "
+          "(placement never changes results) — Sieve simply executes the "
+          "same math on the right engine per expert.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Generate EXPERIMENTS.md tables from artifacts/{dryrun,roofline}/*.json."""
+import json, glob, os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+ARCHS = ["qwen3-moe-30b-a3b","deepseek-v2-236b","zamba2-7b","deepseek-coder-33b",
+         "granite-3-2b","qwen1.5-0.5b","granite-3-8b","whisper-base","qwen2-vl-7b","rwkv6-7b"]
+SHAPES = ["train_4k","prefill_32k","decode_32k","long_500k"]
+
+def dryrun_table():
+    print("| arch | shape | mesh | status | mem/dev GiB | HLO GFLOPs/dev | coll MiB/dev | compile s |")
+    print("|---|---|---|---|---:|---:|---:|---:|")
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("single","multi"):
+                p = os.path.join(ROOT, "dryrun", f"{a}__{s}__{m}.json")
+                if not os.path.exists(p): continue
+                d = json.load(open(p))
+                if d["status"] == "skipped":
+                    print(f"| {a} | {s} | {m} | SKIP (full attention @500k) | | | | |")
+                    continue
+                if d["status"] != "ok":
+                    print(f"| {a} | {s} | {m} | FAIL | | | | |")
+                    continue
+                mem = d["memory"]["per_device_total"]/2**30
+                fl = d["cost"]["flops"]/1e9
+                co = d["collectives"].get("total",0)/2**20
+                print(f"| {a} | {s} | {m} | ok | {mem:.2f} | {fl:.1f} | {co:.0f} | {d['compile_s']} |")
+
+def roofline_table():
+    print("| arch | shape | compute ms | memory ms | collective ms | dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for a in ARCHS:
+        for s in SHAPES:
+            p = os.path.join(ROOT, "roofline", f"{a}__{s}.json")
+            if not os.path.exists(p): continue
+            d = json.load(open(p))
+            if d["status"] == "skipped":
+                print(f"| {a} | {s} | | | | SKIP | | |")
+                continue
+            if d["status"] != "ok":
+                print(f"| {a} | {s} | | | | FAIL | | |")
+                continue
+            t = d["terms_s"]
+            print(f"| {a} | {s} | {t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} | "
+                  f"{t['collective']*1e3:.2f} | {d['dominant']} | {d['flops_ratio']:.2f} | "
+                  f"{d['roofline_fraction']:.3f} |")
+
+if __name__ == "__main__":
+    import sys
+    if sys.argv[1] == "dryrun": dryrun_table()
+    else: roofline_table()

@@ -1,0 +1,27 @@
+"""Quick simulator sweep for calibration during development."""
+import sys
+from repro.core import b200_pim_system
+from repro.sim import SIM_MODELS, ServingSimulator
+from repro.sim.dram import PimGemvModel
+
+sys_ = b200_pim_system()
+print("-- roofline overestimate band (paper: 1.8-4.2x at N=1) --")
+pm = PimGemvModel(sys_.pim)
+for m in ("qwen3-30b", "gpt-oss-120b", "qwen3.5-397b"):
+    layer = SIM_MODELS[m].moe
+    r1 = pm.overestimate_ratio(layer, 1)
+    t1 = pm.expert_time(layer, 1, isolated=True)
+    t2 = pm.expert_time(layer, 2, isolated=True)
+    print(f"{m:14s} ratio(1)={r1:.2f}  t1={t1*1e6:.2f}us t2/2t1={t2/(2*t1):.2f}")
+
+print("\n-- pareto --")
+for mname, seq in [("qwen3-30b", 8192), ("gpt-oss-120b", 2048), ("qwen3.5-397b", 2048)]:
+    model = SIM_MODELS[mname]
+    print(f"===== {mname} ({model.n_gpus} GPUs, seq={seq}) =====")
+    pols = ("gpu_only", "noexp", "allexp", "pimoe", "pimoe_dynamic", "sieve")
+    sims = {p: ServingSimulator(model, sys_, seed=0) for p in pols}
+    for B in (4, 16, 32, 64, 256):
+        vals = {p: sims[p].simulate_step(p, batch=B, seq=seq, n_layer_samples=3).throughput_per_gpu
+                for p in pols}
+        print(f"  B={B:4d} " + " ".join(f"{k}={v:7.1f}" for k, v in vals.items())
+              + f"  sv/pm={vals['sieve']/vals['pimoe']:.2f} sv/pmd={vals['sieve']/vals['pimoe_dynamic']:.2f}")

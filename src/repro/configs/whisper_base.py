@@ -1,0 +1,29 @@
+"""whisper-base — encoder-decoder, 6L each, d_model=512 8H (MHA, d_head=64)
+d_ff=2048 vocab=51865.  [arXiv:2212.04356; unverified]
+
+The conv frontend is a STUB by assignment: ``input_specs()`` provides
+precomputed frame embeddings (batch, frames, d_model).  Shape semantics
+(see DESIGN.md): prefill_32k = encoder over seq_len stub frames + decoder
+prefill of 448 tokens; decode_32k = decoder step against a seq_len-slot
+self-cache and a 1500-frame cross-attention cache.
+"""
+
+from .base import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,  # decoder layers
+    d_model=512,
+    d_ff=2048,
+    vocab_size=51865,
+    attn=AttnConfig(kind="gqa", n_heads=8, n_kv_heads=8, d_head=64),
+    norm="layernorm",
+    act="gelu",
+    pos="learned",
+    encdec=True,
+    enc_layers=6,
+    enc_seq=1500,
+    modality_stub="audio_frames",
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,47 @@
+"""Sieve core: the paper's contribution (scheduler + runtime coordination).
+
+Shared between the cycle-approximate simulator (:mod:`repro.sim`) and the
+JAX/TPU serving runtime (:mod:`repro.serving`, :mod:`repro.models.moe`).
+"""
+
+from .cost_model import (  # noqa: F401
+    AttnLayerSpec,
+    CostModel,
+    DRAMTiming,
+    MoELayerSpec,
+    PIMSpec,
+    SystemSpec,
+    XPUSpec,
+    attention_time_on_pim,
+    attention_time_on_xpu,
+    b200_pim_system,
+    tpu_v5e_system,
+    B200,
+    HBM_PIM,
+    TPU_V5E,
+)
+from .cost_table import CostTable, make_roofline_fallback  # noqa: F401
+from .dag import Dag, build_moe_layer_dag  # noqa: F401
+from .distribution import (  # noqa: F401
+    ModelParamSplit,
+    act_ratio,
+    arithmetic_intensity,
+    bimodality_coefficient,
+    counts_from_assignments,
+    distribution_summary,
+    expert_bins,
+    gemv_fraction,
+    memory_bound_fraction,
+)
+from .overlap import Schedule, chain_layers, list_schedule  # noqa: F401
+from .scheduler import (  # noqa: F401
+    POLICIES,
+    Partition,
+    allexp_schedule,
+    brute_force_schedule,
+    gpu_only_schedule,
+    noexp_schedule,
+    pimoe_schedule,
+    schedule,
+    sieve_schedule,
+)

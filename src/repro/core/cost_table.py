@@ -1,0 +1,81 @@
+"""Runtime PIM cost table (paper §5.1, "Timing Models").
+
+The Sieve scheduler maintains a table keyed by token count whose values are
+the observed PIM execution times for experts with that token count, updated
+with an exponential moving average after each iteration.  For unobserved
+token counts it falls back to a roofline estimate — known to be optimistic
+by 1.8-4.2x because it ignores DRAM timing overheads (row-buffer conflicts,
+bank contention, refresh).  The fallback is used at most once per key: the
+first observation replaces it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+
+class CostTable:
+    """EMA table: token count -> observed PIM execution time (seconds)."""
+
+    def __init__(
+        self,
+        fallback: Callable[[int], float],
+        alpha: float = 0.25,
+    ):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self._fallback = fallback
+        self.alpha = alpha
+        self._table: Dict[int, float] = {}
+        self.n_updates = 0
+        self.n_fallback_lookups = 0
+
+    # -- queries -----------------------------------------------------------
+    def lookup(self, n_tokens: int) -> float:
+        t = self._table.get(int(n_tokens))
+        if t is not None:
+            return t
+        self.n_fallback_lookups += 1
+        return self._fallback(int(n_tokens))
+
+    def has(self, n_tokens: int) -> bool:
+        return int(n_tokens) in self._table
+
+    @property
+    def coverage(self) -> int:
+        return len(self._table)
+
+    def observed(self) -> Dict[int, float]:
+        return dict(self._table)
+
+    # -- updates -----------------------------------------------------------
+    def update(self, n_tokens: int, observed_time: float) -> float:
+        """EMA update; returns the new table value."""
+        if observed_time < 0:
+            raise ValueError("observed_time must be non-negative")
+        key = int(n_tokens)
+        prev = self._table.get(key)
+        if prev is None:
+            new = float(observed_time)  # first observation replaces fallback
+        else:
+            new = (1.0 - self.alpha) * prev + self.alpha * float(observed_time)
+        self._table[key] = new
+        self.n_updates += 1
+        return new
+
+    def update_many(self, items) -> None:
+        for n_tokens, t in items:
+            self.update(n_tokens, t)
+
+    # -- persistence (used by the serving engine across restarts) -----------
+    def state_dict(self) -> dict:
+        return {"alpha": self.alpha, "table": dict(self._table)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.alpha = float(state["alpha"])
+        self._table = {int(k): float(v) for k, v in state["table"].items()}
+
+
+def make_roofline_fallback(cost_model) -> Callable[[int], float]:
+    """Roofline fallback bound to a CostModel (paper's one-time estimate)."""
+    return cost_model.t_pim_gemv_roofline

@@ -1,0 +1,167 @@
+"""Fig-8 dependency graph for one MoE layer step (paper §6.1).
+
+Nodes carry a resource ("gpu", "pim", "link", or None for zero-cost
+synchronization points) and a duration.  The runtime overlap engine
+(:mod:`repro.core.overlap`) list-schedules this DAG onto the per-device
+resources; the simulator builds one instance per (device, layer) and chains
+them.
+
+Node naming follows the paper's circled numbering:
+
+    1  attn_out          (pim or gpu, depending on policy)
+    2  router            (gpu)
+    3  allgather_maps    (link)
+    4  metadata          (gpu)
+    5d dispatch_a2a      (link)
+    5s sieve_schedule    (gpu)     - the scheduler itself (~20us, §5.2)
+    6w load_weights      (gpu hbm) - HBM-PIM -> GPU for experts in G
+    6c pim_commands      (gpu)     - command generation for experts in S
+    7g grouped_gemm      (gpu)
+    7p pim_gemv          (pim)
+    8  pim_readback      (gpu hbm)
+    9  combine_a2a       (link)
+    10 aggregate         (gpu)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Node:
+    name: str
+    resource: Optional[str]  # "gpu" | "pim" | "link" | None
+    duration: float
+    deps: Tuple[str, ...] = ()
+
+
+@dataclass
+class Dag:
+    nodes: Dict[str, Node] = field(default_factory=dict)
+
+    def add(self, name: str, resource: Optional[str], duration: float, deps=()):
+        if name in self.nodes:
+            raise ValueError(f"duplicate node {name}")
+        for d in deps:
+            if d not in self.nodes:
+                raise ValueError(f"unknown dep {d} for {name}")
+        self.nodes[name] = Node(name, resource, float(duration), tuple(deps))
+        return name
+
+    def topo_order(self) -> List[str]:
+        order, seen, temp = [], set(), set()
+
+        def visit(n: str):
+            if n in seen:
+                return
+            if n in temp:
+                raise ValueError(f"cycle at {n}")
+            temp.add(n)
+            for d in self.nodes[n].deps:
+                visit(d)
+            temp.discard(n)
+            seen.add(n)
+            order.append(n)
+
+        for n in self.nodes:
+            visit(n)
+        return order
+
+    def validate(self):
+        self.topo_order()
+        return self
+
+
+def merge_dags(dags: Dict[str, "Dag"]) -> "Dag":
+    """Merge independent DAGs (e.g. interleaved half-batches, Fig 6a) into
+    one graph so ``list_schedule`` resolves their resource contention."""
+    out = Dag()
+    for prefix, g in dags.items():
+        for name in g.topo_order():
+            n = g.nodes[name]
+            out.add(
+                f"{prefix}/{name}",
+                n.resource,
+                n.duration,
+                deps=tuple(f"{prefix}/{d}" for d in n.deps),
+            )
+    return out
+
+
+def build_moe_layer_dag(
+    *,
+    t_attn: float,
+    attn_on_pim: bool,
+    t_router: float,
+    t_qkv_load: float = 0.0,
+    t_prefill_attn: float = 0.0,
+    t_allgather: float,
+    t_metadata: float,
+    t_dispatch: float,
+    t_sieve: float,
+    t_load_weights: float,
+    t_pim_cmds: float,
+    t_grouped_gemm: float,
+    t_pim_gemv: float,
+    t_pim_readback: float,
+    t_combine: float,
+    t_aggregate: float,
+    t_shared_load: float = 0.0,
+    t_shared_gemm: float = 0.0,
+) -> Dag:
+    """Instantiate Fig 8 with measured/estimated durations.
+
+    Overlap structure (paper §6.1):
+      - dispatch a2a (5d), the sieve scheduler (5s) and shared-expert weight
+        loading run concurrently after the allgather;
+      - GPU grouped GEMM (7g) needs weights loaded (6w) and dispatched
+        tokens (5d);
+      - PIM GEMV (7p) needs commands (6c) issued after the schedule (5s);
+      - aggregation (10) needs both 7g and the PIM readback (8), plus the
+        combine a2a (9).
+    """
+    g = Dag()
+    router_deps = []
+    if t_qkv_load > 0:
+        g.add("qkv_load", "gpu_hbm", t_qkv_load)
+        g.add("attn", "pim" if attn_on_pim else "gpu", t_attn, deps=("qkv_load",))
+    else:
+        g.add("attn", "pim" if attn_on_pim else "gpu", t_attn)
+    router_deps.append("attn")
+    if t_prefill_attn > 0:
+        g.add(
+            "prefill_attn",
+            "gpu",
+            t_prefill_attn,
+            deps=("qkv_load",) if t_qkv_load > 0 else (),
+        )
+        router_deps.append("prefill_attn")
+    g.add("router", "gpu", t_router, deps=tuple(router_deps))
+    g.add("allgather_maps", "link", t_allgather, deps=("router",))
+    g.add("metadata", "gpu", t_metadata, deps=("allgather_maps",))
+    g.add("dispatch_a2a", "link", t_dispatch, deps=("metadata",))
+    g.add("sieve", "gpu", t_sieve, deps=("allgather_maps",))
+    # Shared experts receive every token: weight loads start right after (2)
+    # (paper: "relaxing the dependency (2)->(5d)->(6w) for shared experts").
+    has_shared = (t_shared_load + t_shared_gemm) > 0
+    if has_shared:
+        g.add("shared_weights", "gpu_hbm", t_shared_load, deps=("router",))
+        g.add(
+            "shared_gemm",
+            "gpu",
+            t_shared_gemm,
+            deps=("shared_weights", "dispatch_a2a"),
+        )
+    g.add("load_weights", "gpu_hbm", t_load_weights, deps=("sieve",))
+    g.add("pim_cmds", "gpu", t_pim_cmds, deps=("sieve",))
+    g.add("grouped_gemm", "gpu", t_grouped_gemm, deps=("load_weights", "dispatch_a2a"))
+    g.add("pim_gemv", "pim", t_pim_gemv, deps=("pim_cmds", "dispatch_a2a"))
+    g.add("pim_readback", "gpu_hbm", t_pim_readback, deps=("pim_gemv",))
+    combine_deps = ["grouped_gemm", "pim_readback"]
+    if has_shared:
+        combine_deps.append("shared_gemm")
+    g.add("combine_a2a", "link", t_combine, deps=tuple(combine_deps))
+    g.add("aggregate", "gpu", t_aggregate, deps=("combine_a2a",))
+    return g.validate()

@@ -1,0 +1,123 @@
+"""Token-to-expert distribution analytics (paper §3, Figs 1/3/5, Obs 1-4).
+
+Everything here operates on an *assignment matrix* or a per-expert token
+count vector for one MoE layer and one batch:
+
+    counts[e] = number of tokens routed to expert e   (0 <= counts[e] <= B*k)
+
+The paper's bins (Fig 5): GEMV experts (N == 1), skinny GEMM (2 <= N <= 4,
+split N == 2 and 3 <= N <= 4), GEMM (N > 4).  "These bins are used only to
+expose arithmetic disparity; they are not Sieve scheduling thresholds."
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+import numpy as np
+
+BIN_EDGES = ("N=1", "N=2", "3<=N<=4", "N>4")
+
+
+def counts_from_assignments(assignments: np.ndarray, n_experts: int) -> np.ndarray:
+    """``assignments``: (tokens, top_k) int expert ids -> per-expert counts."""
+    return np.bincount(np.asarray(assignments).ravel(), minlength=n_experts)
+
+
+def expert_bins(counts: Sequence[int]) -> Dict[str, float]:
+    """Fraction of *activated* expert computations per arithmetic-intensity
+    bin (paper Fig 5 normalizes over activated experts)."""
+    c = np.asarray(counts)
+    c = c[c > 0]
+    n = max(len(c), 1)
+    return {
+        "N=1": float((c == 1).sum()) / n,
+        "N=2": float((c == 2).sum()) / n,
+        "3<=N<=4": float(((c >= 3) & (c <= 4)).sum()) / n,
+        "N>4": float((c > 4).sum()) / n,
+    }
+
+
+def gemv_fraction(counts: Sequence[int]) -> float:
+    """Fraction of activated experts that degenerate to pure GEMV (Obs 4)."""
+    return expert_bins(counts)["N=1"]
+
+
+def memory_bound_fraction(counts: Sequence[int]) -> float:
+    """GEMV + skinny-GEMM fraction (N <= 4), paper Obs 3."""
+    b = expert_bins(counts)
+    return b["N=1"] + b["N=2"] + b["3<=N<=4"]
+
+
+@dataclass(frozen=True)
+class ModelParamSplit:
+    """Parameter accounting for act-ratio (paper Fig 3)."""
+
+    always_active_params: float  # attention, norms, embeddings, shared experts
+    params_per_expert: float
+    n_experts: int
+
+    @property
+    def total_params(self) -> float:
+        return self.always_active_params + self.params_per_expert * self.n_experts
+
+
+def act_ratio(counts: Sequence[int], split: ModelParamSplit) -> float:
+    """Activated-parameter ratio for one batch (paper Fig 3).
+
+    Parameters in non-MoE layers are always activated and included.
+    """
+    c = np.asarray(counts)
+    n_activated = int((c > 0).sum())
+    activated = split.always_active_params + split.params_per_expert * n_activated
+    return activated / split.total_params
+
+
+def arithmetic_intensity(
+    n_tokens: int, d_model: int, d_ff: int, n_matrices: int = 3, dtype_bytes: int = 2
+) -> float:
+    """FLOPs per byte for an expert FFN visited by ``n_tokens`` tokens.
+
+    Weights are read once regardless of N; activations are O(N).  This is
+    the quantity plotted on the roofline x-axis in paper Fig 4.
+    """
+    flops = 2.0 * n_tokens * n_matrices * d_model * d_ff
+    weight_bytes = n_matrices * d_model * d_ff * dtype_bytes
+    act_bytes = 2.0 * n_tokens * d_model * dtype_bytes
+    return flops / (weight_bytes + act_bytes)
+
+
+def bimodality_coefficient(counts: Sequence[int]) -> float:
+    """Sarle's bimodality coefficient over activated-expert token counts.
+
+    > 5/9 (~0.555) suggests bimodality.  Used in tests/benchmarks to
+    quantify "increasingly bimodal" (paper §1/§3) numerically.
+    """
+    c = np.asarray(counts, dtype=np.float64)
+    c = c[c > 0]
+    n = len(c)
+    if n < 4:
+        return float("nan")
+    m = c.mean()
+    s = c.std(ddof=1)
+    if s == 0:
+        return float("nan")
+    g1 = ((c - m) ** 3).mean() / (c.std(ddof=0) ** 3)  # skewness
+    g2 = ((c - m) ** 4).mean() / (c.std(ddof=0) ** 4) - 3.0  # excess kurtosis
+    return (g1**2 + 1.0) / (g2 + 3.0 * (n - 1) ** 2 / ((n - 2) * (n - 3)))
+
+
+def distribution_summary(counts: Sequence[int]) -> Dict[str, float]:
+    c = np.asarray(counts)
+    act = c[c > 0]
+    return {
+        "n_experts": int(len(c)),
+        "n_activated": int(len(act)),
+        "max_count": int(act.max()) if len(act) else 0,
+        "mean_count": float(act.mean()) if len(act) else 0.0,
+        "gemv_fraction": gemv_fraction(c),
+        "memory_bound_fraction": memory_bound_fraction(c),
+        "bimodality": bimodality_coefficient(c),
+        **expert_bins(c),
+    }

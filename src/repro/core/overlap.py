@@ -1,0 +1,125 @@
+"""Event-driven list scheduler over per-device resources (paper §6.1).
+
+Given a :class:`repro.core.dag.Dag`, schedule every node at the earliest
+time permitted by (a) its dependencies and (b) its resource's availability.
+Resources are serial executors ("gpu", "pim", "link", "gpu_hbm" — the
+DMA/HBM channel used for weight loads and PIM readbacks, which overlaps
+with "gpu" compute).  This models the overlap the Sieve runtime achieves:
+GPU compute, PIM compute, and intra-/inter-device communication proceed
+concurrently while cross-device dependencies are preserved.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .dag import Dag
+
+DEFAULT_RESOURCES = ("gpu", "pim", "link", "gpu_hbm")
+
+
+@dataclass
+class ScheduledNode:
+    name: str
+    resource: Optional[str]
+    start: float
+    end: float
+
+
+@dataclass
+class Schedule:
+    nodes: Dict[str, ScheduledNode] = field(default_factory=dict)
+
+    @property
+    def makespan(self) -> float:
+        return max((n.end for n in self.nodes.values()), default=0.0)
+
+    def busy_time(self, resource: str) -> float:
+        return sum(
+            n.end - n.start for n in self.nodes.values() if n.resource == resource
+        )
+
+    def utilization(self, resource: str) -> float:
+        ms = self.makespan
+        return self.busy_time(resource) / ms if ms > 0 else 0.0
+
+    def critical_path(self, dag: Dag) -> List[str]:
+        """Walk back from the last-finishing node through binding deps."""
+        if not self.nodes:
+            return []
+        cur = max(self.nodes.values(), key=lambda n: n.end).name
+        path = [cur]
+        while True:
+            node = dag.nodes[cur]
+            binding = None
+            for d in node.deps:
+                if abs(self.nodes[d].end - self.nodes[cur].start) < 1e-15:
+                    binding = d
+                    break
+            if binding is None:
+                # resource wait: find the predecessor on the same resource
+                cand = [
+                    n
+                    for n in self.nodes.values()
+                    if n.resource == node.resource
+                    and abs(n.end - self.nodes[cur].start) < 1e-15
+                    and n.name != cur
+                ]
+                if not cand and node.deps:
+                    binding = max(node.deps, key=lambda d: self.nodes[d].end)
+                elif cand:
+                    binding = cand[0].name
+            if binding is None:
+                break
+            path.append(binding)
+            cur = binding
+        return list(reversed(path))
+
+
+def list_schedule(dag: Dag, start_times: Optional[Dict[str, float]] = None) -> Schedule:
+    """Earliest-start list scheduling in topological order.
+
+    ``start_times`` optionally carries per-resource availability from a
+    previous layer/stage (for chaining layer DAGs into a model step).
+    """
+    avail: Dict[str, float] = dict(start_times or {})
+    sched = Schedule()
+    for name in dag.topo_order():
+        node = dag.nodes[name]
+        ready = max((sched.nodes[d].end for d in node.deps), default=0.0)
+        if node.resource is not None:
+            ready = max(ready, avail.get(node.resource, 0.0))
+        end = ready + node.duration
+        sched.nodes[name] = ScheduledNode(name, node.resource, ready, end)
+        if node.resource is not None:
+            avail[node.resource] = end
+    return sched
+
+
+def chain_layers(
+    dags: List[Dag],
+) -> Tuple[float, List[Schedule]]:
+    """Schedule consecutive layer DAGs, carrying resource availability.
+
+    Inter-layer dependency: layer i+1's first node cannot start before layer
+    i's aggregate finishes (token stream dependency), but resources that
+    freed up earlier may prefetch (weight loads) — modeled by carrying the
+    per-resource availability map and a global data-ready floor.
+    """
+    t_floor = 0.0
+    avail: Dict[str, float] = {}
+    schedules = []
+    for dag in dags:
+        base = {r: max(t, t_floor) for r, t in avail.items()}
+        for node in dag.nodes.values():
+            if node.resource is not None and node.resource not in base:
+                base[node.resource] = t_floor
+        sched = list_schedule(dag, base)
+        # shift: the DAG's entry nodes already respect t_floor via base
+        schedules.append(sched)
+        t_floor = sched.makespan
+        for n in sched.nodes.values():
+            if n.resource is not None:
+                avail[n.resource] = max(avail.get(n.resource, 0.0), n.end)
+    return t_floor, schedules

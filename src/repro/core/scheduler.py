@@ -1,0 +1,381 @@
+"""The Sieve scheduler (paper §5) and the baseline policies (paper §7.1).
+
+All policies take the runtime token-count vector over the activated experts
+of one MoE layer on one device (+ its EP peers' routed tokens) and return a
+:class:`Partition` assigning each activated expert to the GPU/xPU or to PIM.
+
+Policies
+--------
+``sieve``          paper §5.2 greedy: sort by count desc, start all-on-PIM,
+                   move the most popular expert to GPU while T_total strictly
+                   decreases; stop at the first non-improvement.
+``sieve_argmin``   beyond-paper refinement: T_total evaluated for *every*
+                   prefix split of the sorted order, take the global argmin.
+                   Never worse than the paper greedy (the greedy's result is
+                   one of the evaluated prefixes); same O(E log E) cost.
+``pimoe``          PIMoE (DAC'25) reproduction: channel-EP on PIM, moves the
+                   most popular expert from the busiest PIM channel to the
+                   GPU until T_GPU exceeds T_PIM.  Ignores both attention-
+                   on-PIM time and inter-GPU communication (paper §5.2).
+``noexp``          all experts on GPU, attention on PIM (NeuPIMs/PAISE).
+``allexp``         all experts on PIM (PAPI/Stratum).
+``gpu_only``       everything (incl. attention) on the GPU.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .cost_model import CostModel, attention_time_on_xpu
+from .cost_table import CostTable
+
+POLICIES = (
+    "sieve",
+    "sieve_argmin",
+    "pimoe",
+    "pimoe_dynamic",
+    "noexp",
+    "allexp",
+    "gpu_only",
+)
+
+
+@dataclass
+class Partition:
+    """Result of a scheduling decision for one MoE layer on one device."""
+
+    gpu_experts: np.ndarray  # expert ids assigned to the xPU (grouped GEMM)
+    pim_experts: np.ndarray  # expert ids assigned to PIM (serialized GEMV)
+    t_comm: float
+    t_gpu: float
+    t_pim: float
+    iterations: int = 0
+    policy: str = "sieve"
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_comm, self.t_gpu, self.t_pim)
+
+    def validate(self, n_active: int) -> None:
+        s = set(self.gpu_experts.tolist())
+        p = set(self.pim_experts.tolist())
+        assert not (s & p), "expert assigned to both GPU and PIM"
+        assert len(s) + len(p) == n_active, "partition does not cover E"
+
+
+def _active(counts: np.ndarray):
+    """Expert ids with >=1 token, sorted by token count descending.
+
+    Ties broken by expert id for determinism (stable sort on -count).
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    ids = np.nonzero(counts > 0)[0]
+    order = np.argsort(-counts[ids], kind="stable")
+    return ids[order], counts
+
+
+# ---------------------------------------------------------------------------
+# Sieve (paper §5.2)
+# ---------------------------------------------------------------------------
+
+
+def sieve_schedule(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+    *,
+    mode: str = "greedy",
+) -> Partition:
+    """Paper §5.2 greedy (``mode='greedy'``) or prefix-argmin refinement.
+
+    ``counts`` is the global token count per expert hosted on this device
+    (after the routing-map AllGather, §6.1 ③).
+    """
+    if mode not in ("greedy", "argmin"):
+        raise ValueError(f"unknown mode {mode!r}")
+    ids, counts = _active(counts)
+    total_routed = int(counts.sum())
+    t_comm = cost_model.t_comm(total_routed)
+
+    sorted_counts = counts[ids]  # descending
+    n = len(ids)
+
+    # Evaluate T_total for prefix split g = number of experts moved to GPU
+    # (the greedy only ever moves the current most-popular expert, so its
+    # reachable states are exactly the prefixes of the sorted order).
+    def eval_split(g: int):
+        gpu_c = sorted_counts[:g]
+        pim_c = sorted_counts[g:]
+        t_gpu = cost_model.t_gpu(gpu_c)
+        t_pim = cost_model.t_pim(pim_c, cost_table)
+        return t_gpu, t_pim, max(t_comm, t_gpu, t_pim)
+
+    if mode == "greedy":
+        g = 0
+        t_gpu, t_pim, best = eval_split(0)
+        iters = 1
+        while g < n:
+            t_gpu2, t_pim2, t2 = eval_split(g + 1)
+            iters += 1
+            if t2 < best:
+                g, best, t_gpu, t_pim = g + 1, t2, t_gpu2, t_pim2
+            else:
+                break  # first non-improvement stops the scan (paper §5.2)
+    else:
+        best, g, t_gpu, t_pim = np.inf, 0, 0.0, 0.0
+        iters = n + 1
+        for k in range(n + 1):
+            t_gpu2, t_pim2, t2 = eval_split(k)
+            if t2 < best:
+                best, g, t_gpu, t_pim = t2, k, t_gpu2, t_pim2
+
+    part = Partition(
+        gpu_experts=ids[:g].copy(),
+        pim_experts=ids[g:].copy(),
+        t_comm=t_comm,
+        t_gpu=t_gpu,
+        t_pim=t_pim,
+        iterations=iters,
+        policy="sieve" if mode == "greedy" else "sieve_argmin",
+        meta={"split": g, "n_active": n},
+    )
+    part.validate(n)
+    return part
+
+
+# ---------------------------------------------------------------------------
+# PIMoE baseline (paper §5.2 / §7.1)
+# ---------------------------------------------------------------------------
+
+
+def _pimoe_channel_assign(ids: np.ndarray, counts: np.ndarray, n_channels: int):
+    """Greedy longest-processing-time assignment of experts to PIM channels
+    (PIMoE uses channel-level expert parallelism, paper §6.2 / Fig 10)."""
+    loads = np.zeros(n_channels)
+    chan_of = {}
+    for e in ids:  # ids already sorted by count desc
+        c = int(np.argmin(loads))
+        loads[c] += counts[e]
+        chan_of[int(e)] = c
+    return chan_of, loads
+
+
+def pimoe_schedule(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+) -> Partition:
+    """PIMoE: threshold-style offloading, blind to T_Comm and attention-on-PIM.
+
+    Moves the most popular expert off the busiest channel while the PIM-side
+    makespan (max channel load, *excluding* attention) exceeds the GPU time.
+
+    Expert parallelism granularity: one expert per HBM-PIM *stack* (32
+    pseudo-channels TP within the stack, EP across the 8 stacks).  Finer
+    per-pseudo-channel EP would be uniformly dominated (256x slower weight
+    streaming per expert); stack-level EP is the strongest reasonable
+    reading of PIMoE's design and still exhibits the utilization imbalance
+    of paper Fig 10.
+    """
+    ids, counts = _active(counts)
+    n = len(ids)
+    pim = cost_model.system.pim
+    n_channels = pim.stacks if pim is not None else 1
+
+    def gemv_time(c):
+        if cost_table is not None:
+            return cost_table.lookup(int(c))
+        return cost_model.t_pim_gemv_roofline(int(c))
+
+    on_pim: List[int] = list(ids)
+    on_gpu: List[int] = []
+    iters = 0
+    while True:
+        iters += 1
+        chan_of, _ = _pimoe_channel_assign(
+            np.asarray(on_pim, dtype=np.int64), counts, n_channels
+        )
+        loads = np.zeros(n_channels)
+        for e in on_pim:
+            # stack-EP: an expert's GEMVs run on a single stack, which
+            # serves only 1/n_stacks of the aggregate PIM bandwidth.
+            loads[chan_of[int(e)]] += gemv_time(counts[e]) * n_channels
+        t_pim = float(loads.max()) if on_pim else 0.0  # no attention term!
+        t_gpu = cost_model.t_gpu(counts[np.asarray(on_gpu, dtype=np.int64)] if on_gpu else [])
+        if t_pim <= t_gpu or not on_pim:
+            break
+        # move the most popular expert from the busiest channel to the GPU
+        busiest = int(loads.argmax())
+        cands = [e for e in on_pim if chan_of[int(e)] == busiest]
+        mover = max(cands, key=lambda e: counts[e])
+        on_pim.remove(mover)
+        on_gpu.append(mover)
+
+    gpu_ids = np.asarray(sorted(on_gpu, key=lambda e: -counts[e]), dtype=np.int64)
+    pim_ids = np.asarray(sorted(on_pim, key=lambda e: -counts[e]), dtype=np.int64)
+    total_routed = int(counts.sum())
+    # Report the *actual* times (including the terms PIMoE ignored) so the
+    # simulator charges PIMoE for its blind spots.
+    t_pim_actual = cost_model.t_pim(counts[pim_ids], cost_table)
+    part = Partition(
+        gpu_experts=gpu_ids,
+        pim_experts=pim_ids,
+        t_comm=cost_model.t_comm(total_routed),
+        t_gpu=cost_model.t_gpu(counts[gpu_ids]),
+        t_pim=t_pim_actual,
+        iterations=iters,
+        policy="pimoe",
+        meta={"n_active": n},
+    )
+    part.validate(n)
+    return part
+
+
+# ---------------------------------------------------------------------------
+# Static baselines
+# ---------------------------------------------------------------------------
+
+
+def noexp_schedule(counts, cost_model, cost_table=None) -> Partition:
+    """NoExp: attention on PIM, every expert on the GPU (NeuPIMs/PAISE)."""
+    ids, counts = _active(counts)
+    part = Partition(
+        gpu_experts=ids.copy(),
+        pim_experts=np.asarray([], dtype=np.int64),
+        t_comm=cost_model.t_comm(int(counts.sum())),
+        t_gpu=cost_model.t_gpu(counts[ids]),
+        t_pim=cost_model.t_pim([], cost_table),  # attention only
+        policy="noexp",
+        meta={"n_active": len(ids)},
+    )
+    part.validate(len(ids))
+    return part
+
+
+def allexp_schedule(counts, cost_model, cost_table=None) -> Partition:
+    """AllExp: every expert on PIM (PAPI / Stratum policy)."""
+    ids, counts = _active(counts)
+    part = Partition(
+        gpu_experts=np.asarray([], dtype=np.int64),
+        pim_experts=ids.copy(),
+        t_comm=cost_model.t_comm(int(counts.sum())),
+        t_gpu=cost_model.t_gpu([]),
+        t_pim=cost_model.t_pim(counts[ids], cost_table),
+        policy="allexp",
+        meta={"n_active": len(ids)},
+    )
+    part.validate(len(ids))
+    return part
+
+
+def gpu_only_schedule(counts, cost_model, cost_table=None, attn_spec=None,
+                      batch: int = 0, seq: int = 0) -> Partition:
+    """GPU-Only: no PIM at all; attention also runs on the xPU."""
+    ids, counts = _active(counts)
+    t_attn_gpu = 0.0
+    if attn_spec is not None and batch and seq:
+        t_attn_gpu = attention_time_on_xpu(cost_model.system, attn_spec, batch, seq)
+    t_gpu = max(
+        cost_model.t_gpu_offchip(counts[ids]) + t_attn_gpu,
+        cost_model.t_gpu_comp(counts[ids]) + t_attn_gpu,
+    )
+    part = Partition(
+        gpu_experts=ids.copy(),
+        pim_experts=np.asarray([], dtype=np.int64),
+        t_comm=cost_model.t_comm(int(counts.sum())),
+        t_gpu=t_gpu,
+        t_pim=0.0,
+        policy="gpu_only",
+        meta={"n_active": len(ids)},
+    )
+    part.validate(len(ids))
+    return part
+
+
+def pimoe_static_partition(
+    counts: Sequence[int],
+    static_pim_ids,
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+) -> Partition:
+    """Apply PIMoE's *static* placement at runtime (paper §5.2: "PIMoE uses
+    a static threshold ...", §7.3: degrades when the runtime distribution
+    shifts).  ``static_pim_ids`` is the expert-id set assigned to PIM during
+    calibration (see :func:`pimoe_schedule`); at runtime each activated
+    expert executes wherever its id was pinned, regardless of its current
+    token count.
+    """
+    ids, counts = _active(counts)
+    static_pim_ids = set(int(e) for e in static_pim_ids)
+    pim_ids = np.asarray([e for e in ids if int(e) in static_pim_ids], dtype=np.int64)
+    gpu_ids = np.asarray([e for e in ids if int(e) not in static_pim_ids], dtype=np.int64)
+    part = Partition(
+        gpu_experts=gpu_ids,
+        pim_experts=pim_ids,
+        t_comm=cost_model.t_comm(int(counts.sum())),
+        t_gpu=cost_model.t_gpu(counts[gpu_ids]),
+        t_pim=cost_model.t_pim(counts[pim_ids], cost_table),
+        policy="pimoe",
+        meta={"n_active": len(ids), "static": True},
+    )
+    part.validate(len(ids))
+    return part
+
+
+def schedule(policy: str, counts, cost_model, cost_table=None, **kw) -> Partition:
+    """Dispatch by policy name (see :data:`POLICIES`)."""
+    if policy == "sieve":
+        return sieve_schedule(counts, cost_model, cost_table, mode="greedy")
+    if policy == "sieve_argmin":
+        return sieve_schedule(counts, cost_model, cost_table, mode="argmin")
+    if policy in ("pimoe", "pimoe_dynamic"):
+        return pimoe_schedule(counts, cost_model, cost_table)
+    if policy == "noexp":
+        return noexp_schedule(counts, cost_model, cost_table)
+    if policy == "allexp":
+        return allexp_schedule(counts, cost_model, cost_table)
+    if policy == "gpu_only":
+        return gpu_only_schedule(counts, cost_model, cost_table, **kw)
+    raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
+
+
+def brute_force_schedule(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+) -> Partition:
+    """Exhaustive 2^|E| search (tests only; paper §5.2 notes infeasibility)."""
+    ids, counts = _active(counts)
+    n = len(ids)
+    if n > 16:
+        raise ValueError("brute force is for tests with small |E| only")
+    total_routed = int(counts.sum())
+    t_comm = cost_model.t_comm(total_routed)
+    best, best_mask = np.inf, 0
+    for mask in range(1 << n):
+        gpu_ids = ids[[i for i in range(n) if mask >> i & 1]]
+        pim_ids = ids[[i for i in range(n) if not mask >> i & 1]]
+        t = max(
+            t_comm,
+            cost_model.t_gpu(counts[gpu_ids]),
+            cost_model.t_pim(counts[pim_ids], cost_table),
+        )
+        if t < best:
+            best, best_mask = t, mask
+    gpu_ids = ids[[i for i in range(n) if best_mask >> i & 1]]
+    pim_ids = ids[[i for i in range(n) if not best_mask >> i & 1]]
+    part = Partition(
+        gpu_experts=gpu_ids,
+        pim_experts=pim_ids,
+        t_comm=t_comm,
+        t_gpu=cost_model.t_gpu(counts[gpu_ids]),
+        t_pim=cost_model.t_pim(counts[pim_ids], cost_table),
+        policy="brute_force",
+        meta={"n_active": n},
+    )
+    part.validate(n)
+    return part

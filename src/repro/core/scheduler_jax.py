@@ -1,0 +1,129 @@
+"""jit-compatible Sieve scheduler (vectorized prefix formulation).
+
+The paper's greedy only ever moves the currently most-popular expert from
+PIM to the GPU, so every state it can reach is a *prefix* of the experts
+sorted by token count (descending).  That makes the whole search expressible
+as cumulative sums + one argmin — O(E log E), fully vectorized, and traceable
+under ``jax.jit`` so the partition mask can be computed inside a compiled
+serving step (no host round-trip on the critical path).
+
+The PIM cost table enters as a dense array ``pim_time_by_count`` (seconds,
+indexed by token count, clamped at the last entry) exported by
+:class:`repro.core.cost_table.CostTable` between steps.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SieveParams:
+    """Static scalars of the cost model, precomputed on the host."""
+
+    flops_per_row: float  # 2 * n_matrices * d_model * d_ff
+    expert_param_bytes: float
+    act_bytes_per_token: float  # 2 * d_model * dtype_bytes
+    hbm_bw: float
+    peak_flops_eff: float  # xpu.peak_flops * grouped_gemm_efficiency
+    tile_m: int
+    gpu_base_flops: float = 0.0
+    gpu_base_bytes: float = 0.0
+    pim_attn_time: float = 0.0
+    t_comm: float = 0.0
+
+    @staticmethod
+    def from_cost_model(cm, total_routed_tokens: int) -> "SieveParams":
+        return SieveParams(
+            flops_per_row=2.0 * cm.layer.n_matrices * cm.layer.d_model * cm.layer.d_ff,
+            expert_param_bytes=float(cm.layer.expert_param_bytes),
+            act_bytes_per_token=2.0 * cm.layer.d_model * cm.layer.dtype_bytes,
+            hbm_bw=cm.system.xpu.hbm_bw * cm.hbm_efficiency,
+            peak_flops_eff=cm.system.xpu.peak_flops * cm.grouped_gemm_efficiency,
+            tile_m=cm.system.xpu.tile_m,
+            gpu_base_flops=cm.gpu_base_flops,
+            gpu_base_bytes=cm.gpu_base_bytes,
+            pim_attn_time=cm.pim_attn_time,
+            t_comm=cm.t_comm(total_routed_tokens),
+        )
+
+
+def export_cost_table(cost_table, cost_model, max_count: int) -> np.ndarray:
+    """Dense per-token-count PIM time array for the jit scheduler."""
+    out = np.empty(max_count + 1, dtype=np.float32)
+    out[0] = 0.0
+    for c in range(1, max_count + 1):
+        out[c] = (
+            cost_table.lookup(c)
+            if cost_table is not None
+            else cost_model.t_pim_gemv_roofline(c)
+        )
+    return out
+
+
+@partial(jax.jit, static_argnames=("params",))
+def sieve_partition_jax(
+    counts: jax.Array,  # (E,) int32 token count per local expert
+    pim_time_by_count: jax.Array,  # (maxc+1,) float32 seconds
+    params: SieveParams,
+) -> dict:
+    """Returns ``gpu_mask`` (E,) bool plus the evaluated split diagnostics.
+
+    Equivalent to ``scheduler.sieve_schedule(..., mode='argmin')`` — the
+    global argmin over the prefix family (the beyond-paper refinement; the
+    paper's first-increase greedy is a prefix of the same family).
+    """
+    E = counts.shape[0]
+    counts = counts.astype(jnp.int32)
+    order = jnp.argsort(-counts, stable=True)  # popular first
+    sc = counts[order]
+    active = sc > 0
+    n_active = jnp.sum(active)
+
+    tile = params.tile_m
+    padded = jnp.where(active, ((sc + tile - 1) // tile) * tile, 0)
+    # prefix over splits g = 0..E  (index i = "first i experts on GPU")
+    cum_tokens = jnp.concatenate([jnp.zeros(1, sc.dtype), jnp.cumsum(sc)])
+    cum_padded = jnp.concatenate([jnp.zeros(1, sc.dtype), jnp.cumsum(padded)])
+    cum_live = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(active.astype(jnp.int32))]
+    )
+
+    t_gpu_comp = (
+        params.flops_per_row * cum_padded.astype(jnp.float32) + params.gpu_base_flops
+    ) / params.peak_flops_eff
+    t_gpu_mem = (
+        params.expert_param_bytes * cum_live.astype(jnp.float32)
+        + params.act_bytes_per_token * cum_tokens.astype(jnp.float32)
+        + params.gpu_base_bytes
+    ) / params.hbm_bw
+    t_gpu = jnp.maximum(t_gpu_comp, t_gpu_mem)
+
+    maxc = pim_time_by_count.shape[0] - 1
+    per_expert_pim = pim_time_by_count[jnp.clip(sc, 0, maxc)]
+    per_expert_pim = jnp.where(active, per_expert_pim, 0.0)
+    cum_pim = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(per_expert_pim)])
+    t_pim = params.pim_attn_time + (cum_pim[-1] - cum_pim)
+
+    t_total = jnp.maximum(jnp.maximum(t_gpu, t_pim), params.t_comm)
+    # splits beyond the active prefix are duplicates of g = n_active
+    valid = jnp.arange(E + 1) <= n_active
+    t_total = jnp.where(valid, t_total, jnp.inf)
+    g_star = jnp.argmin(t_total)
+
+    rank = jnp.argsort(order, stable=True)  # expert id -> popularity rank
+    gpu_mask = (rank < g_star) & (counts > 0)
+    return {
+        "gpu_mask": gpu_mask,
+        "split": g_star,
+        "t_total": t_total[g_star],
+        "t_gpu": t_gpu[g_star],
+        "t_pim": t_pim[g_star],
+        "t_comm": jnp.asarray(params.t_comm, jnp.float32),
+        "n_active": n_active,
+    }

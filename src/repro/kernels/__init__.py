@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots of the Sieve runtime:
+#   grouped_gemm     — MXU path for popular experts (paper §6.3)
+#   expert_gemv      — streaming GEMV path for the 1-token tail (paper §6.2)
+#   decode_attention — the memory-bound decode attention (paper §2.2)
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,117 @@
+"""Flash-decode GQA attention Pallas kernel.
+
+The decode-phase attention op — the memory-bound GEMV-shaped operation the
+paper offloads to PIM (§2.2) — implemented TPU-native: one query token per
+sequence attends over its KV cache with online softmax, streaming KV blocks
+from HBM through VMEM.  Grid (batch, kv_head, T/bt); the softmax state
+(m, l, acc) lives in VMEM scratch and persists across the sequential
+T-tiles; per-sequence cache lengths arrive as scalar prefetch and mask the
+tail block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    lengths_ref,  # (B,) int32 scalar prefetch
+    q_ref,  # (1, 1, G, dh)
+    k_ref,  # (1, bt, 1, dh)
+    v_ref,  # (1, bt, 1, dh)
+    out_ref,  # (1, 1, G, dh)
+    m_ref,  # (G, 1) fp32 scratch
+    l_ref,  # (G, 1) fp32 scratch
+    acc_ref,  # (G, dh) fp32 scratch
+    *,
+    n_t_tiles: int,
+    bt: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bt, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (bt, dh)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bt)
+    pos = t * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1)
+    s = jnp.where(pos < lengths_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (G, bt)
+    corr = jnp.exp(m_prev - m_new)  # (G, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(t == n_t_tiles - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[...] = out[None, None].astype(out_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, H, dh) one query token per sequence
+    cache_k: jax.Array,  # (B, T, Kv, dh)
+    cache_v: jax.Array,  # (B, T, Kv, dh)
+    lengths: jax.Array,  # (B,) int32 valid entries
+    *,
+    bt: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, dh = q.shape
+    _, T, Kv, _ = cache_k.shape
+    G = H // Kv
+    bt = min(bt, T)
+    assert T % bt == 0, (T, bt)
+    n_t = T // bt
+    qg = q.reshape(B, Kv, G, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Kv, n_t),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, t, L: (b, h, 0, 0)),
+            pl.BlockSpec((1, bt, 1, dh), lambda b, h, t, L: (b, t, h, 0)),
+            pl.BlockSpec((1, bt, 1, dh), lambda b, h, t, L: (b, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, t, L: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _decode_attn_kernel, n_t_tiles=n_t, bt=bt, scale=1.0 / (dh**0.5)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, dh), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths, qg, cache_k, cache_v)
+    return out.reshape(B, H, dh)

@@ -1,0 +1,167 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handles metadata construction (tile→group tables), block-size selection,
+padding to tile multiples, and interpret-mode selection (CPU containers run
+the kernels in interpret=True; on TPU they compile to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention as _decode_attention
+from .expert_gemv import expert_gemv as _expert_gemv
+from .grouped_gemm import grouped_gemm as _grouped_gemm
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("group_padded", "bm", "bk", "bn", "interpret"))
+def gmm_capacity(
+    buf: jax.Array,  # (E, C, K) capacity-layout dispatch buffer
+    rhs: jax.Array,  # (E, K, N)
+    group_sizes: jax.Array,  # (E,) real rows per expert
+    group_padded: int | None = None,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Grouped GEMM over the (E, C, K) capacity buffer -> (E, C, N).
+
+    C is padded to a multiple of bm so each m-tile belongs to one expert;
+    tiles with no live rows skip their MXU work.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    E, C, K = buf.shape
+    N = rhs.shape[2]
+    bm = min(bm, C)
+    Cp = _round_up(C, bm)
+    if Cp != C:
+        buf = jnp.pad(buf, ((0, 0), (0, Cp - C), (0, 0)))
+    lhs = buf.reshape(E * Cp, K)
+    tiles_per_group = Cp // bm
+    m_tiles = E * tiles_per_group
+    group_of_tile = (
+        jnp.arange(m_tiles, dtype=jnp.int32) // tiles_per_group
+    )
+    row_in_group = (
+        jnp.arange(m_tiles, dtype=jnp.int32) % tiles_per_group
+    ) * bm
+    out = _grouped_gemm(
+        lhs, rhs, group_sizes.astype(jnp.int32), group_of_tile, row_in_group,
+        bm=bm, bk=bk, bn=bn, interpret=interpret,
+    )
+    return out.reshape(E, Cp, N)[:, :C, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def gmm_ragged(
+    lhs: jax.Array,  # (M, K) expert-major rows, group starts bm-aligned
+    rhs: jax.Array,  # (E, K, N)
+    group_sizes: jax.Array,  # (E,) real rows per group (dynamic)
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """True ragged grouped matmul: dynamic group sizes, bm-aligned layout.
+
+    Layout: group g occupies rows [g_start, g_start + padded_size(g)) with
+    padded_size = round_up(size, bm); M must equal sum of padded sizes.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    M, K = lhs.shape
+    E = rhs.shape[0]
+    bm = min(bm, M)
+    padded = ((group_sizes + bm - 1) // bm) * bm
+    tile_counts = padded // bm
+    m_tiles = M // bm
+    # tile -> group: searchsorted over cumulative tile counts
+    cum_tiles = jnp.cumsum(tile_counts)
+    tile_idx = jnp.arange(m_tiles, dtype=jnp.int32)
+    group_of_tile = jnp.searchsorted(cum_tiles, tile_idx, side="right").astype(
+        jnp.int32
+    )
+    group_of_tile = jnp.minimum(group_of_tile, E - 1)
+    tile_start_of_group = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), cum_tiles[:-1].astype(jnp.int32)]
+    )
+    row_in_group = (tile_idx - tile_start_of_group[group_of_tile]) * bm
+    return _grouped_gemm(
+        lhs, rhs, group_sizes.astype(jnp.int32), group_of_tile, row_in_group,
+        bm=bm, bk=bk, bn=bn, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Expert GEMV (the TPU "PIM path")
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "interpret"))
+def expert_gemv(
+    tokens: jax.Array,  # (S, K)
+    weights: jax.Array,  # (E, K, N)
+    expert_ids: jax.Array,  # (S,) int32
+    valid: jax.Array | None = None,  # (S,) bool/int
+    bk: int = 512,
+    bn: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _interpret_default()
+    S = tokens.shape[0]
+    if valid is None:
+        valid = jnp.ones((S,), jnp.int32)
+    return _expert_gemv(
+        tokens, weights, expert_ids.astype(jnp.int32), valid.astype(jnp.int32),
+        bk=bk, bn=bn, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def decode_attention(
+    q: jax.Array,  # (B, H, dh)
+    cache_k: jax.Array,  # (B, T, Kv, dh)
+    cache_v: jax.Array,
+    lengths: jax.Array,  # (B,)
+    bt: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _interpret_default()
+    T = cache_k.shape[1]
+    bt = min(bt, T)
+    if T % bt:
+        pad = _round_up(T, bt) - T
+        cache_k = jnp.pad(cache_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_v = jnp.pad(cache_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return _decode_attention(
+        q, cache_k, cache_v, lengths.astype(jnp.int32), bt=bt, interpret=interpret
+    )

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(
+    lhs: jax.Array,  # (M, K) expert-major rows, groups bm-aligned
+    rhs: jax.Array,  # (E, K, N)
+    group_sizes: jax.Array,  # (E,) real rows per group
+    group_padded: int,  # padded rows per group (M == E * group_padded)
+) -> jax.Array:
+    """Segment matmul over an aligned expert-major layout; padding rows -> 0."""
+    E, K, N = rhs.shape
+    M = lhs.shape[0]
+    assert M == E * group_padded
+    x = lhs.reshape(E, group_padded, K).astype(jnp.float32)
+    y = jnp.einsum("egk,ekn->egn", x, rhs.astype(jnp.float32))
+    rows = jnp.arange(group_padded)[None, :, None]
+    mask = rows < group_sizes[:, None, None]
+    return (y * mask).reshape(M, N).astype(lhs.dtype)
+
+
+def expert_gemv_ref(
+    tokens: jax.Array,  # (S, K)
+    weights: jax.Array,  # (E, K, N)
+    expert_ids: jax.Array,  # (S,)
+    valid: jax.Array,  # (S,)
+) -> jax.Array:
+    w = weights[expert_ids]  # (S, K, N)
+    y = jnp.einsum("sk,skn->sn", tokens.astype(jnp.float32), w.astype(jnp.float32))
+    return (y * (valid > 0)[:, None]).astype(tokens.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, dh)
+    cache_k: jax.Array,  # (B, T, Kv, dh)
+    cache_v: jax.Array,  # (B, T, Kv, dh)
+    lengths: jax.Array,  # (B,)
+) -> jax.Array:
+    B, H, dh = q.shape
+    T, Kv = cache_k.shape[1], cache_k.shape[2]
+    G = H // Kv
+    qf = q.reshape(B, Kv, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, cache_k.astype(jnp.float32)) / (dh**0.5)
+    mask = jnp.arange(T)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, cache_v.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
+.compile()`` must succeed on the single-pod (16,16) mesh AND the two-pod
+(2,16,16) mesh, and we record
+
+  * ``compiled.memory_analysis()``  — per-device bytes (proves it fits),
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline,
+  * collective-op operand bytes parsed from the compiled HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), with while-loop trip-count composition handled by
+    :mod:`repro.roofline.analysis`.
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single,multi] [--probes]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_skipped, get_arch
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import LM, batch_pspecs, cache_pspecs, param_pspecs
+from repro.models.moe import MeshInfo
+from repro.train.optimizer import AdamWConfig, OptState
+from repro.train.train_loop import TrainConfig, make_train_step
+from .mesh import make_production_mesh, mesh_info_for
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?(?:\.\d+)?\s*=?\s*"
+)
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "f64": 8,
+}
+
+
+def collective_bytes_from_text(hlo: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in an HLO module text.
+
+    Ops inside while-loop bodies appear once; the roofline composition
+    accounts for trip counts (see repro/roofline/analysis.py).
+    """
+    out: Dict[str, float] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=")[0]
+        rest = line.split("=", 1)[1]
+        nbytes = 0.0
+        for dm in _SHAPE_RE.finditer(rest.split("metadata")[0]):
+            dt, dims = dm.group(1), dm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+            break  # first shape = result shape
+        out[kind] = out.get(kind, 0.0) + nbytes
+        out["total"] = out.get("total", 0.0) + nbytes
+    return out
+
+
+def _shardings(mesh, tree_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs)
+
+
+def build_cell(
+    arch: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    remat: bool = True,
+):
+    """Returns (fn, args_abstract, in_shardings, out_shardings?) for a cell."""
+    mi = mesh_info_for(mesh, shape.global_batch)
+    model_size = mesh.shape[mi.model_axis] if mi.model_axis else 1
+    lm = LM(
+        arch,
+        dtype=jnp.bfloat16,
+        remat=remat and shape.kind == "train"
+        and os.environ.get("REPRO_REMAT", "1") != "0",
+        mesh_info=mi,
+    )
+    aparams = lm.abstract_params()
+    # FSDP over the data axis: always for training (fp32 optimizer moments
+    # dominate), and for serving when bf16 params exceed ~12 GB/chip under
+    # model-axis sharding alone (deepseek-v2-236b).
+    param_bytes = sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(aparams)
+    )
+    # §Perf iteration C2: FSDP only when the fp32 optimizer moments would
+    # not fit replicated-over-data (4x params bytes / TP degree vs ~6 GB
+    # headroom) — small models otherwise pay per-layer weight all-gathers
+    # for nothing.  REPRO_FSDP=1 forces it on everywhere (baseline).
+    opt_resident = 4.0 * param_bytes / max(model_size, 1)
+    needs_fsdp = (
+        (shape.kind == "train" and (opt_resident > 6e9 or os.environ.get("REPRO_FSDP") == "1"))
+        or param_bytes / max(model_size, 1) > 12e9
+    )
+    fsdp_axis = "data" if (needs_fsdp and "data" in mesh.axis_names) else None
+    fsdp_size = mesh.shape["data"] if fsdp_axis else 1
+    p_specs = param_pspecs(
+        aparams, arch, mi.model_axis, model_size,
+        fsdp_axis=fsdp_axis, fsdp_size=fsdp_size,
+    )
+    p_sh = _shardings(mesh, p_specs)
+    ispecs = lm.input_specs(shape)
+
+    if shape.kind == "train":
+        # 4 microbatches bound the layer-boundary activation carries
+        # (global 256 x 4096 tokens would not fit otherwise); 100B+ models
+        # additionally store AdamW moments in bf16 (update math stays fp32)
+        mdt = "bfloat16" if param_bytes > 60e9 else "float32"
+        n_mb = int(os.environ.get("REPRO_MICROBATCH", "4"))
+        tc = TrainConfig(opt=AdamWConfig(moment_dtype=mdt), n_microbatches=n_mb)
+        step = make_train_step(lm, tc)
+        aopt = jax.eval_shape(
+            lambda p: OptState(
+                step=jnp.zeros((), jnp.int32),
+                m=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.dtype(mdt)), p),
+                v=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.dtype(mdt)), p),
+            ),
+            aparams,
+        )
+        opt_specs = OptState(step=P(), m=p_specs, v=p_specs)
+        opt_sh = _shardings(mesh, opt_specs)
+        b_specs = batch_pspecs(ispecs, mi.data_axes)
+        b_sh = _shardings(mesh, b_specs)
+        res = jax.ShapeDtypeStruct((), jnp.float32)
+        res_sh = NamedSharding(mesh, P())
+        fn = step
+        args = (aparams, aopt, ispecs, res)
+        in_sh = (p_sh, opt_sh, b_sh, res_sh)
+        out_sh = (p_sh, opt_sh, res_sh, None)
+        donate = (0, 1)
+        return lm, fn, args, in_sh, out_sh, donate
+
+    if shape.kind == "prefill":
+        b_specs = batch_pspecs(ispecs, mi.data_axes)
+        b_sh = _shardings(mesh, b_specs)
+        fn = lm.prefill
+        args = (aparams, ispecs)
+        acache = jax.eval_shape(fn, aparams, ispecs)[1]
+        c_sh = _shardings(
+            mesh, cache_pspecs(acache, arch, mi.data_axes, mi.model_axis, model_size)
+        )
+        return lm, fn, args, (p_sh, b_sh), (None, c_sh, None), ()
+
+    # decode
+    specs = lm.input_specs(shape)
+    batch_specs, cache_specs = specs["batch"], specs["cache"]
+    b_sh = _shardings(mesh, batch_pspecs(batch_specs, mi.data_axes))
+    c_specs = cache_pspecs(
+        cache_specs, arch, mi.data_axes, mi.model_axis, model_size
+    )
+    c_sh = _shardings(mesh, c_specs)
+    fn = lm.decode_step
+    args = (aparams, batch_specs, cache_specs)
+    return lm, fn, args, (p_sh, b_sh, c_sh), (None, c_sh, None), (2,)
+
+
+def run_cell(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: str = ARTIFACT_DIR,
+) -> Dict[str, Any]:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec: Dict[str, Any] = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "unknown",
+    }
+    skip = cell_is_skipped(arch, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return _save(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lm, fn, args, in_sh, out_sh, donate = build_cell(arch, shape, mesh)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                fn,
+                in_shardings=in_sh,
+                out_shardings=out_sh,
+                donate_argnums=donate,
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = collective_bytes_from_text(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            n_devices=mesh.size,
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "per_device_total": (
+                    ma.argument_size_in_bytes
+                    + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes
+                    - ma.alias_size_in_bytes
+                ),
+            },
+            cost={
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+            collectives=coll,
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return _save(rec, out_dir)
+
+
+def _save(rec: Dict[str, Any], out_dir: str) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args(argv)
+
+    meshes = [m.strip() == "multi" for m in args.mesh.split(",")]
+    archs = ARCH_IDS if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape, multi, args.out)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    per_dev = rec["memory"]["per_device_total"] / 2**30
+                    extra = (
+                        f"mem/dev={per_dev:.2f}GiB flops={rec['cost']['flops']:.3g} "
+                        f"coll={rec['collectives'].get('total', 0)/2**20:.1f}MiB "
+                        f"compile={rec['compile_s']}s"
+                    )
+                elif status == "fail":
+                    extra = rec["error"][:160]
+                    n_fail += 1
+                print(
+                    f"[{status:7s}] {arch:22s} {shape:12s} "
+                    f"{'multi ' if multi else 'single'} {extra}",
+                    flush=True,
+                )
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

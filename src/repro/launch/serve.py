@@ -1,0 +1,77 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Boots the Sieve serving engine (continuous batching + scheduler-in-loop)
+on the requested arch and runs a synthetic request workload, reporting
+throughput/interactivity and the Sieve partition trail.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import LM
+from repro.serving import BatchingConfig, Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--policy", default="sieve",
+                    choices=["sieve", "sieve_argmin", "pimoe", "noexp", "allexp"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--colocated-pd", action="store_true")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    lm = LM(arch, dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    engine = ServingEngine(
+        lm, params,
+        BatchingConfig(n_slots=args.slots, max_seq=args.max_seq,
+                       colocated_pd=args.colocated_pd),
+        policy=args.policy,
+    )
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        engine.submit(Request(
+            prompt=list(rng.integers(0, arch.vocab_size - 1, args.prompt_len)),
+            max_new_tokens=args.max_new, arrival_time=time.time(),
+        ))
+    done = engine.run_until_done()
+    dt = time.time() - t0
+
+    total_new = sum(len(r.generated) for r in done)
+    ttfts = [r.first_token_time - r.arrival_time for r in done
+             if r.first_token_time]
+    print(f"arch={arch.name} policy={args.policy}")
+    print(f"served {len(done)} requests, {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s)")
+    if ttfts:
+        print(f"TTFT p50={np.median(ttfts)*1e3:.1f}ms p max={max(ttfts)*1e3:.1f}ms")
+    if engine.is_moe and engine.stats.partitions:
+        parts = engine.stats.partitions
+        gpu_frac = np.mean([p["n_gpu"] / max(p["n_gpu"] + p["n_pim"], 1)
+                            for p in parts])
+        print(f"sieve: {len(parts)} layer-partitions, "
+              f"mean GPU-expert fraction={gpu_frac:.2f}, "
+              f"cost-table coverage={engine.cost_table.coverage} token-counts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""JAX model substrate: layers, attention, MoE, SSM, transformer stacks."""
+
+from .model import LM, StepAux  # noqa: F401
+from .moe import LOCAL_MESH, MeshInfo  # noqa: F401
+from .sharding import batch_pspecs, cache_pspecs, param_pspecs, to_shardings  # noqa: F401

@@ -1,0 +1,521 @@
+"""Attention: GQA (flash-style prefill, cached decode), MLA, cross-attn.
+
+Prefill uses a chunked online-softmax formulation (jnp + lax.scan) so the
+32k/500k shapes never materialize full score matrices; the Pallas kernels
+in :mod:`repro.kernels` provide the TPU-optimized versions of the same math
+(decode attention), validated against these references.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from .layers import _he, apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: AttnConfig, d_model: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": _he(ks[0], (d_model, H * dh), 1.0, dtype),
+        "wk": _he(ks[1], (d_model, K * dh), 1.0, dtype),
+        "wv": _he(ks[2], (d_model, K * dh), 1.0, dtype),
+        "wo": _he(ks[3], (H * dh, d_model), 1.0, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((K * dh,), dtype)
+        p["bv"] = jnp.zeros((K * dh,), dtype)
+    return p
+
+
+def init_mla(key, cfg: AttnConfig, d_model: int, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": _he(ks[0], (d_model, m.q_lora_rank), 1.0, dtype),
+        "q_norm_scale": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "w_uq": _he(
+            ks[1], (m.q_lora_rank, H * (m.qk_nope_dim + m.qk_rope_dim)), 1.0, dtype
+        ),
+        "w_dkv": _he(ks[2], (d_model, m.kv_lora_rank), 1.0, dtype),
+        "kv_norm_scale": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "w_kr": _he(ks[3], (d_model, m.qk_rope_dim), 1.0, dtype),
+        "w_uk": _he(ks[4], (m.kv_lora_rank, H * m.qk_nope_dim), 1.0, dtype),
+        "w_uv": _he(ks[5], (m.kv_lora_rank, H * m.v_head_dim), 1.0, dtype),
+        "wo": _he(ks[6], (H * m.v_head_dim, d_model), 1.0, dtype),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (prefill / training)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, dh)
+    k: jax.Array,  # (B, Sk, K, dh)
+    v: jax.Array,  # (B, Sk, K, dh)
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax blockwise attention; supports GQA via head groups.
+
+    Memory is O(q_chunk * kv_chunk) per (batch, head) instead of O(Sq*Sk).
+    ``q_offset`` places the query block inside the kv timeline (for chunked
+    prefill where queries start mid-sequence).
+    """
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    dv = v.shape[-1]  # value head dim may differ (MLA)
+    G = H // K
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, q_chunk, Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    # Head-major layout: repeat kv heads to the full query head count so
+    # tensor parallelism shards the head dim cleanly (GQA-aware grouping
+    # lives in the Pallas kernels; here clean sharding wins).
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qg = q.reshape(B, nq, q_chunk, H, dh).astype(jnp.float32)
+    kg = k.reshape(B, nk, kv_chunk, H, dh).astype(jnp.float32)
+    vg = v.reshape(B, nk, kv_chunk, H, dv).astype(jnp.float32)
+
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, q_chunk)
+    k_pos = jnp.arange(Sk).reshape(nk, kv_chunk)
+
+    def per_q_chunk(qi, q_blk):
+        # q_blk: (B, q_chunk, H, dh)
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk = kg[:, ki], vg[:, ki]  # (B, kv_chunk, H, dh)
+            s = jnp.einsum("bqhd,bthd->bhqt", q_blk, k_blk) * scale
+            if causal:
+                mask = q_pos[qi][:, None] >= k_pos[ki][None, :]  # (qc, tc)
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqt,bthd->bhqd", p, v_blk
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, H, q_chunk, dv)
+
+    outs = jax.lax.map(lambda qi: per_q_chunk(qi, qg[:, qi]), jnp.arange(nq))
+    # (nq, B, H, q_chunk, dv) -> (B, nq, q_chunk, H, dv) -> (B, Sq, H, dv)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, dh)
+    cache_k: jax.Array,  # (B, T, K, dh)
+    cache_v: jax.Array,  # (B, T, K, dh)
+    length: jax.Array,  # (B,) valid cache entries (incl. current token)
+) -> jax.Array:
+    """One-token GQA attention against the KV cache (the memory-bound GEMV
+    op the paper offloads to PIM; Pallas version in kernels/decode_attention)."""
+    B, _, H, dh = q.shape
+    T, K = cache_k.shape[1], cache_k.shape[2]
+    G = H // K
+    qf = q.reshape(B, K, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, cache_k.astype(jnp.float32))
+    s = s / jnp.sqrt(dh)
+    mask = jnp.arange(T)[None, :] < length[:, None]  # (B, T)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, cache_v.astype(jnp.float32))
+    return o.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA wrappers
+# ---------------------------------------------------------------------------
+
+
+def _rope_or_mrope(x, positions, cfg: AttnConfig, mrope_positions):
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        return apply_mrope(x, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    if positions is None:
+        return x
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def gqa_project_qkv(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    positions: Optional[jax.Array],
+    cfg: AttnConfig,
+    mrope_positions: Optional[jax.Array] = None,
+    use_rope: bool = True,
+):
+    B, S, _ = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, K, dh)
+    v = v.reshape(B, S, K, dh)
+    if use_rope:
+        q = _rope_or_mrope(q, positions, cfg, mrope_positions)
+        k = _rope_or_mrope(k, positions, cfg, mrope_positions)
+    return q, k, v
+
+
+def gqa_prefill(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: AttnConfig,
+    mrope_positions=None,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    use_rope = cfg.mrope_sections is not None or positions is not None
+    q, k, v = gqa_project_qkv(params, x, positions, cfg, mrope_positions, use_rope)
+    o = flash_attention(q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    B, S = x.shape[:2]
+    y = o.reshape(B, S, -1) @ params["wo"]
+    return y, k, v
+
+
+def gqa_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    position: jax.Array,  # (B,) current position
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    cfg: AttnConfig,
+    mrope_positions=None,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step; returns output and the (k, v) row to insert."""
+    pos = position[:, None] if position is not None else None
+    q, k1, v1 = gqa_project_qkv(params, x, pos, cfg, mrope_positions, use_rope)
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    # insert current kv at `position`
+    idx = position if position is not None else jnp.zeros((B,), jnp.int32)
+    cache_k = jax.vmap(lambda c, r, i: jax.lax.dynamic_update_slice(c, r, (i, 0, 0)))(
+        cache_k, k1, idx
+    )
+    cache_v = jax.vmap(lambda c, r, i: jax.lax.dynamic_update_slice(c, r, (i, 0, 0)))(
+        cache_v, v1, idx
+    )
+    o = decode_attention_ref(q, cache_k, cache_v, idx + 1)
+    y = o.reshape(B, 1, -1) @ params["wo"]
+    return y, cache_k, cache_v
+
+
+def quantize_kv_row(row: jax.Array):
+    """Per-(token, head) int8 quantization: row (B, 1, K, dh) -> (q, scale)."""
+    m = jnp.max(jnp.abs(row.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(m, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(row.astype(jnp.float32) / scale), -127, 127).astype(
+        jnp.int8
+    )
+    return q, scale[..., 0]  # (B, 1, K, dh) int8, (B, 1, K) f32
+
+
+def gqa_decode_seqpar(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    position: jax.Array,  # (B,)
+    cache_k: jax.Array,  # (B, T, K, dh) — T sharded over the model axis
+    cache_v: jax.Array,
+    cfg: AttnConfig,
+    mi,  # MeshInfo
+    use_rope: bool = True,
+    kv_scales=None,  # (k_scale, v_scale) (B, T, K) f32 — int8 KV mode
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sequence-parallel decode attention (§Perf iteration A).
+
+    When GQA kv-head counts don't divide the TP degree, the KV cache is
+    sharded along the *sequence* dim.  Under plain GSPMD the per-step
+    dynamic cache insert forces an involuntary full rematerialization of
+    the layer's cache on every device (~2 x B_loc x T x K x dh bytes/layer).
+    This path instead runs the update + attention inside shard_map: each
+    model shard inserts the new KV row only if it owns the slot, computes a
+    partial online-softmax (m, l, acc) over its T/TP slice, and the partials
+    merge with two tiny psums — per-device HBM traffic drops by the TP
+    degree and no reshard/gather is emitted.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    pos1 = position[:, None]
+    q, k1, v1 = gqa_project_qkv(params, x, pos1 if use_rope else None, cfg,
+                                None, use_rope)
+    B = x.shape[0]
+    axis = mi.model_axis
+    dp = mi.data_axes if mi.data_axes else None
+    int8_kv = kv_scales is not None
+    if int8_kv:
+        k1q, k1s = quantize_kv_row(k1)
+        v1q, v1s = quantize_kv_row(v1)
+        k1, v1 = k1q, v1q
+        ksc, vsc = kv_scales
+    else:
+        k1s = v1s = jnp.zeros(k1.shape[:3], jnp.float32)
+        ksc = vsc = jnp.zeros(cache_k.shape[:3], jnp.float32)
+
+    def body(q_, k1_, v1_, k1s_, v1s_, ck, cv, cks, cvs, pos):
+        # per-shard: ck/cv (B_loc, T_loc, K, dh); q_ (B_loc, 1, H, dh)
+        T_loc = ck.shape[1]
+        shard = jax.lax.axis_index(axis)
+        local = pos - shard * T_loc
+        own = (local >= 0) & (local < T_loc)
+        idx = jnp.clip(local, 0, T_loc - 1)
+
+        def upd(c, row, i, o):
+            new = jax.lax.dynamic_update_slice(c, row, (i,) + (0,) * (c.ndim - 1))
+            return jnp.where(o, new, c)
+
+        ck = jax.vmap(upd)(ck, k1_, idx, own)
+        cv = jax.vmap(upd)(cv, v1_, idx, own)
+        if int8_kv:
+            cks = jax.vmap(upd)(cks, k1s_, idx, own)
+            cvs = jax.vmap(upd)(cvs, v1s_, idx, own)
+
+        # partial attention over the local slice
+        K_, dh = ck.shape[2], ck.shape[3]
+        H = q_.shape[2]
+        G = H // K_
+        qf = q_.reshape(-1, K_, G, dh).astype(jnp.float32)
+        s = jnp.einsum("bkgd,btkd->bkgt", qf, ck.astype(jnp.float32))
+        if int8_kv:  # fold the per-(token,head) dequant scales in
+            s = s * cks.transpose(0, 2, 1)[:, :, None, :]
+        s = s / jnp.sqrt(dh)
+        gpos = shard * T_loc + jnp.arange(T_loc)  # global positions
+        mask = gpos[None, :] <= pos[:, None]
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m = s.max(-1)  # (B, K, G)
+        p = jnp.exp(s - m[..., None])
+        if int8_kv:
+            pv = p * cvs.transpose(0, 2, 1)[:, :, None, :]
+        else:
+            pv = p
+        l = p.sum(-1)
+        acc = jnp.einsum("bkgt,btkd->bkgd", pv, cv.astype(jnp.float32))
+        # merge partials across shards (numerically exact flash merge)
+        m_all = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_all)
+        l_all = jax.lax.psum(l * corr, axis)
+        acc_all = jax.lax.psum(acc * corr[..., None], axis)
+        o = acc_all / jnp.maximum(l_all, 1e-30)[..., None]
+        return o.reshape(-1, 1, H * dh).astype(x.dtype), ck, cv, cks, cvs
+
+    o, new_k, new_v, new_ks, new_vs = _shard_map_attn(
+        body, mi,
+        (q, k1, v1, k1s, v1s, cache_k, cache_v, ksc, vsc, position),
+        in_specs=(
+            P(dp, None, None, None),
+            P(dp, None, None, None),
+            P(dp, None, None, None),
+            P(dp, None, None),
+            P(dp, None, None),
+            P(dp, axis, None, None),
+            P(dp, axis, None, None),
+            P(dp, axis, None),
+            P(dp, axis, None),
+            P(dp),
+        ),
+        out_specs=(
+            P(dp, None, None),
+            P(dp, axis, None, None),
+            P(dp, axis, None, None),
+            P(dp, axis, None),
+            P(dp, axis, None),
+        ),
+    )
+    y = o @ params["wo"]
+    if int8_kv:
+        return y, (new_k, new_v, new_ks, new_vs)
+    return y, (new_k, new_v)
+
+
+def _shard_map_attn(body, mi, args, in_specs, out_specs):
+    try:
+        from jax import shard_map as _sm
+    except ImportError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map as _sm
+    return _sm(body, mesh=mi.mesh, in_specs=in_specs, out_specs=out_specs,
+               check_vma=False)(*args)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_prefill(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,
+    cfg: AttnConfig,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y, c_kv, k_rope) — the compressed caches (576 B/token/layer)."""
+    m = cfg.mla
+    H = cfg.n_heads
+    B, S, _ = x.shape
+    cq = _rms(x @ params["w_dq"], params["q_norm_scale"])
+    q = (cq @ params["w_uq"]).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = _rms(x @ params["w_dkv"], params["kv_norm_scale"])  # (B, S, c)
+    k_rope = apply_rope(
+        (x @ params["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]  # (B, S, r) shared across heads
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_dim)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+
+    qq = jnp.concatenate([q_nope, jnp.broadcast_to(q_rope, q_rope.shape)], -1)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_dim))],
+        -1,
+    )
+    o = flash_attention(qq, kk, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    y = o.reshape(B, S, -1) @ params["wo"]
+    return y, c_kv, k_rope
+
+
+def mla_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    position: jax.Array,  # (B,)
+    cache_ckv: jax.Array,  # (B, T, c)
+    cache_kr: jax.Array,  # (B, T, r)
+    cfg: AttnConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Matrix-absorbed MLA decode: attention runs in the compressed latent
+    space; the cache stays (kv_lora + rope) per token."""
+    m = cfg.mla
+    H = cfg.n_heads
+    B = x.shape[0]
+    cq = _rms(x @ params["w_dq"], params["q_norm_scale"])
+    q = (cq @ params["w_uq"]).reshape(B, 1, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, position[:, None], cfg.rope_theta)
+
+    c1 = _rms(x @ params["w_dkv"], params["kv_norm_scale"])  # (B, 1, c)
+    kr1 = apply_rope(
+        (x @ params["w_kr"])[:, :, None, :], position[:, None], cfg.rope_theta
+    )[:, :, 0, :]
+    cache_ckv = jax.vmap(lambda c, r, i: jax.lax.dynamic_update_slice(c, r, (i, 0)))(
+        cache_ckv, c1, position
+    )
+    cache_kr = jax.vmap(lambda c, r, i: jax.lax.dynamic_update_slice(c, r, (i, 0)))(
+        cache_kr, kr1, position
+    )
+
+    # absorb W_uk into the query:  q_lat[b,h,c] = sum_n q_nope[b,h,n] W_uk[c,(h,n)]
+    w_uk = params["w_uk"].reshape(-1, H, m.qk_nope_dim)  # (c, H, n)
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (
+        jnp.einsum("bhc,btc->bht", q_lat, cache_ckv.astype(jnp.float32))
+        + jnp.einsum(
+            "bhr,btr->bht",
+            q_rope[:, 0].astype(jnp.float32),
+            cache_kr.astype(jnp.float32),
+        )
+    ) * scale
+    T = cache_ckv.shape[1]
+    mask = jnp.arange(T)[None, :] < (position[:, None] + 1)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bht,btc->bhc", p, cache_ckv.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(-1, H, m.v_head_dim)  # (c, H, v)
+    o = jnp.einsum("bhc,chv->bhv", ctx_lat, w_uv.astype(jnp.float32))
+    y = o.reshape(B, 1, -1).astype(x.dtype) @ params["wo"]
+    return y, cache_ckv, cache_kr
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def _divisor_chunk(n: int, target: int) -> int:
+    """Largest chunk <= target that divides n (1500 -> 750, etc.)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return max(c, 1)
+
+
+def cross_attention(
+    params: dict,
+    x: jax.Array,  # (B, Sq, d)
+    enc_k: jax.Array,  # (B, Se, K, dh)  precomputed from encoder states
+    enc_v: jax.Array,
+    cfg: AttnConfig,
+) -> jax.Array:
+    B, Sq, _ = x.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    q = (x @ params["wq"]).reshape(B, Sq, H, dh)
+    o = flash_attention(
+        q, enc_k, enc_v, causal=False,
+        q_chunk=_divisor_chunk(Sq, 1024),
+        kv_chunk=_divisor_chunk(enc_k.shape[1], 1024),
+    )
+    return o.reshape(B, Sq, -1) @ params["wo"]
+
+
+def init_cross_attention(key, cfg: AttnConfig, d_model: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    H, dh = cfg.n_heads, cfg.d_head
+    return {
+        "wq": _he(ks[0], (d_model, H * dh), 1.0, dtype),
+        "wk": _he(ks[1], (d_model, H * dh), 1.0, dtype),
+        "wv": _he(ks[2], (d_model, H * dh), 1.0, dtype),
+        "wo": _he(ks[3], (H * dh, d_model), 1.0, dtype),
+    }
+
+
+def project_cross_kv(params: dict, enc_states: jax.Array, cfg: AttnConfig):
+    B, Se, _ = enc_states.shape
+    k = (enc_states @ params["wk"]).reshape(B, Se, cfg.n_heads, cfg.d_head)
+    v = (enc_states @ params["wv"]).reshape(B, Se, cfg.n_heads, cfg.d_head)
+    return k, v

@@ -1,0 +1,421 @@
+"""Mixture-of-Experts layer: router, capacity dispatch, EP, Sieve dual-path.
+
+Design (DESIGN.md §5, §8.2):
+
+* **Router**: fp32 logits, top-k, renormalized softmax weights, GShard-style
+  load-balancing aux loss.
+* **Dispatch**: capacity-based scatter (sort-free, one-hot-free) into an
+  ``(E, C, d)`` buffer — static SPMD shapes, no fake matmul FLOPs, matches
+  the paper's fixed-size-tensor metadata step (§6.1 ④).  Overflow tokens
+  are dropped and counted.
+* **EP**: experts sharded over the ``model`` mesh axis; dispatch/combine via
+  ``jax.lax.all_to_all`` inside ``shard_map`` (the paper's ⑤/⑨ a2a steps).
+* **Sieve integration**: per-layer expert token counts are computed in-graph
+  and exposed to the serving engine (which feeds the EMA cost table and the
+  Sieve scheduler).  ``exec_mode="dual"`` routes single-token experts
+  through the streaming GEMV path (kernels/expert_gemv) and multi-token
+  experts through the grouped path — the TPU adaptation of the paper's
+  PIM/GPU split (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from .layers import _he
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.sharding import PartitionSpec as P
+
+
+class MeshInfo(NamedTuple):
+    """How model code should distribute itself (None = single-device)."""
+
+    mesh: Optional[object]  # jax.sharding.Mesh
+    data_axes: Tuple[str, ...]  # mesh axes sharding the batch ("pod","data")
+    model_axis: Optional[str]  # mesh axis for TP/EP
+
+    @property
+    def ep_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+LOCAL_MESH = MeshInfo(None, (), None)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, arch: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    cfg = arch.moe
+    d, f, E = arch.d_model, cfg.d_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "w_router": (jax.random.normal(ks[0], (d, E)) * 0.02).astype(jnp.float32),
+        "w_gate": _he(ks[1], (E, d, f), 1.0, dtype),
+        "w_up": _he(ks[2], (E, d, f), 1.0, dtype),
+        "w_down": _he(ks[3], (E, f, d), 1.0, dtype),
+    }
+    if cfg.n_shared:
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _he(sks[0], (d, cfg.n_shared * f), 1.0, dtype),
+            "w_up": _he(sks[1], (d, cfg.n_shared * f), 1.0, dtype),
+            "w_down": _he(sks[2], (cfg.n_shared * f, d), 1.0, dtype),
+        }
+    return p
+
+
+def moe_param_pspecs(arch: ArchConfig, model_axis: str) -> dict:
+    """PartitionSpecs matching init_moe: experts sharded over the model axis
+    (EP), shared experts tensor-parallel over the same axis."""
+    cfg = arch.moe
+    p = {
+        "w_router": P(None, None),
+        "w_gate": P(model_axis, None, None),
+        "w_up": P(model_axis, None, None),
+        "w_down": P(model_axis, None, None),
+    }
+    if cfg.n_shared:
+        p["shared"] = {
+            "w_gate": P(None, model_axis),
+            "w_up": P(None, model_axis),
+            "w_down": P(model_axis, None),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+
+class RouterOut(NamedTuple):
+    expert_idx: jax.Array  # (T, k) int32
+    weights: jax.Array  # (T, k) activation dtype
+    aux_loss: jax.Array  # scalar fp32
+    counts: jax.Array  # (E,) int32 token count per expert
+
+
+def route(x: jax.Array, w_router: jax.Array, cfg: MoEConfig) -> RouterOut:
+    """Top-k routing with renormalized weights + load-balance aux loss."""
+    T = x.shape[0]
+    logits = (x.astype(jnp.float32) @ w_router.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    weights = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # GShard aux loss: E * sum_e mean_t(prob_e) * mean_t(frac_routed_e)
+    E = w_router.shape[1]
+    frac = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (
+        T * cfg.top_k
+    )
+    aux = E * jnp.sum(probs.mean(0) * frac)
+    counts = jnp.zeros((E,), jnp.int32).at[top_i.reshape(-1)].add(1)
+    return RouterOut(top_i.astype(jnp.int32), weights.astype(x.dtype), aux, counts)
+
+
+# ---------------------------------------------------------------------------
+# Capacity-based dispatch / combine (scatter, no one-hot matmuls)
+# ---------------------------------------------------------------------------
+
+
+class Dispatched(NamedTuple):
+    buf: jax.Array  # (E, C, d)
+    slot_of: jax.Array  # (T, k) int32: slot in flat (E*C) space, -1 if dropped
+    n_dropped: jax.Array  # scalar int32
+
+
+def capacity(T: int, cfg: MoEConfig, n_experts: int) -> int:
+    c = int(-(-T * cfg.top_k * cfg.capacity_factor // n_experts))
+    return max(c, min(T, cfg.min_capacity), 1)
+
+
+def dispatch(
+    x: jax.Array,  # (T, d)
+    r: RouterOut,
+    n_experts: int,
+    cap: int,
+    expert_offset: int = 0,
+    n_local: Optional[int] = None,
+) -> Dispatched:
+    """Scatter tokens into an (n_local, cap, d) buffer.
+
+    With ``expert_offset``/``n_local`` set, only assignments targeting the
+    local expert shard [offset, offset + n_local) are dispatched (the
+    expert-parallel case); others are masked out (their slot_of is -1 and
+    they contribute nothing — a remote shard handles them).
+    """
+    T, d = x.shape
+    k = r.expert_idx.shape[1]
+    Tk = T * k
+    nE = n_experts if n_local is None else n_local
+    e_flat = r.expert_idx.reshape(-1) - expert_offset
+    valid = (e_flat >= 0) & (e_flat < nE)
+    e_key = jnp.where(valid, e_flat, nE)  # invalid sort to the end
+    order = jnp.argsort(e_key, stable=True)
+    e_sorted = e_key[order]
+    counts = jnp.zeros((nE + 1,), jnp.int32).at[e_key].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[e_sorted]
+    keep = (pos_sorted < cap) & (e_sorted < nE)
+    slot_sorted = jnp.where(keep, e_sorted * cap + pos_sorted, nE * cap)
+    # back to (T, k) order
+    slot_flat = jnp.zeros((Tk,), jnp.int32).at[order].set(slot_sorted)
+    token_sorted = order // k
+    vals = x[token_sorted] * keep[:, None].astype(x.dtype)
+    buf = (
+        jnp.zeros((nE * cap + 1, d), x.dtype)
+        .at[slot_sorted].set(vals)[: nE * cap]
+        .reshape(nE, cap, d)
+    )
+    slot_of = jnp.where(slot_flat == nE * cap, -1, slot_flat).reshape(T, k)
+    n_dropped = jnp.sum(
+        (~keep) & (e_sorted < nE)
+    ).astype(jnp.int32)  # overflow only (not remote assignments)
+    return Dispatched(buf, slot_of, n_dropped)
+
+
+def combine(
+    y_buf: jax.Array,  # (E, C, d)
+    slot_of: jax.Array,  # (T, k)
+    weights: jax.Array,  # (T, k)
+    T: int,
+) -> jax.Array:
+    E, C, d = y_buf.shape
+    flat = y_buf.reshape(E * C, d)
+    idx = jnp.maximum(slot_of, 0)
+    gathered = flat[idx.reshape(-1)].reshape(T, -1, d)
+    mask = (slot_of >= 0)[..., None].astype(flat.dtype)
+    w = weights[..., None].astype(flat.dtype)
+    return jnp.sum(gathered * mask * w, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN compute (grouped over the capacity buffer)
+# ---------------------------------------------------------------------------
+
+
+def experts_ffn(params: dict, buf: jax.Array) -> jax.Array:
+    """SwiGLU over (E_local, C_total, d) with (E_local, d, f) weights."""
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE layer: local and expert-parallel paths
+# ---------------------------------------------------------------------------
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array  # (T, d)
+    aux_loss: jax.Array
+    counts: jax.Array  # (E,) global token counts (Sieve scheduler input)
+    n_dropped: jax.Array
+
+
+def moe_local(params: dict, x: jax.Array, arch: ArchConfig) -> MoEOut:
+    """Single-device routed-experts path (reference; also the per-shard math
+    when EP is disabled)."""
+    cfg = arch.moe
+    T = x.shape[0]
+    r = route(x, params["w_router"], cfg)
+    cap = capacity(T, cfg, cfg.n_experts)
+    disp = dispatch(x, r, cfg.n_experts, cap)
+    y_buf = experts_ffn(params, disp.buf)
+    y = combine(y_buf, disp.slot_of, r.weights, T)
+    return MoEOut(y, r.aux_loss, r.counts, disp.n_dropped)
+
+
+def _ep_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEOut:
+    """Per-shard EP body (runs inside shard_map).
+
+    x: (T_ds, d) — this *data shard's* tokens, replicated over the model
+    axis.  Expert weights: (E_local, d, f) — this model shard's experts.
+
+    Execution maps the paper's Fig-8 flow onto TPU collectives: the router
+    ② runs redundantly on every model shard (cheap — it IS the routing-map
+    AllGather ③: afterwards every shard knows the full token→expert map);
+    each shard dispatches ④ only the tokens routed to *its* experts (the
+    paper's ⑤ dispatch, with the token movement folded into the final
+    combine), computes its experts' FFNs ⑦, and the partial outputs are
+    summed over the model axis ⑨/⑩ (each token's k experts live on k ≤ nm
+    different shards, so the psum is exactly the paper's aggregation).
+
+    This "replicated-dispatch EP" works for every batch size including
+    single-token decode (no divisibility constraints between tokens and the
+    EP degree); the a2a-dispatch variant is a §Perf alternative for large
+    training batches.
+    """
+    cfg = arch.moe
+    axis = mi.model_axis
+    nm = mi.ep_size
+    E = cfg.n_experts
+    E_loc = E // nm
+    T, d = x.shape
+
+    r = route(x, params["w_router"], cfg)
+    cap = capacity(T, cfg, E)
+    shard = jax.lax.axis_index(axis)
+    disp = dispatch(x, r, E, cap, expert_offset=shard * E_loc, n_local=E_loc)
+
+    y_buf = experts_ffn(params, disp.buf)  # (E_loc, cap, d)
+    y_partial = combine(y_buf, disp.slot_of, r.weights, T)
+    y = jax.lax.psum(y_partial, axis)
+
+    # Global token counts per expert (the Sieve scheduler's input ③): the
+    # router saw this data shard's tokens; sum over the data axes.
+    counts = r.counts
+    aux = r.aux_loss
+    dropped = jax.lax.psum(disp.n_dropped, axis)
+    if mi.data_axes:
+        counts = jax.lax.psum(counts, mi.data_axes)
+        aux = jax.lax.pmean(aux, mi.data_axes)
+        dropped = jax.lax.psum(dropped, mi.data_axes)
+    return MoEOut(y, aux, counts, dropped)
+
+
+def _ep_a2a_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEOut:
+    """all-to-all-dispatch EP (§Perf B future-work lever, REPRO_EP_MODE=a2a).
+
+    Tokens are sharded over (data x model) — each shard routes its own
+    tokens, scatters them into a full-E capacity buffer, and exchanges
+    buffers with the expert-owning shards via two all_to_alls (the paper's
+    ⑤ dispatch / ⑨ combine).  Communication moves ~k/TP of the activations
+    instead of the full d_model psum of the replicated-dispatch path —
+    cheaper for large training batches; requires tokens divisible by the
+    full mesh.
+    """
+    cfg = arch.moe
+    axis = mi.model_axis
+    nm = mi.ep_size
+    E = cfg.n_experts
+    E_loc = E // nm
+    T, d = x.shape
+
+    r = route(x, params["w_router"], cfg)
+    cap = capacity(T, cfg, E)
+    disp = dispatch(x, r, E, cap)
+
+    # ⑤ dispatch: (E, cap, d) -> (E_loc, nm * cap, d)
+    buf = disp.buf.reshape(nm, E_loc, cap, d)
+    buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1, tiled=False)
+    buf = buf.reshape(E_loc, nm * cap, d)
+
+    y_buf = experts_ffn(params, buf)
+
+    # ⑨ combine: reverse the exchange
+    y_buf = y_buf.reshape(E_loc, nm, cap, d)
+    y_buf = jax.lax.all_to_all(y_buf, axis, split_axis=1, concat_axis=0, tiled=False)
+    y_buf = y_buf.reshape(E, cap, d)
+
+    y = combine(y_buf, disp.slot_of, r.weights, T)
+    counts = r.counts
+    aux = r.aux_loss
+    dropped = disp.n_dropped
+    axes = tuple(mi.data_axes) + (axis,)
+    counts = jax.lax.psum(counts, axes)
+    aux = jax.lax.pmean(aux, axes)
+    dropped = jax.lax.psum(dropped, axes)
+    return MoEOut(y, aux, counts, dropped)
+
+
+def moe_block(
+    params: dict,
+    x: jax.Array,  # (B, S, d) activations
+    arch: ArchConfig,
+    mi: MeshInfo = LOCAL_MESH,
+) -> MoEOut:
+    """Full MoE block: routed experts (+EP) and shared experts.
+
+    Shared experts run outside the shard_map as plain tensor-parallel dense
+    MLPs (every token visits them — the paper's early-weight-load case)."""
+    cfg = arch.moe
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+
+    if mi.mesh is not None and mi.ep_size > 1 and cfg.n_experts % mi.ep_size == 0:
+        import os as _os
+
+        dp_size = 1
+        for a in mi.data_axes:
+            dp_size *= mi.mesh.shape[a]
+        use_a2a = (
+            _os.environ.get("REPRO_EP_MODE", "psum") == "a2a"
+            and (B * S) % (dp_size * mi.ep_size) == 0
+        )
+        routed_params = {
+            k: params[k] for k in ("w_router", "w_gate", "w_up", "w_down")
+        }
+        w_specs = {
+            "w_router": P(None, None),
+            "w_gate": P(mi.model_axis, None, None),
+            "w_up": P(mi.model_axis, None, None),
+            "w_down": P(mi.model_axis, None, None),
+        }
+        dp = mi.data_axes if mi.data_axes else None
+        if use_a2a:
+            token_spec = P(tuple(mi.data_axes) + (mi.model_axis,), None)
+            routed = _shard_map(
+                lambda p, t: _ep_a2a_body(p, t, arch, mi),
+                mesh=mi.mesh,
+                in_specs=(w_specs, token_spec),
+                out_specs=MoEOut(token_spec, P(), P(), P()),
+                check_vma=False,
+            )(routed_params, xt)
+        else:
+            routed = _shard_map(
+                lambda p, t: _ep_body(p, t, arch, mi),
+                mesh=mi.mesh,
+                in_specs=(w_specs, P(dp, None)),
+                out_specs=MoEOut(P(dp, None), P(), P(), P()),
+                check_vma=False,
+            )(routed_params, xt)
+    else:
+        routed = moe_local(
+            {k: params[k] for k in ("w_router", "w_gate", "w_up", "w_down")}, xt, arch
+        )
+
+    y = routed.y
+    if cfg.n_shared:
+        sp = params["shared"]
+        gate = xt @ sp["w_gate"]
+        up = xt @ sp["w_up"]
+        y = y + (jax.nn.silu(gate) * up) @ sp["w_down"]
+
+    return MoEOut(y.reshape(B, S, d), routed.aux_loss, routed.counts, routed.n_dropped)
+
+
+# ---------------------------------------------------------------------------
+# Dense per-expert reference (tests only — O(T * E) memory)
+# ---------------------------------------------------------------------------
+
+
+def moe_reference(params: dict, x: jax.Array, arch: ArchConfig) -> jax.Array:
+    """Exact routed-expert output without capacity limits (oracle)."""
+    cfg = arch.moe
+    T, d = x.shape
+    r = route(x, params["w_router"], cfg)
+    y = jnp.zeros((T, d), jnp.float32)
+    for e in range(cfg.n_experts):
+        gate = x @ params["w_gate"][e]
+        up = x @ params["w_up"][e]
+        ye = (jax.nn.silu(gate) * up) @ params["w_down"][e]
+        w_e = jnp.sum(
+            jnp.where(r.expert_idx == e, r.weights, 0.0).astype(jnp.float32), axis=1
+        )
+        y = y + ye.astype(jnp.float32) * w_e[:, None]
+    return y.astype(x.dtype)

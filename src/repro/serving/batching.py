@@ -1,0 +1,81 @@
+"""Continuous batching policies (paper §7.1 / §7.3).
+
+``SlotScheduler`` manages a fixed pool of KV-cache slots: admits queued
+requests into free slots, runs prefill (whole-prompt for disaggregated-PD
+style, or chunked for colocated PD with a per-step prefill token budget —
+vLLM-style "at most two prefill requests per batch", §7.3), and retires
+finished requests.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional
+
+from .request import Request
+
+
+@dataclass
+class BatchingConfig:
+    n_slots: int = 8
+    max_seq: int = 512
+    colocated_pd: bool = False
+    prefill_chunk: int = 128  # tokens of prefill work per engine step
+    max_prefills_per_step: int = 2
+
+
+class SlotScheduler:
+    def __init__(self, cfg: BatchingConfig):
+        self.cfg = cfg
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.n_slots
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    @property
+    def active(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    def admit(self) -> List[Request]:
+        """Move queued requests into free slots; returns newly admitted."""
+        admitted = []
+        for i, r in enumerate(self.slots):
+            if r is None and self.queue:
+                req = self.queue.popleft()
+                req.slot = i
+                self.slots[i] = req
+                admitted.append(req)
+        return admitted
+
+    def prefill_work(self) -> List[Request]:
+        """Requests owed prefill this step (colocated: bounded chunk count)."""
+        pending = [
+            r for r in self.active if r.prefill_done < len(r.prompt)
+        ]
+        if not self.cfg.colocated_pd:
+            return pending  # disaggregated: prefill fully before decoding
+        return pending[: self.cfg.max_prefills_per_step]
+
+    def decode_batch(self) -> List[Request]:
+        return [
+            r
+            for r in self.active
+            if r.prefill_done >= len(r.prompt) and not r.done
+        ]
+
+    def retire(self, now: float) -> List[Request]:
+        out = []
+        for i, r in enumerate(self.slots):
+            if r is not None and r.done:
+                r.finish_time = now
+                self.finished.append(r)
+                self.slots[i] = None
+                out.append(r)
+        return out

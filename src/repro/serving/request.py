@@ -1,0 +1,40 @@
+"""Request / SLO structures for the serving engine."""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    arrival_time: float = 0.0
+    req_id: int = field(default_factory=lambda: next(_ids))
+
+    # runtime state
+    generated: List[int] = field(default_factory=list)
+    prefill_done: int = 0  # tokens of the prompt already prefilled
+    slot: Optional[int] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return bool(
+            self.eos_id is not None
+            and self.generated
+            and self.generated[-1] == self.eos_id
+        )
+
+    @property
+    def position(self) -> int:
+        """Next position to write in the KV timeline."""
+        return self.prefill_done + len(self.generated)

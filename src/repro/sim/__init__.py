@@ -1,0 +1,19 @@
+"""Cycle-approximate simulator for multi-GPU + HBM-PIM MoE serving.
+
+Reproduces the paper's evaluation methodology (§7.1): DRAM-timing-aware PIM
+GEMV model, B200 GPU model, NVLink interconnect, Fig-8 DAG overlap engine,
+and the calibrated bimodal token→expert trace generator.
+"""
+
+from .dram import PimGemvModel  # noqa: F401
+from .engine import (  # noqa: F401
+    PIM_POLICIES,
+    SCHEDULER_OVERHEAD,
+    ServingSimulator,
+    StepResult,
+    pareto_sweep,
+)
+from .gpu import GpuModel  # noqa: F401
+from .interconnect import InterconnectModel  # noqa: F401
+from .models import SIM_MODELS, SimModelConfig  # noqa: F401
+from .trace import PAPER_TRACES, TraceGenerator, TraceSpec, trace_stats  # noqa: F401

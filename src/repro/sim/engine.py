@@ -1,0 +1,377 @@
+"""End-to-end MoE serving-step simulator (paper §7 methodology).
+
+This is the cycle-approximate counterpart of the paper's Ramulator-2.0 +
+Duplex simulator: per MoE layer it samples a token→expert distribution from
+the calibrated trace model, runs the scheduling policy per GPU, instantiates
+the Fig-8 dependency DAG with DRAM-timing-aware durations, and list-schedules
+it over {gpu, gpu_hbm, pim, link} resources.  Mini-batch interleaving (the
+Fig-6a technique all baselines use) is modeled by merging ``n_interleave``
+half-batch DAGs per layer so the scheduler overlaps them on the resources.
+
+Step time = sum of per-layer makespans (max over GPUs — the EP combine is a
+global synchronization point per layer) + the LM head.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, SystemSpec
+from repro.core.cost_table import CostTable
+from repro.core.dag import build_moe_layer_dag, merge_dags
+from repro.core.overlap import list_schedule
+from repro.core.scheduler import Partition, pimoe_schedule, pimoe_static_partition, schedule
+from .dram import PimGemvModel
+from .gpu import GpuModel
+from .interconnect import InterconnectModel
+from .models import SimModelConfig
+from .trace import TraceGenerator
+
+# Scheduler wall-clock overhead charged on the GPU resource, scaled with the
+# local expert count.  Calibrated to the paper's single datapoint (§5.2:
+# ~20us on a B200 for a DeepSeek-R1 MoE layer, |E| = 256 -> 0.08us/expert).
+SCHEDULER_OVERHEAD_PER_EXPERT = {
+    "sieve": 0.08e-6,
+    "sieve_argmin": 0.08e-6,
+    "pimoe": 0.02e-6,  # static lookup only
+    "pimoe_dynamic": 0.08e-6,
+    "noexp": 0.0,
+    "allexp": 0.0,
+    "gpu_only": 0.0,
+}
+SCHEDULER_OVERHEAD_FLOOR = 1e-6
+
+# Backwards-compatible view used by benchmarks (per-expert overheads).
+SCHEDULER_OVERHEAD = SCHEDULER_OVERHEAD_PER_EXPERT
+
+PIM_POLICIES = ("sieve", "sieve_argmin", "pimoe", "pimoe_dynamic", "noexp", "allexp")
+
+
+@dataclass
+class StepResult:
+    policy: str
+    batch: int
+    seq: int
+    t_step: float
+    throughput_per_gpu: float  # generated tokens / s / GPU
+    interactivity: float  # generated tokens / s / user
+    t_layer_mean: float
+    util: Dict[str, float] = field(default_factory=dict)
+    diag: Dict[str, float] = field(default_factory=dict)
+
+
+class ServingSimulator:
+    def __init__(
+        self,
+        model: SimModelConfig,
+        system: SystemSpec,
+        seed: int = 0,
+        n_interleave: int = 2,
+    ):
+        self.model = model
+        self.system = system
+        self.n_gpus = model.n_gpus
+        self.gpu = GpuModel(system.xpu)
+        self.pim = PimGemvModel(system.pim) if system.pim is not None else None
+        self.net = InterconnectModel(system.xpu, model.n_gpus)
+        self.trace = TraceGenerator(model.trace, seed=seed)
+        self.n_interleave = n_interleave
+        self.rng = np.random.default_rng(seed + 1)
+        self._seed = seed
+        # PIMoE pins expert ids to PIM/GPU *statically* (paper §5.2); the
+        # pinning is calibrated once at a nominal operating point and does
+        # not adapt to runtime distribution shift, attention growth, or
+        # colocated prefill bursts — the blind spots Sieve exploits.
+        self._pimoe_ids: Optional[List[set]] = None
+        self.pimoe_calibration_batch = 32
+
+    def _calibrate_pimoe(self) -> None:
+        cal_trace = TraceGenerator(self.model.trace, seed=self._seed)
+        b_half = max(self.pimoe_calibration_batch // self.n_interleave, 1)
+        counts = cal_trace.sample_counts(b_half, drift=False)
+        local = self._local_expert_counts(counts)
+        self._pimoe_ids = []
+        for g in range(self.n_gpus):
+            cm = CostModel(system=self.system, layer=self.model.moe, ep_degree=self.n_gpus)
+            table = None
+            if self.pim is not None:
+                table = CostTable(
+                    fallback=lambda n: self.pim.expert_time(self.model.moe, n)
+                )
+            part = pimoe_schedule(local[g], cm, table)
+            self._pimoe_ids.append({int(e) for e in part.pim_experts})
+
+    # ------------------------------------------------------------------
+    def _expert_owner(self, e: int) -> int:
+        per = self.model.moe.n_experts // self.n_gpus
+        return min(e // per, self.n_gpus - 1)
+
+    def _local_expert_counts(self, counts: np.ndarray) -> List[np.ndarray]:
+        per = self.model.moe.n_experts // self.n_gpus
+        out = []
+        for g in range(self.n_gpus):
+            lo = g * per
+            hi = self.model.moe.n_experts if g == self.n_gpus - 1 else lo + per
+            out.append(counts[lo:hi])
+        return out
+
+    def _observe_pim_times(self, cost_table: CostTable, part: Partition, counts):
+        """Feed observed PIM GEMV times back into the EMA table (§5.1)."""
+        if self.pim is None:
+            return
+        for e in part.pim_experts:
+            n = int(counts[e])
+            if n > 0:
+                cost_table.update(n, self.pim.expert_time(self.model.moe, n))
+
+    # ------------------------------------------------------------------
+    def _half_layer_dag(
+        self,
+        policy: str,
+        local_counts: np.ndarray,
+        n_decode_local: int,
+        n_prefill_tokens_local: int,
+        seq: int,
+        cost_table: Optional[CostTable],
+        charge_weight_loads: bool,
+        gpu_idx: int = 0,
+    ):
+        """Durations + partition for one (gpu, half-batch) layer instance."""
+        m, attn = self.model.moe, self.model.attn
+        tokens_local = n_decode_local + n_prefill_tokens_local
+        attn_on_pim = policy in PIM_POLICIES and self.pim is not None
+
+        # --- attention -----------------------------------------------------
+        kv_bytes = attn.kv_bytes(n_decode_local, seq)
+        if attn_on_pim:
+            t_attn = self.pim.attention_time(kv_bytes, n_decode_local, seq)
+            pim_attn_time = t_attn
+        else:
+            t_attn = self.gpu.decode_attention_time(attn, n_decode_local, seq)
+            pim_attn_time = 0.0
+        t_prefill_attn = (
+            self.gpu.prefill_attention_time(attn, n_prefill_tokens_local)
+            if n_prefill_tokens_local
+            else 0.0
+        )
+
+        # --- scheduling ------------------------------------------------------
+        qkvo_bytes = attn.qkvo_param_bytes() if charge_weight_loads else 0.0
+        base_bytes = qkvo_bytes + self.model.router_param_bytes
+        base_flops = 2.0 * tokens_local * (attn.qkvo_param_bytes() / 2)
+        cm = CostModel(
+            system=self.system,
+            layer=m,
+            ep_degree=self.n_gpus,
+            gpu_base_flops=base_flops,
+            gpu_base_bytes=base_bytes,
+            pim_attn_time=pim_attn_time,
+        )
+        if policy == "pimoe":
+            if self._pimoe_ids is None:
+                self._calibrate_pimoe()
+            part = pimoe_static_partition(
+                local_counts, self._pimoe_ids[gpu_idx], cm, cost_table
+            )
+        else:
+            part = schedule(policy, local_counts, cm, cost_table)
+        G, S = part.gpu_experts, part.pim_experts
+
+        # --- durations -------------------------------------------------------
+        t_qkv_load = qkvo_bytes / self.system.xpu.hbm_bw if charge_weight_loads else 0.0
+        t_router = self.gpu.dense_time(self.model.router_param_bytes, tokens_local, m.d_model)
+        t_allgather = self.net.allgather_time(tokens_local * m.top_k * 8)
+        t_metadata = 1e-6
+        t_dispatch = self.net.a2a_time(tokens_local * m.top_k, m.d_model)
+        n_local_experts = len(local_counts)
+        t_sieve = max(
+            SCHEDULER_OVERHEAD_FLOOR,
+            SCHEDULER_OVERHEAD_PER_EXPERT[policy] * n_local_experts,
+        )
+        t_wload = self.gpu.expert_weight_load_time(m, len(G))
+        t_pimcmd = len(S) * 0.2e-6
+        t_ggemm = self.gpu.grouped_gemm_time(m, local_counts[G]) + base_flops / (
+            self.system.xpu.peak_flops * self.gpu.grouped_gemm_efficiency
+        )
+        if self.pim is not None and len(S):
+            if policy in ("pimoe", "pimoe_dynamic"):
+                t_pgemv = self._pimoe_channel_makespan(local_counts, S)
+            else:
+                t_pgemv = self.pim.experts_time_tp(m, local_counts[S])
+        else:
+            t_pgemv = 0.0
+        pim_out_tokens = int(local_counts[S].sum()) if len(S) else 0
+        t_readback = (
+            pim_out_tokens * m.d_model * m.dtype_bytes / self.system.xpu.hbm_bw
+        )
+        t_combine = self.net.a2a_time(tokens_local * m.top_k, m.d_model)
+        t_agg = (
+            3.0 * tokens_local * m.top_k * m.d_model * m.dtype_bytes
+            / self.system.xpu.hbm_bw
+        )
+        # shared experts: always on GPU, weights loadable right after router
+        t_shared_load = (
+            self.model.shared_expert_param_bytes / self.system.xpu.hbm_bw
+            if (m.n_shared and charge_weight_loads)
+            else 0.0
+        )
+        t_shared_gemm = (
+            self.gpu.grouped_gemm_time(m, np.full(m.n_shared, tokens_local))
+            if m.n_shared
+            else 0.0
+        )
+
+        dag = build_moe_layer_dag(
+            t_attn=t_attn,
+            attn_on_pim=attn_on_pim,
+            t_router=t_router,
+            t_qkv_load=t_qkv_load,
+            t_prefill_attn=t_prefill_attn,
+            t_allgather=t_allgather,
+            t_metadata=t_metadata,
+            t_dispatch=t_dispatch,
+            t_sieve=t_sieve,
+            t_load_weights=t_wload,
+            t_pim_cmds=t_pimcmd,
+            t_grouped_gemm=t_ggemm,
+            t_pim_gemv=t_pgemv,
+            t_pim_readback=t_readback,
+            t_combine=t_combine,
+            t_aggregate=t_agg,
+            t_shared_load=t_shared_load,
+            t_shared_gemm=t_shared_gemm,
+        )
+        return dag, part
+
+    def _pimoe_channel_makespan(self, counts: np.ndarray, S: np.ndarray) -> float:
+        """PIMoE runs expert parallelism across PIM stacks (paper §6.2 /
+        Fig 10): each expert is pinned to one stack (TP over that stack's 32
+        pseudo-channels), so hot experts create hot stacks."""
+        return float(self.pimoe_channel_loads(counts, S).max()) if len(S) else 0.0
+
+    def pimoe_channel_loads(self, counts: np.ndarray, S: np.ndarray) -> np.ndarray:
+        pim = self.system.pim
+        loads = np.full(pim.stacks, self.pim.expert_setup)
+        order = S[np.argsort(-counts[S], kind="stable")]
+        for e in order:
+            c = int(np.argmin(loads))
+            loads[c] += self.pim.expert_time(
+                self.model.moe, int(counts[e]), n_channels=pim.pseudo_channels_per_stack
+            )
+        return loads
+
+    # ------------------------------------------------------------------
+    def simulate_step(
+        self,
+        policy: str,
+        batch: int,
+        seq: int,
+        n_prefill: int = 0,
+        prefill_len: int = 1024,
+        n_layer_samples: int = 4,
+        cost_table: Optional[CostTable] = None,
+        warmup: int = 2,
+    ) -> StepResult:
+        """Simulate one decode step (optionally colocated with prefills)."""
+        m = self.model.moe
+        n_decode = batch - n_prefill
+        assert n_decode >= 0
+        if cost_table is None and self.pim is not None:
+            cm0 = CostModel(system=self.system, layer=m, ep_degree=self.n_gpus)
+            cost_table = CostTable(fallback=cm0.t_pim_gemv_roofline)
+
+        layer_times: List[float] = []
+        utils: Dict[str, List[float]] = {}
+        split_fracs: List[float] = []
+        # Warmup iterations populate the EMA cost table (paper §5.1: the
+        # table converges within the first few iterations) before recording.
+        for it in range(warmup + n_layer_samples):
+            record = it >= warmup
+            # sample per-half global assignments
+            per_gpu_makespans = []
+            for h in range(self.n_interleave):
+                dec_h = n_decode // self.n_interleave
+                pre_tok_h = n_prefill * prefill_len // self.n_interleave
+                moe_tokens_h = dec_h + pre_tok_h
+                counts = self.trace.sample_counts(max(moe_tokens_h, 1))
+                local = self._local_expert_counts(counts)
+                dags_h = []
+                for g in range(self.n_gpus):
+                    dag, part = self._half_layer_dag(
+                        policy,
+                        local[g],
+                        max(dec_h // self.n_gpus, 1),
+                        pre_tok_h // self.n_gpus,
+                        seq,
+                        cost_table,
+                        charge_weight_loads=(h == 0),
+                        gpu_idx=g,
+                    )
+                    if cost_table is not None and policy in (
+                        "sieve", "sieve_argmin", "pimoe", "pimoe_dynamic",
+                    ):
+                        self._observe_pim_times(cost_table, part, local[g])
+                    dags_h.append((dag, part))
+                per_gpu_makespans.append(dags_h)
+            if not record:
+                continue
+            # merge the halves per GPU, schedule, take max over GPUs
+            t_layer_gpu = []
+            for g in range(self.n_gpus):
+                merged = merge_dags(
+                    {f"h{h}": per_gpu_makespans[h][g][0] for h in range(self.n_interleave)}
+                )
+                sched = list_schedule(merged)
+                t_layer_gpu.append(sched.makespan)
+                for r in ("gpu", "pim", "link", "gpu_hbm"):
+                    utils.setdefault(r, []).append(sched.utilization(r))
+            layer_times.append(max(t_layer_gpu))
+            n_active = sum(
+                p.meta.get("n_active", 0) for _, p in per_gpu_makespans[0]
+            )
+            n_gpu_side = sum(len(p.gpu_experts) for _, p in per_gpu_makespans[0])
+            split_fracs.append(n_gpu_side / max(n_active, 1))
+
+        t_layer = float(np.mean(layer_times))
+        # LM head: memory-bound logits GEMV over the vocab (same for all
+        # policies; vocab approximated at 150k like the evaluated models).
+        lm_head_bytes = 150_000 * m.d_model * m.dtype_bytes
+        t_lm_head = lm_head_bytes / self.system.xpu.hbm_bw
+        t_step = t_layer * self.model.n_layers + t_lm_head
+
+        return StepResult(
+            policy=policy,
+            batch=batch,
+            seq=seq,
+            t_step=t_step,
+            throughput_per_gpu=n_decode / t_step / self.n_gpus,
+            interactivity=1.0 / t_step,
+            t_layer_mean=t_layer,
+            util={k: float(np.mean(v)) for k, v in utils.items()},
+            diag={
+                "gpu_expert_frac": float(np.mean(split_fracs)),
+                "cost_table_coverage": cost_table.coverage if cost_table else 0,
+            },
+        )
+
+
+def pareto_sweep(
+    model: SimModelConfig,
+    system: SystemSpec,
+    policies,
+    batches,
+    seq: int = 2048,
+    seed: int = 0,
+    **kw,
+) -> List[StepResult]:
+    out = []
+    for policy in policies:
+        sim = ServingSimulator(model, system, seed=seed)
+        table = None
+        for batch in batches:
+            res = sim.simulate_step(policy, batch, seq, cost_table=table, **kw)
+            out.append(res)
+    return out

@@ -1,0 +1,61 @@
+"""B200-class GPU performance model (paper §7.1, Duplex-style).
+
+Grouped GEMM for GPU-side experts, decode attention, dense projections.
+Compute and HBM traffic are modeled separately so the engine's DAG can
+overlap weight DMA ("gpu_hbm" resource) with MXU/tensor-core compute
+("gpu" resource).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cost_model import AttnLayerSpec, MoELayerSpec, XPUSpec
+
+
+@dataclass(frozen=True)
+class GpuModel:
+    xpu: XPUSpec
+    grouped_gemm_efficiency: float = 0.85
+    gemv_efficiency: float = 0.9  # memory-bound ops achieve ~90% of HBM bw
+
+    # -- experts -----------------------------------------------------------
+    def expert_weight_load_time(self, layer: MoELayerSpec, n_experts: int) -> float:
+        """HBM -> on-chip weight DMA for the experts executed on the GPU."""
+        return (
+            n_experts * layer.expert_param_bytes / (self.xpu.hbm_bw * self.gemv_efficiency)
+        )
+
+    def grouped_gemm_time(self, layer: MoELayerSpec, counts) -> float:
+        """Tensor-core time for grouped GEMM; rows pad to the MMA tile."""
+        counts = np.asarray(counts, dtype=np.int64)
+        counts = counts[counts > 0]
+        if counts.size == 0:
+            return 0.0
+        padded = ((counts + self.xpu.tile_m - 1) // self.xpu.tile_m) * self.xpu.tile_m
+        flops = layer.expert_flops(int(padded.sum()))
+        act_bytes = layer.token_io_bytes(int(counts.sum()))
+        t_comp = flops / (self.xpu.peak_flops * self.grouped_gemm_efficiency)
+        t_act = act_bytes / self.xpu.hbm_bw
+        return max(t_comp, t_act)
+
+    # -- attention ---------------------------------------------------------
+    def decode_attention_time(self, attn: AttnLayerSpec, batch: int, seq: int) -> float:
+        t_mem = attn.kv_bytes(batch, seq) / (self.xpu.hbm_bw * self.gemv_efficiency)
+        t_comp = attn.decode_flops(batch, seq) / self.xpu.peak_flops
+        return max(t_mem, t_comp)
+
+    def prefill_attention_time(self, attn: AttnLayerSpec, n_prefill_tokens: int) -> float:
+        """Causal self-attention over a prompt (compute-bound GEMM)."""
+        flops = 2.0 * attn.n_heads * attn.d_head * n_prefill_tokens**2  # qk + pv
+        return flops / (self.xpu.peak_flops * self.grouped_gemm_efficiency)
+
+    # -- dense projections / router -----------------------------------------
+    def dense_time(self, param_bytes: float, n_tokens: int, d_in: int) -> float:
+        flops = 2.0 * n_tokens * param_bytes / 2  # bytes/2 = n params (bf16)
+        del d_in
+        t_comp = flops / (self.xpu.peak_flops * self.grouped_gemm_efficiency)
+        t_mem = param_bytes / (self.xpu.hbm_bw * self.gemv_efficiency)
+        return max(t_comp, t_mem)

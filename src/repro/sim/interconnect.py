@@ -1,0 +1,49 @@
+"""NVLink interconnect model (paper §4 "Interconnect Model").
+
+Each GPU integrates its own HBM-PIM stacks; PIM dies are reachable *only*
+through their attached GPU.  Cross-GPU traffic (expert-parallel token
+dispatch/combine, routing-map allgather, DP gradient reduction) goes over
+NVLink with per-direction bandwidth and per-hop latency from Table 1.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.cost_model import XPUSpec
+
+
+@dataclass(frozen=True)
+class InterconnectModel:
+    xpu: XPUSpec
+    n_gpus: int
+    sw_overhead: float = 2.0e-6  # kernel launch / NCCL-style per-collective cost
+
+    def a2a_time(self, tokens_per_gpu: int, d_model: int, dtype_bytes: int = 2) -> float:
+        """All-to-all token dispatch (or combine) across the EP group."""
+        if self.n_gpus <= 1:
+            return 0.0
+        remote = tokens_per_gpu * (1.0 - 1.0 / self.n_gpus)
+        bytes_one_way = remote * d_model * dtype_bytes
+        return bytes_one_way / self.xpu.link_bw + self.xpu.link_latency + self.sw_overhead
+
+    def allgather_time(self, bytes_per_gpu: float) -> float:
+        """Ring allgather of the routing maps (paper §6.1 ③)."""
+        if self.n_gpus <= 1:
+            return 0.0
+        total = bytes_per_gpu * (self.n_gpus - 1)
+        return (
+            total / self.xpu.link_bw
+            + (self.n_gpus - 1) * self.xpu.link_latency
+            + self.sw_overhead
+        )
+
+    def allreduce_time(self, bytes_per_gpu: float) -> float:
+        if self.n_gpus <= 1:
+            return 0.0
+        total = 2.0 * bytes_per_gpu * (self.n_gpus - 1) / self.n_gpus
+        return (
+            total / self.xpu.link_bw
+            + 2 * (self.n_gpus - 1) * self.xpu.link_latency
+            + self.sw_overhead
+        )

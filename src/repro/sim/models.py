@@ -1,0 +1,82 @@
+"""Simulator model configs for the paper's evaluation (§7.1).
+
+GPT-OSS-120B and Qwen3-30B-A3B dims are public (model cards); the paper's
+Qwen3.5-397B-A17B is not public — dims are inferred from its stated expert
+count (512 routed, top-10, 1 shared) and total/active parameter budget
+(397B/17B), consistent with the Qwen3-Next scaling recipe.  Mixtral-8x22B
+and Qwen3-Next-80B-A3B are included for the Fig 3 / Fig 5 trend studies.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.cost_model import AttnLayerSpec, MoELayerSpec
+from .trace import PAPER_TRACES, TraceSpec
+
+
+@dataclass(frozen=True)
+class SimModelConfig:
+    name: str
+    n_layers: int
+    moe: MoELayerSpec
+    attn: AttnLayerSpec
+    trace: TraceSpec
+    n_gpus: int = 1
+    d_ff_dense: int = 0  # dense-FFN layers (0 = all layers are MoE)
+
+    @property
+    def router_param_bytes(self) -> int:
+        return self.moe.n_experts * self.moe.d_model * self.moe.dtype_bytes
+
+    @property
+    def shared_expert_param_bytes(self) -> int:
+        return self.moe.n_shared * self.moe.expert_param_bytes
+
+    def expert_params_total(self) -> float:
+        return (
+            self.n_layers
+            * (self.moe.n_experts + self.moe.n_shared)
+            * self.moe.expert_param_bytes
+            / self.moe.dtype_bytes
+        )
+
+
+def _cfg(
+    name, trace_key, n_layers, d_model, d_ff, n_experts, top_k, n_shared,
+    n_heads, n_kv, d_head, n_gpus,
+) -> SimModelConfig:
+    return SimModelConfig(
+        name=name,
+        n_layers=n_layers,
+        moe=MoELayerSpec(
+            d_model=d_model, d_ff=d_ff, n_experts=n_experts, top_k=top_k,
+            n_shared=n_shared,
+        ),
+        attn=AttnLayerSpec(
+            d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv, d_head=d_head
+        ),
+        trace=PAPER_TRACES[trace_key],
+        n_gpus=n_gpus,
+    )
+
+
+# Paper §7.1: 4 GPUs for GPT-OSS, 8 for Qwen3.5, 1 for Qwen3.
+SIM_MODELS = {
+    "gpt-oss-120b": _cfg(
+        "gpt-oss-120b", "gpt-oss", 36, 2880, 2880, 128, 4, 0, 64, 8, 64, n_gpus=4
+    ),
+    "qwen3.5-397b": _cfg(
+        "qwen3.5-397b", "qwen3.5", 60, 4096, 1024, 512, 10, 1, 64, 8, 128, n_gpus=8
+    ),
+    "qwen3-30b": _cfg(
+        "qwen3-30b", "qwen3", 48, 2048, 768, 128, 8, 0, 32, 4, 128, n_gpus=1
+    ),
+    # trend-study models (Fig 3 / Fig 5)
+    "mixtral-8x22b": _cfg(
+        "mixtral-8x22b", "mixtral", 56, 6144, 16384, 8, 2, 0, 48, 8, 128, n_gpus=8
+    ),
+    "qwen3-next-80b": _cfg(
+        "qwen3-next-80b", "qwen3-next", 48, 2048, 512, 512, 10, 1, 32, 4, 64, n_gpus=2
+    ),
+}

@@ -1,0 +1,67 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+Distributed-optimization trick (DESIGN.md §5): data-parallel gradient
+all-reduce is the dominant cross-pod collective in training.  Quantizing
+gradients to int8 with per-tensor scales cuts the collective bytes 4x
+(bf16→int8 halves, fp32→int8 quarters); the quantization residual is kept
+host-side and added back the next step (error feedback), which preserves
+convergence for SGD-family optimizers.
+
+Usage: wrap the grads right before (pseudo-)all-reduce:
+
+    cgrads, new_residual = compress(grads, residual)
+    # ... all-reduce cgrads.q (int8) and cgrads.scale ...
+    grads = decompress(cgrads)
+
+The compression is exercised by the trainer when
+``TrainConfig.grad_compression=True`` and tested for convergence parity in
+tests/test_train.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrads(NamedTuple):
+    q: Any  # int8 pytree
+    scale: Any  # fp32 scalar pytree
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: Any, residual: Any) -> Tuple[CompressedGrads, Any]:
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_r = g - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    qs, scales, rs = [], [], []
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    r_leaves = jax.tree_util.tree_flatten(residual)[0]
+    for g, r in zip(leaves, r_leaves):
+        q, s, nr = one(g, r)
+        qs.append(q)
+        scales.append(s)
+        rs.append(nr)
+    unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+    return CompressedGrads(unf(qs), unf(scales)), unf(rs)
+
+
+def decompress(c: CompressedGrads) -> Any:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale
+    )
+
+
+def compressed_bytes(c: CompressedGrads) -> int:
+    return sum(q.size for q in jax.tree.leaves(c.q)) + 4 * len(
+        jax.tree.leaves(c.scale)
+    )

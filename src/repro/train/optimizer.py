@@ -1,0 +1,99 @@
+"""AdamW + cosine schedule + global-norm clipping (pure JAX, no optax).
+
+Optimizer state is a pytree mirroring params (sharded identically), with
+fp32 moments regardless of param dtype (mixed-precision training).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # moment storage dtype: "float32" (default) or "bfloat16" — halving the
+    # optimizer-state HBM for 100B+ models (update math stays fp32)
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # scalar int32
+    m: Any  # fp32 pytree like params
+    v: Any  # fp32 pytree like params
+
+
+def init_opt_state(params: Any, moment_dtype=jnp.float32) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=z, v=jax.tree.map(jnp.copy, z))
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+_NO_DECAY_SUBSTRINGS = ("norm", "bias", "scale", "A_log", "dt_bias", "mix_", "w0", "u")
+
+
+def _decay_mask(path) -> bool:
+    name = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+    return not any(s in name for s in _NO_DECAY_SUBSTRINGS)
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: OptState):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    new_m = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g).astype(mdt),
+        state.m, grads,
+    )
+    new_v = jax.tree.map(
+        lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * g * g).astype(mdt),
+        state.v, grads,
+    )
+
+    def upd(path, p, m, v):
+        mhat = m.astype(jnp.float32) / bc1
+        vhat = v.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(upd, params, new_m, new_v)
+    return new_params, OptState(step, new_m, new_v), {"grad_norm": gn, "lr": lr}

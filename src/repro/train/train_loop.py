@@ -1,0 +1,114 @@
+"""Training loop: jit'd train_step with microbatching, remat, sharding.
+
+``make_train_step`` builds the compiled step used by both the launcher
+(launch/train.py) and the multi-pod dry-run:
+
+    loss, grads = value_and_grad(lm.loss)        # remat inside the stack
+    grads = psum over data axes (GSPMD via sharded batch)
+    optional int8 error-feedback compression on the DP reduce
+    params, opt = adamw_update(...)
+
+Microbatching: the global batch is split into ``n_microbatches`` slices
+scanned with gradient accumulation (fp32 accumulators) — numerically equal
+to the full-batch gradient (tests/test_train.py asserts this).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+from . import compression
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    n_microbatches: int = 1
+    grad_compression: bool = False
+
+
+def _microbatched_grads(lm: LM, params, batch, n_micro: int):
+    """Accumulate grads over microbatch slices; equals full-batch grads."""
+    loss_fn = lambda p, b: lm.loss(p, b)
+
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    B = jax.tree.leaves(batch)[0].shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    mb = B // n_micro
+
+    def slice_mb(i):
+        def s(x):
+            if x.ndim >= 1 and x.shape[0] == B:
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+            if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] == B:  # mrope
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=1)
+            return x
+
+        return jax.tree.map(s, batch)
+
+    # Unrolled accumulation: XLA reuses the per-microbatch temporaries
+    # across the sequential segments (a lax.scan formulation pathologically
+    # multiplies the while-body buffer assignment instead).
+    acc = None
+    loss_sum = jnp.zeros((), jnp.float32)
+    metrics = None
+    for i in range(n_micro):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, slice_mb(jnp.asarray(i))
+        )
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        acc = g32 if acc is None else jax.tree.map(jnp.add, acc, g32)
+        loss_sum = loss_sum + loss
+    grads = jax.tree.map(lambda a: a / n_micro, acc)
+    return loss_sum / n_micro, metrics, grads
+
+
+def make_train_step(
+    lm: LM, cfg: TrainConfig
+) -> Callable[[Any, OptState, Dict[str, jax.Array], Any], Tuple]:
+    """Returns train_step(params, opt_state, batch, residual) ->
+    (params, opt_state, residual, metrics)."""
+
+    def train_step(params, opt_state, batch, residual):
+        loss, metrics, grads = _microbatched_grads(
+            lm, params, batch, cfg.n_microbatches
+        )
+        if cfg.grad_compression:
+            # quantize before the (GSPMD-inserted) DP all-reduce; the
+            # residual carries the quantization error to the next step.
+            cgrads, residual = compression.compress(grads, residual)
+            grads = compression.decompress(cgrads)
+        params, opt_state, opt_metrics = adamw_update(
+            cfg.opt, params, grads, opt_state
+        )
+        out_metrics = {
+            "loss": loss,
+            "ce": metrics["ce"],
+            "moe_aux": metrics["aux"].moe_aux,
+            "dropped": metrics["aux"].dropped,
+            **opt_metrics,
+        }
+        return params, opt_state, residual, out_metrics
+
+    return train_step
+
+
+def init_train_state(lm: LM, key, cfg: TrainConfig):
+    params = lm.init(key)
+    opt_state = init_opt_state(params, jnp.dtype(cfg.opt.moment_dtype))
+    residual = (
+        compression.init_residual(params) if cfg.grad_compression else jnp.zeros(())
+    )
+    return params, opt_state, residual

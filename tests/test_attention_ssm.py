@@ -1,0 +1,190 @@
+"""Attention + SSM component-level numerics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AttnConfig, MLAConfig, SSMConfig
+from repro.models.attention import (
+    decode_attention_ref,
+    flash_attention,
+    init_mla,
+    mla_decode,
+    mla_prefill,
+)
+from repro.models.layers import apply_mrope, apply_rope
+from repro.models.ssm import (
+    init_mamba2,
+    init_rwkv6,
+    mamba2_init_state,
+    mamba2_seq,
+    mamba2_step,
+    rwkv6_init_state,
+    rwkv6_time_mix_seq,
+)
+
+
+def naive_attention(q, k, v, causal):
+    B, S, H, dh = q.shape
+    G = H // k.shape[2]
+    kf = jnp.repeat(k, G, 2) if G > 1 else k
+    vf = jnp.repeat(v, G, 2) if G > 1 else v
+    s = jnp.einsum("bqhd,bthd->bhqt", q, kf) / np.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, k.shape[1]), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    return jnp.einsum("bhqt,bthd->bqhd", jax.nn.softmax(s, -1), vf)
+
+
+class TestFlash:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("B,S,H,K,dh,qc,kc", [
+        (2, 32, 8, 2, 16, 8, 8),
+        (1, 64, 4, 4, 32, 16, 32),
+        (3, 16, 6, 3, 8, 16, 4),
+    ])
+    def test_matches_naive(self, causal, B, S, H, K, dh, qc, kc):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, dh))
+        k = jax.random.normal(ks[1], (B, S, K, dh))
+        v = jax.random.normal(ks[2], (B, S, K, dh))
+        out = flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+        exp = naive_attention(q, k, v, causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-4, atol=1e-5)
+
+    def test_chunk_size_invariance(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (2, 64, 4, 16))
+        k = jax.random.normal(ks[1], (2, 64, 2, 16))
+        v = jax.random.normal(ks[2], (2, 64, 2, 16))
+        a = flash_attention(q, k, v, q_chunk=8, kv_chunk=8)
+        b = flash_attention(q, k, v, q_chunk=32, kv_chunk=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        y = apply_rope(x, pos, 1e4)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        d = 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+        def dot(m, n):
+            qm = apply_rope(q, jnp.full((1, 1), m), 1e4)
+            kn = apply_rope(k, jnp.full((1, 1), n), 1e4)
+            return float(jnp.sum(qm * kn))
+
+        assert dot(3, 1) == pytest.approx(dot(7, 5), rel=1e-4)
+
+    def test_mrope_equals_rope_for_text_tokens(self):
+        """Identical t/h/w positions reduce M-RoPE to standard RoPE."""
+        d = 32
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, d))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        mpos = jnp.stack([pos, pos, pos])
+        a = apply_mrope(x, mpos, 1e4, (8, 4, 4))
+        b = apply_rope(x, pos, 1e4)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+class TestMLA:
+    def test_prefill_decode_agree(self):
+        cfg = AttnConfig(
+            kind="mla", n_heads=4, n_kv_heads=4, d_head=16,
+            mla=MLAConfig(q_lora_rank=32, kv_lora_rank=24, qk_nope_dim=16,
+                          qk_rope_dim=8, v_head_dim=16),
+        )
+        d = 64
+        p = init_mla(jax.random.PRNGKey(0), cfg, d, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        y_pf, ckv, kr = mla_prefill(p, x, pos, cfg, q_chunk=4, kv_chunk=4)
+
+        B, T = 2, 8
+        cache_ckv = jnp.zeros((B, T, 24))
+        cache_kr = jnp.zeros((B, T, 8))
+        outs = []
+        for t in range(T):
+            y, cache_ckv, cache_kr = mla_decode(
+                p, x[:, t : t + 1], jnp.full((B,), t, jnp.int32),
+                cache_ckv, cache_kr, cfg,
+            )
+            outs.append(y)
+        y_dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_pf), np.asarray(y_dec), rtol=1e-3, atol=1e-4
+        )
+        # compressed cache matches the prefill path's
+        np.testing.assert_allclose(np.asarray(ckv), np.asarray(cache_ckv), rtol=1e-5, atol=1e-6)
+
+
+class TestMamba2:
+    def test_chunked_equals_stepwise(self):
+        cfg = SSMConfig(kind="mamba2", d_state=8, head_dim=8, expand=2, conv_width=4)
+        d = 32
+        p = init_mamba2(jax.random.PRNGKey(0), d, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d)) * 0.5
+        y_seq, st_seq = mamba2_seq(p, x, cfg)
+        st = mamba2_init_state(2, d, cfg, jnp.float32)
+        ys = []
+        for t in range(12):
+            y, st = mamba2_step(p, x[:, t : t + 1], cfg, st)
+            ys.append(y)
+        y_step = jnp.concatenate(ys, 1)
+        np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_step), rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st_seq.ssm), np.asarray(st.ssm), rtol=2e-3, atol=2e-4)
+
+    def test_chunk_boundary_invariance(self):
+        cfg = SSMConfig(kind="mamba2", d_state=8, head_dim=8)
+        d = 32
+        p = init_mamba2(jax.random.PRNGKey(0), d, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, d)) * 0.5
+        y_full, _ = mamba2_seq(p, x, cfg)
+        # split into two halves carrying state
+        y1, st = mamba2_seq(p, x[:, :8], cfg)
+        y2, _ = mamba2_seq(p, x[:, 8:], cfg, st)
+        np.testing.assert_allclose(
+            np.asarray(y_full), np.asarray(jnp.concatenate([y1, y2], 1)),
+            rtol=2e-3, atol=2e-4,
+        )
+
+
+class TestRWKV6:
+    def test_seq_equals_stepwise(self):
+        cfg = SSMConfig(kind="rwkv6", head_dim=8, decay_lora=8)
+        d = 32
+        p = init_rwkv6(jax.random.PRNGKey(0), d, 64, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, d)) * 0.5
+        st0 = rwkv6_init_state(2, d, cfg, jnp.float32)
+        y_seq, st_seq = rwkv6_time_mix_seq(p, x, cfg, st0)
+        st = rwkv6_init_state(2, d, cfg, jnp.float32)
+        ys = []
+        for t in range(10):
+            y, st = rwkv6_time_mix_seq(p, x[:, t : t + 1], cfg, st)
+            ys.append(y)
+        np.testing.assert_allclose(
+            np.asarray(y_seq), np.asarray(jnp.concatenate(ys, 1)), rtol=1e-4, atol=1e-5
+        )
+        np.testing.assert_allclose(np.asarray(st_seq.wkv), np.asarray(st.wkv), rtol=1e-4, atol=1e-5)
+
+    def test_decay_bounds(self):
+        """Data-dependent decay stays in (0, 1) — state cannot explode."""
+        cfg = SSMConfig(kind="rwkv6", head_dim=8, decay_lora=8)
+        d = 32
+        p = init_rwkv6(jax.random.PRNGKey(0), d, 64, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, d)) * 3.0
+        st = rwkv6_init_state(1, d, cfg, jnp.float32)
+        _, st = rwkv6_time_mix_seq(p, x, cfg, st)
+        assert bool(jnp.all(jnp.isfinite(st.wkv)))

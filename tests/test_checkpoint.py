@@ -1,0 +1,138 @@
+"""Checkpointing: roundtrip, crash consistency, integrity, elastic restore,
+fault-tolerant driver, straggler monitor."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    wait_for_async_saves,
+)
+from repro.train.fault_tolerance import (
+    DriverConfig,
+    FaultTolerantDriver,
+    StragglerMonitor,
+    TrainingAborted,
+    elastic_plan,
+)
+
+
+def tree():
+    return {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.int32), "d": jnp.zeros((2, 2), jnp.bfloat16)},
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip_bitexact(self, tmp_path):
+        t = tree()
+        save_checkpoint(str(tmp_path), 3, t)
+        r = restore_checkpoint(str(tmp_path), 3, jax.eval_shape(lambda: t))
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_step_ignores_uncommitted(self, tmp_path):
+        t = tree()
+        save_checkpoint(str(tmp_path), 1, t)
+        # simulate a crash mid-write at step 2 (no commit marker)
+        save_checkpoint(str(tmp_path), 2, t, _fault_injection=1)
+        assert latest_step(str(tmp_path)) == 1
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(str(tmp_path), 2, jax.eval_shape(lambda: t))
+
+    def test_integrity_verification(self, tmp_path):
+        t = tree()
+        d = save_checkpoint(str(tmp_path), 5, t)
+        # corrupt a leaf
+        leaf = os.path.join(d, "leaf_00000.npy")
+        arr = np.load(leaf)
+        arr.ravel()[0] += 1
+        np.save(leaf, arr)
+        with pytest.raises(IOError):
+            restore_checkpoint(str(tmp_path), 5, jax.eval_shape(lambda: t))
+
+    def test_async_save(self, tmp_path):
+        t = tree()
+        save_checkpoint(str(tmp_path), 7, t, async_write=True)
+        wait_for_async_saves()
+        assert latest_step(str(tmp_path)) == 7
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"a": jnp.ones((3,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(
+                str(tmp_path), 1, jax.eval_shape(lambda: {"a": jnp.ones((4,))})
+            )
+
+
+class TestFaultTolerantDriver:
+    def _step_fn(self, state, step):
+        return {"x": state["x"] + 1}, {"loss": float(step)}
+
+    def test_restart_from_latest(self, tmp_path):
+        cfg = DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=2, max_restarts=3)
+        drv = FaultTolerantDriver(self._step_fn, cfg)
+        state, hist = drv.run(
+            {"x": jnp.zeros(())}, 10,
+            inject_failure_at={5: RuntimeError("node failure")},
+        )
+        assert float(state["x"]) == 10.0  # deterministic step fn recovers
+        assert drv.restarts == 1
+        events = [h for h in hist if h.get("event") == "restart"]
+        assert len(events) == 1
+
+    def test_bounded_restarts(self, tmp_path):
+        cfg = DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=100, max_restarts=1)
+
+        def bad_step(state, step):
+            raise RuntimeError("always fails")
+
+        drv = FaultTolerantDriver(bad_step, cfg)
+        with pytest.raises(TrainingAborted):
+            drv.run({"x": jnp.zeros(())}, 5)
+
+
+class TestStraggler:
+    def test_detects_spikes(self):
+        mon = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=2)
+        flags = [mon.observe(i, 0.1) for i in range(5)]
+        assert not any(flags)
+        assert mon.observe(5, 0.5)  # 5x spike
+        assert not mon.observe(6, 0.1)  # EMA not polluted by the spike
+
+
+class TestElastic:
+    def test_plan_shapes(self):
+        p = elastic_plan(512, model_parallel=16, prefer_pods=2)
+        assert p["mesh_shape"] == (2, 16, 16)
+        p = elastic_plan(256, model_parallel=16)
+        assert p["mesh_shape"] == (16, 16)
+        # degraded world after losing a host group
+        p = elastic_plan(240, model_parallel=16)
+        assert p["mesh_shape"] == (15, 16)
+        with pytest.raises(ValueError):
+            elastic_plan(250, model_parallel=16)
+
+    def test_restore_onto_different_topology(self, tmp_path):
+        """Elastic reshard-on-load: save plain, restore with shardings from
+        a (1-device) mesh — the mechanism used when the world size changes."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        t = {"w": jnp.arange(16.0).reshape(4, 4)}
+        save_checkpoint(str(tmp_path), 1, t)
+        mesh = jax.make_mesh(
+            (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+        )
+        sh = {"w": NamedSharding(mesh, P("model", None))}
+        r = restore_checkpoint(
+            str(tmp_path), 1, jax.eval_shape(lambda: t), shardings=sh
+        )
+        np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+        assert r["w"].sharding == sh["w"]

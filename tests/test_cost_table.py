@@ -1,0 +1,60 @@
+"""EMA cost table tests (paper §5.1 timing models)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CostModel, CostTable, MoELayerSpec, b200_pim_system
+
+LAYER = MoELayerSpec(d_model=2048, d_ff=768, n_experts=128, top_k=8)
+
+
+def make_table(alpha=0.25):
+    cm = CostModel(system=b200_pim_system(), layer=LAYER)
+    return CostTable(fallback=cm.t_pim_gemv_roofline, alpha=alpha), cm
+
+
+def test_fallback_used_until_first_observation():
+    table, cm = make_table()
+    assert table.lookup(3) == pytest.approx(cm.t_pim_gemv_roofline(3))
+    assert table.n_fallback_lookups == 1
+    table.update(3, 5e-6)
+    assert table.lookup(3) == pytest.approx(5e-6)  # first obs replaces
+
+
+def test_ema_converges_to_stationary_value():
+    table, _ = make_table(alpha=0.3)
+    for _ in range(50):
+        table.update(2, 7e-6)
+    assert table.lookup(2) == pytest.approx(7e-6, rel=1e-6)
+
+
+@given(
+    obs=st.lists(
+        st.floats(min_value=1e-7, max_value=1e-3), min_size=2, max_size=40
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_ema_stays_within_observed_range(obs):
+    table, _ = make_table(alpha=0.25)
+    for t in obs:
+        table.update(4, t)
+    assert min(obs) - 1e-15 <= table.lookup(4) <= max(obs) + 1e-15
+
+
+def test_state_dict_roundtrip():
+    table, cm = make_table()
+    table.update(1, 1e-6)
+    table.update(5, 9e-6)
+    st_ = table.state_dict()
+    table2 = CostTable(fallback=cm.t_pim_gemv_roofline)
+    table2.load_state_dict(st_)
+    assert table2.lookup(1) == pytest.approx(1e-6)
+    assert table2.coverage == 2
+
+
+def test_rejects_bad_inputs():
+    table, cm = make_table()
+    with pytest.raises(ValueError):
+        CostTable(fallback=cm.t_pim_gemv_roofline, alpha=0.0)
+    with pytest.raises(ValueError):
+        table.update(1, -1.0)

@@ -1,0 +1,62 @@
+"""Data pipeline: determinism, sharding, packing, prefetch."""
+
+import numpy as np
+
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+
+
+def cfg(**kw):
+    base = dict(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_across_instances():
+    a = SyntheticLM(cfg()).batch(5)
+    b = SyntheticLM(cfg()).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_steps_differ():
+    d = SyntheticLM(cfg())
+    assert not np.array_equal(d.batch(0)["tokens"], d.batch(1)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLM(cfg())
+    b = d.batch(0)
+    # tokens and labels come from one packed stream, shifted by one
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_partitions_batch():
+    full = SyntheticLM(cfg(), shard_id=0, n_shards=1)
+    s0 = SyntheticLM(cfg(), shard_id=0, n_shards=2)
+    s1 = SyntheticLM(cfg(), shard_id=1, n_shards=2)
+    assert s0.batch(0)["tokens"].shape[0] == 4
+    assert s1.batch(0)["tokens"].shape[0] == 4
+    # shards are distinct streams
+    assert not np.array_equal(s0.batch(0)["tokens"], s1.batch(0)["tokens"])
+
+
+def test_tokens_in_range():
+    b = SyntheticLM(cfg()).batch(2)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < 1000
+
+
+def test_learnable_structure():
+    """Markov copies create repeated tokens (loss can go below unigram)."""
+    b = SyntheticLM(cfg(markov_p=0.5)).batch(0)
+    t = b["tokens"][0]
+    rep = np.mean([t[i] in t[max(0, i - 8) : i] for i in range(1, len(t))])
+    assert rep > 0.3
+
+
+def test_prefetcher_preserves_order():
+    d = SyntheticLM(cfg())
+    pf = Prefetcher(iter(d), put_fn=lambda b: b, depth=2)
+    got = [next(pf) for _ in range(3)]
+    for i, g in enumerate(got):
+        np.testing.assert_array_equal(g["tokens"], d.batch(i)["tokens"])
+    pf.close()

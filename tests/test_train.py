@@ -1,0 +1,115 @@
+"""Training substrate tests: grads, optimizer, compression, convergence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.data import DataConfig, SyntheticLM
+from repro.models import LM
+from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.train.compression import compress, decompress, init_residual
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from repro.train.train_loop import _microbatched_grads
+
+
+def tiny_lm():
+    arch = get_arch("qwen1.5-0.5b").reduced()
+    return LM(arch, dtype=jnp.float32), arch
+
+
+class TestGradients:
+    def test_microbatched_equals_full_batch(self):
+        lm, arch = tiny_lm()
+        params = lm.init(jax.random.PRNGKey(0))
+        t = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, arch.vocab_size)
+        batch = {"tokens": t, "labels": t}
+        _, _, g1 = jax.jit(lambda p, b: _microbatched_grads(lm, p, b, 1))(params, batch)
+        _, _, g4 = jax.jit(lambda p, b: _microbatched_grads(lm, p, b, 4))(params, batch)
+        err = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b))), g1, g4
+        )
+        assert max(jax.tree.leaves(err)) < 1e-4
+
+
+class TestOptimizer:
+    def test_lr_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+        assert float(lr_schedule(cfg, jnp.asarray(0))) == pytest.approx(0.0)
+        assert float(lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=0.01)
+        assert float(lr_schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1, rel=0.01)
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(grad_clip=1.0)
+        params = {"w": jnp.ones((4,))}
+        grads = {"w": jnp.full((4,), 100.0)}
+        state = init_opt_state(params)
+        _, _, m = adamw_update(cfg, params, grads, state)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_no_decay_on_norm_params(self):
+        cfg = AdamWConfig(lr=1e-2, weight_decay=1.0, b1=0.0, b2=0.0, eps=1.0)
+        params = {"w": jnp.ones((2,)), "norm_scale": jnp.ones((2,))}
+        grads = {"w": jnp.zeros((2,)), "norm_scale": jnp.zeros((2,))}
+        new, _, _ = adamw_update(cfg, params, grads, init_opt_state(params))
+        assert float(new["w"][0]) < 1.0  # decayed
+        assert float(new["norm_scale"][0]) == pytest.approx(1.0)  # not decayed
+
+
+class TestCompression:
+    def test_error_feedback_preserves_mean_signal(self):
+        grads = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)))}
+        residual = init_residual(grads)
+        acc_true = jnp.zeros((64,))
+        acc_q = jnp.zeros((64,))
+        for _ in range(50):
+            c, residual = compress(grads, residual)
+            acc_q = acc_q + decompress(c)["w"]
+            acc_true = acc_true + grads["w"]
+        # error feedback: accumulated quantized sum tracks the true sum
+        rel = float(jnp.linalg.norm(acc_q - acc_true) / jnp.linalg.norm(acc_true))
+        assert rel < 0.01
+
+    def test_compression_ratio(self):
+        from repro.train.compression import compressed_bytes
+
+        grads = {"w": jnp.zeros((1024, 128), jnp.float32)}
+        c, _ = compress(grads, init_residual(grads))
+        assert compressed_bytes(c) < 1024 * 128 * 4 / 3.9
+
+    def test_training_with_compression_converges(self):
+        lm, arch = tiny_lm()
+        data = SyntheticLM(DataConfig(vocab_size=arch.vocab_size, seq_len=32, global_batch=8))
+        losses = {}
+        for comp in (False, True):
+            tc = TrainConfig(
+                opt=AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=40),
+                grad_compression=comp,
+            )
+            params, opt, res = init_train_state(lm, jax.random.PRNGKey(0), tc)
+            step = jax.jit(make_train_step(lm, tc))
+            ls = []
+            for i in range(25):
+                b = jax.tree.map(jnp.asarray, data.batch(i))
+                params, opt, res, m = step(params, opt, b, res)
+                ls.append(float(m["loss"]))
+            losses[comp] = ls
+        assert losses[False][-1] < losses[False][0] * 0.9
+        # compression keeps convergence within 5%
+        assert losses[True][-1] < losses[False][-1] * 1.05 + 0.05
+
+
+def test_loss_decreases_end_to_end():
+    lm, arch = tiny_lm()
+    tc = TrainConfig(opt=AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=50),
+                     n_microbatches=2)
+    params, opt, res = init_train_state(lm, jax.random.PRNGKey(0), tc)
+    step = jax.jit(make_train_step(lm, tc))
+    data = SyntheticLM(DataConfig(vocab_size=arch.vocab_size, seq_len=32, global_batch=8))
+    losses = []
+    for i in range(30):
+        b = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt, res, m = step(params, opt, b, res)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.85
