@@ -1,0 +1,160 @@
+"""Max-QPS-under-SLO cluster sweep: arrival rate × router × replica count.
+
+For each expert-placement policy (sieve / gpu_only / pimoe) this drives
+the request-level cluster simulator over a grid of Poisson arrival rates
+and reports TTFT/TPOT/E2E percentiles, goodput, and utilization per
+(policy, router, replica count, rate) point, plus the *knee*: the highest
+arrival rate whose p99 TPOT stays within the SLO.  This is the
+cluster-scale version of the paper's throughput/interactivity Pareto —
+the number that matters for production serving is where the knee sits,
+not one step's makespan.
+
+Run:  PYTHONPATH=src python benchmarks/cluster_bench.py --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.core import b200_pim_system
+from repro.cluster import (
+    ROUTER_POLICIES,
+    SLO,
+    ClusterSimulator,
+    LengthModel,
+    PoissonProcess,
+    max_rate_under_slo,
+)
+from repro.sim import SIM_MODELS
+
+POLICIES = ("sieve", "gpu_only", "pimoe")
+
+
+def run_point(
+    model, policy, router, n_replicas, rate, horizon, lengths, slo, seed
+):
+    cs = ClusterSimulator(
+        SIM_MODELS[model],
+        b200_pim_system(),
+        policy=policy,
+        n_replicas=n_replicas,
+        router_policy=router,
+        seed=seed,
+    )
+    arr = PoissonProcess(rate=rate, lengths=lengths, seed=seed + 7)
+    res = cs.run(arr, horizon)
+    rep = res.report(slo)
+    rep.update(
+        policy=policy,
+        router=router,
+        n_replicas=n_replicas,
+        arrival_rate=rate,
+    )
+    return rep
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="qwen3-30b", choices=sorted(SIM_MODELS))
+    ap.add_argument("--quick", action="store_true", help="CPU-friendly sweep (<5 min)")
+    ap.add_argument("--horizon", type=float, default=None, help="trace seconds")
+    ap.add_argument("--slo-tpot", type=float, default=0.02, help="p99 TPOT SLO (s)")
+    ap.add_argument("--slo-ttft", type=float, default=2.0, help="TTFT SLO (s)")
+    ap.add_argument("--replicas", type=int, nargs="+", default=None)
+    ap.add_argument("--routers", nargs="+", default=None, choices=ROUTER_POLICIES)
+    ap.add_argument(
+        "--rates", type=float, nargs="+", default=None,
+        help="per-replica arrival rates (req/s); scaled by replica count",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join("benchmarks", "out", "cluster_bench.json"))
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        horizon = args.horizon or 3.0
+        rates = args.rates or [20.0, 35.0, 60.0, 100.0, 150.0]
+        replicas = args.replicas or [2]
+        routers = args.routers or ["round_robin", "jsq"]
+    else:
+        horizon = args.horizon or 10.0
+        rates = args.rates or [10.0, 20.0, 35.0, 60.0, 100.0, 150.0, 220.0]
+        replicas = args.replicas or [1, 2, 4]
+        routers = args.routers or ["round_robin", "jsq", "least_kv"]
+
+    lengths = LengthModel(kind="lognormal", prompt_mean=512, output_mean=64)
+    slo = SLO(ttft=args.slo_ttft, tpot=args.slo_tpot)
+
+    results = []
+    knees: dict = {}
+    knees_full: dict = {}
+    t0 = time.perf_counter()
+    for policy in POLICIES:
+        for router in routers:
+            for n_rep in replicas:
+                by_rate = {}
+                for rate_per_rep in rates:
+                    rate = rate_per_rep * n_rep
+                    rep = run_point(
+                        args.model, policy, router, n_rep, rate,
+                        horizon, lengths, slo, args.seed,
+                    )
+                    results.append(rep)
+                    if rep["n_completed"] == 0:
+                        # no arrivals before the horizon at this point —
+                        # nothing to rank; leave it out of the knee search
+                        print(
+                            f"{policy:9s} {router:12s} x{n_rep} "
+                            f"rate={rate:7.1f} (no completions)",
+                            file=sys.stderr,
+                        )
+                        continue
+                    by_rate[rate] = rep
+                    print(
+                        f"{policy:9s} {router:12s} x{n_rep} rate={rate:7.1f} "
+                        f"ttft_p99={rep['ttft']['p99']:.3f}s "
+                        f"tpot_p99={rep['tpot']['p99'] * 1e3:.1f}ms "
+                        f"goodput={rep.get('goodput_rps', 0.0):.1f}rps",
+                        file=sys.stderr,
+                    )
+                knee = max_rate_under_slo(by_rate, slo, metric="tpot", q="p99")
+                knees.setdefault(policy, {})[f"{router}-x{n_rep}"] = knee
+                # stricter knee: TTFT and TPOT must both hold (an
+                # overloaded cluster keeps TPOT bounded — the backlog
+                # shows up in TTFT)
+                full = [
+                    r for r, rep in by_rate.items()
+                    if rep["tpot"]["p99"] <= slo.tpot
+                    and rep["ttft"]["p99"] <= slo.ttft
+                ]
+                knees_full.setdefault(policy, {})[f"{router}-x{n_rep}"] = (
+                    max(full) if full else 0.0
+                )
+
+    # headline: best knee per policy across routers/replica counts
+    headline = {p: max(v.values()) for p, v in knees.items()}
+    report = {
+        "model": args.model,
+        "slo": {"ttft": args.slo_ttft, "tpot": args.slo_tpot},
+        "horizon": horizon,
+        "wall_time_s": time.perf_counter() - t0,
+        "results": results,
+        "max_rate_under_slo": knees,
+        "max_rate_under_full_slo": knees_full,
+        "max_rate_under_slo_best": headline,
+    }
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out} ({time.perf_counter() - t0:.1f}s)", file=sys.stderr)
+    print(json.dumps(headline, indent=1))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Narrative cluster run: bursty traffic against a multi-replica Sieve
+deployment.
+
+A 2-replica Qwen3-30B cluster is hit with Markov-modulated (bursty)
+arrivals — calm traffic punctuated by 4x bursts, lognormal prompt/output
+lengths — and we watch how the request-level numbers (TTFT/TPOT tails,
+queueing delay, goodput) respond:
+
+  1. the same offered load is served with round-robin vs join-shortest-
+     queue routing (bursts + heavy-tailed prompts punish load-oblivious
+     dispatch);
+  2. the best router is then compared across expert-placement policies
+     (sieve vs gpu_only): faster steps translate into a deeper burst
+     absorbed before the SLO breaks.
+
+Run:  PYTHONPATH=src python examples/cluster_serve.py
+"""
+
+from repro.core import b200_pim_system
+from repro.cluster import (
+    SLO,
+    ClusterSimulator,
+    LengthModel,
+    MMPPProcess,
+    ClusterRequest,  # noqa: F401  (re-exported for interactive poking)
+)
+from repro.sim import SIM_MODELS
+
+MODEL = "qwen3-30b"
+HORIZON = 4.0
+SLO_TARGET = SLO(ttft=1.0, tpot=0.02)
+
+
+def bursty_arrivals(seed: int = 0) -> MMPPProcess:
+    return MMPPProcess(
+        rate_calm=60.0,
+        rate_burst=240.0,
+        mean_dwell_calm=1.0,
+        mean_dwell_burst=0.4,
+        lengths=LengthModel(
+            kind="lognormal", prompt_mean=512, prompt_sigma=1.0, output_mean=64
+        ),
+        seed=seed,
+    )
+
+
+def run(policy: str, router: str) -> dict:
+    cs = ClusterSimulator(
+        SIM_MODELS[MODEL],
+        b200_pim_system(),
+        policy=policy,
+        n_replicas=2,
+        router_policy=router,
+        seed=0,
+    )
+    res = cs.run(bursty_arrivals(), HORIZON)
+    return res.report(SLO_TARGET)
+
+
+def show(tag: str, rep: dict) -> None:
+    print(
+        f"  {tag:22s} ttft p50/p99 = {rep['ttft']['p50']:.3f}/{rep['ttft']['p99']:.3f}s"
+        f"   tpot p99 = {rep['tpot']['p99'] * 1e3:5.1f}ms"
+        f"   queue p99 = {rep['queue_delay']['p99']:.3f}s"
+        f"   goodput = {rep['goodput_rps']:6.1f} rps"
+        f"   slo-att = {rep['slo_attainment'] * 100:5.1f}%"
+    )
+
+
+def main() -> None:
+    arr = bursty_arrivals()
+    print(
+        f"bursty MMPP traffic: mean rate ≈ {arr.mean_rate:.0f} req/s "
+        f"(calm {arr.rates[0]:.0f}, bursts {arr.rates[1]:.0f}) over {HORIZON:.0f}s, "
+        f"2 replicas of {MODEL}"
+    )
+
+    print("\n-- router comparison (policy = sieve) --")
+    reports = {}
+    for router in ("round_robin", "jsq", "least_kv"):
+        reports[router] = run("sieve", router)
+        show(router, reports[router])
+
+    best = min(reports, key=lambda r: reports[r]["ttft"]["p99"])
+    print(f"\n-- placement-policy comparison (router = {best}) --")
+    show(f"sieve + {best}", reports[best])
+    for policy in ("gpu_only", "pimoe"):
+        show(f"{policy} + {best}", run(policy, best))
+
+    print(
+        "\nSieve's faster steps drain the burst backlog sooner: the same"
+        "\ntraffic that saturates the baselines stays within the SLO."
+    )
+
+
+if __name__ == "__main__":
+    main()

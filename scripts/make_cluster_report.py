@@ -1,0 +1,38 @@
+"""Regenerate the cluster benchmark JSON (benchmarks/out/cluster_bench.json).
+
+Thin wrapper over benchmarks/cluster_bench.py so CI and developers share
+one entry point:
+
+    PYTHONPATH=src python scripts/make_cluster_report.py          # quick
+    PYTHONPATH=src python scripts/make_cluster_report.py --full   # full sweep
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.cluster_bench import main as bench_main  # noqa: E402
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if "--full" in argv:
+        argv.remove("--full")
+    else:
+        argv = ["--quick"] + argv
+    report = bench_main(argv)
+    best = report["max_rate_under_slo_best"]
+    sieve, rest = best.get("sieve", 0.0), {
+        k: v for k, v in best.items() if k != "sieve"
+    }
+    if rest and sieve <= max(rest.values()):
+        print(
+            f"WARNING: sieve knee {sieve} not above baselines {rest}",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

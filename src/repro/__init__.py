@@ -1,0 +1,43 @@
+"""Reproduction of "Sieve: Dynamic Expert-Aware PIM Acceleration for
+Evolving Mixture-of-Experts Models" grown toward a production-scale
+serving system.
+
+Subpackages (imported lazily — ``repro.models``/``repro.serving`` pull in
+jax, which the pure-numpy simulator layers don't need):
+
+* ``repro.core``    — cost models, scheduler, DAG/overlap engine
+* ``repro.sim``     — cycle-approximate per-step serving simulator
+* ``repro.cluster`` — request-level cluster simulator (arrivals, SLOs,
+                      multi-replica routing)
+* ``repro.models``  — jax/pallas model implementations
+* ``repro.serving`` — live continuous-batching engine
+* ``repro.kernels`` — Pallas TPU kernels
+"""
+
+import importlib
+
+__version__ = "0.1.0"
+
+_SUBPACKAGES = (
+    "cluster",
+    "configs",
+    "core",
+    "data",
+    "kernels",
+    "launch",
+    "models",
+    "roofline",
+    "serving",
+    "sim",
+    "train",
+)
+
+
+def __getattr__(name):
+    if name in _SUBPACKAGES:
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SUBPACKAGES))

@@ -1,0 +1,31 @@
+"""Cluster-scale request-level serving simulator over Sieve.
+
+Composes the per-step cost model (:mod:`repro.sim`) with request
+lifecycles: open-loop arrival processes, continuous-batching replicas,
+multi-replica routing, and SLO metrics (TTFT/TPOT/E2E percentiles,
+goodput).  See ``benchmarks/cluster_bench.py`` for the max-QPS-under-SLO
+sweep and ``examples/cluster_serve.py`` for a narrative run.
+"""
+
+from .arrivals import (  # noqa: F401
+    ArrivalProcess,
+    LengthModel,
+    MMPPProcess,
+    PoissonProcess,
+    RequestSpec,
+    TraceReplay,
+)
+from .metrics import (  # noqa: F401
+    SLO,
+    max_rate_under_slo,
+    meets_slo,
+    percentiles,
+    request_e2e,
+    request_queue_delay,
+    request_tpot,
+    request_ttft,
+    summarize,
+)
+from .replica import ClusterRequest, Replica, ReplicaConfig  # noqa: F401
+from .router import ROUTER_POLICIES, Router  # noqa: F401
+from .simulator import ClusterResult, ClusterSimulator  # noqa: F401

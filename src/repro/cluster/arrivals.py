@@ -1,0 +1,212 @@
+"""Open-loop request arrival processes for the cluster simulator.
+
+The paper evaluates one steady-state decode step; a production cluster is
+decided by tail latency under *open-loop* traffic — requests arrive on
+their own clock whether or not the system keeps up.  This module provides
+the seeded arrival generators the NeuPIMs-lineage simulators drive their
+evaluations with:
+
+* :class:`PoissonProcess` — memoryless baseline traffic at a fixed rate;
+* :class:`MMPPProcess` — 2-state Markov-modulated Poisson (bursty traffic:
+  a calm state and a burst state with exponentially distributed dwell
+  times), the standard model for the diurnal/bursty request dynamics that
+  "Patterns behind Chaos" reports for production MoE serving;
+* :class:`TraceReplay` — replay of a recorded ``(time, prompt_len,
+  output_len)`` request trace (JSON or in-memory), for trace-driven
+  evaluation.
+
+Prompt/output lengths come from a :class:`LengthModel` (lognormal by
+default — request lengths are heavy-tailed in production traces — or
+fixed for controlled experiments).  Everything is deterministic given the
+seed.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class RequestSpec:
+    """One request of the offered load (immutable workload description)."""
+
+    req_id: int
+    arrival_time: float  # seconds since trace start
+    prompt_len: int
+    output_len: int
+
+
+@dataclass(frozen=True)
+class LengthModel:
+    """Sampler for (prompt_len, output_len) pairs.
+
+    ``kind="lognormal"``: lengths ~ LogNormal with the given means (the
+    sigma parameters are the log-space spreads), clipped to [1, max].
+    ``kind="fixed"``: every request gets exactly the mean lengths.
+    """
+
+    kind: str = "lognormal"
+    prompt_mean: float = 512.0
+    prompt_sigma: float = 0.6
+    prompt_max: int = 8192
+    output_mean: float = 128.0
+    output_sigma: float = 0.6
+    output_max: int = 2048
+
+    def sample(self, rng: np.random.Generator, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        if self.kind == "fixed":
+            p = np.full(n, int(self.prompt_mean), np.int64)
+            o = np.full(n, int(self.output_mean), np.int64)
+            return p, o
+        if self.kind != "lognormal":
+            raise ValueError(f"unknown length model kind: {self.kind}")
+
+        def _draw(mean: float, sigma: float, cap: int) -> np.ndarray:
+            # parameterize so the *linear-space* mean equals ``mean``
+            mu = np.log(mean) - 0.5 * sigma**2
+            x = rng.lognormal(mu, sigma, size=n)
+            return np.clip(np.round(x), 1, cap).astype(np.int64)
+
+        return (
+            _draw(self.prompt_mean, self.prompt_sigma, self.prompt_max),
+            _draw(self.output_mean, self.output_sigma, self.output_max),
+        )
+
+
+class ArrivalProcess:
+    """Base: ``generate(horizon)`` returns arrivals in [0, horizon), sorted."""
+
+    def generate(self, horizon: float) -> List[RequestSpec]:
+        raise NotImplementedError
+
+
+def _make_specs(
+    times: np.ndarray, lengths: LengthModel, rng: np.random.Generator
+) -> List[RequestSpec]:
+    plens, olens = lengths.sample(rng, len(times))
+    return [
+        RequestSpec(
+            req_id=i,
+            arrival_time=float(t),
+            prompt_len=int(p),
+            output_len=int(o),
+        )
+        for i, (t, p, o) in enumerate(zip(times, plens, olens))
+    ]
+
+
+class PoissonProcess(ArrivalProcess):
+    """Homogeneous Poisson arrivals at ``rate`` requests/second."""
+
+    def __init__(self, rate: float, lengths: Optional[LengthModel] = None, seed: int = 0):
+        assert rate > 0
+        self.rate = rate
+        self.lengths = lengths or LengthModel()
+        self.seed = seed
+
+    def generate(self, horizon: float) -> List[RequestSpec]:
+        rng = np.random.default_rng(self.seed)
+        # draw enough exponential gaps to cover the horizon, then trim
+        n_guess = max(int(self.rate * horizon * 1.5) + 16, 16)
+        times: List[float] = []
+        t = 0.0
+        while True:
+            gaps = rng.exponential(1.0 / self.rate, size=n_guess)
+            for g in gaps:
+                t += g
+                if t >= horizon:
+                    return _make_specs(np.array(times), self.lengths, rng)
+                times.append(t)
+
+
+class MMPPProcess(ArrivalProcess):
+    """2-state Markov-modulated Poisson process (calm / burst).
+
+    The process dwells in each state for an exponential time
+    (``mean_dwell``) and emits Poisson arrivals at that state's rate.
+    ``rate_burst >> rate_calm`` produces the correlated bursts that expose
+    queueing behavior a plain Poisson process at the same mean rate hides.
+    """
+
+    def __init__(
+        self,
+        rate_calm: float,
+        rate_burst: float,
+        mean_dwell_calm: float = 2.0,
+        mean_dwell_burst: float = 0.5,
+        lengths: Optional[LengthModel] = None,
+        seed: int = 0,
+    ):
+        assert rate_calm > 0 and rate_burst > 0
+        self.rates = (rate_calm, rate_burst)
+        self.dwells = (mean_dwell_calm, mean_dwell_burst)
+        self.lengths = lengths or LengthModel()
+        self.seed = seed
+
+    @property
+    def mean_rate(self) -> float:
+        """Long-run average arrival rate (dwell-time weighted)."""
+        (rc, rb), (dc, db) = self.rates, self.dwells
+        return (rc * dc + rb * db) / (dc + db)
+
+    def generate(self, horizon: float) -> List[RequestSpec]:
+        rng = np.random.default_rng(self.seed)
+        times: List[float] = []
+        t, state = 0.0, 0
+        while t < horizon:
+            dwell = rng.exponential(self.dwells[state])
+            t_end = min(t + dwell, horizon)
+            rate = self.rates[state]
+            tt = t
+            while True:
+                tt += rng.exponential(1.0 / rate)
+                if tt >= t_end:
+                    break
+                times.append(tt)
+            t, state = t_end, 1 - state
+        return _make_specs(np.array(times), self.lengths, rng)
+
+
+class TraceReplay(ArrivalProcess):
+    """Replay a recorded request trace.
+
+    ``records`` is a sequence of ``(arrival_time, prompt_len, output_len)``
+    tuples (or dicts with those keys).  ``from_json`` loads the same
+    structure from a file, so recorded production traces can be replayed
+    against any cluster configuration.  ``time_scale`` compresses or
+    stretches the trace clock (e.g. 0.5 doubles the offered rate).
+    """
+
+    def __init__(self, records: Sequence, time_scale: float = 1.0):
+        rows = []
+        for r in records:
+            if isinstance(r, dict):
+                rows.append(
+                    (float(r["arrival_time"]), int(r["prompt_len"]), int(r["output_len"]))
+                )
+            else:
+                t, p, o = r
+                rows.append((float(t), int(p), int(o)))
+        rows.sort(key=lambda x: x[0])
+        self.records = rows
+        self.time_scale = time_scale
+
+    @classmethod
+    def from_json(cls, path: str, time_scale: float = 1.0) -> "TraceReplay":
+        with open(path) as f:
+            return cls(json.load(f), time_scale=time_scale)
+
+    def generate(self, horizon: float) -> List[RequestSpec]:
+        out = []
+        for i, (t, p, o) in enumerate(self.records):
+            ts = t * self.time_scale
+            if ts >= horizon:
+                break
+            out.append(
+                RequestSpec(req_id=i, arrival_time=ts, prompt_len=p, output_len=o)
+            )
+        return out

@@ -1,0 +1,140 @@
+"""Request-level SLO metrics: TTFT/TPOT/E2E percentiles, goodput,
+queueing delay, per-replica utilization.
+
+Definitions (matching the serving-systems literature):
+
+* **TTFT** — time to first token: ``first_token_time - arrival_time``
+  (includes router queueing, slot queueing, and prefill);
+* **TPOT** — time per output token over the decode phase:
+  ``(finish - first_token) / (output_len - 1)`` (undefined for 1-token
+  outputs, which are excluded from TPOT percentiles);
+* **E2E** — ``finish - arrival``;
+* **queueing delay** — ``admit_time - arrival_time`` (time spent without
+  a KV slot);
+* **goodput** — completed requests *meeting every SLO component* per
+  second of trace horizon.  Requests that finish but blow the SLO count
+  toward throughput, not goodput.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .replica import ClusterRequest, Replica
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Per-request latency targets (seconds); ``None`` = unconstrained."""
+
+    ttft: Optional[float] = None
+    tpot: Optional[float] = None
+    e2e: Optional[float] = None
+
+
+def percentiles(xs: Sequence[float], qs=(50, 90, 99)) -> Dict[str, float]:
+    if len(xs) == 0:
+        return {f"p{q}": float("nan") for q in qs}
+    arr = np.asarray(xs, dtype=float)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
+def request_ttft(r: ClusterRequest) -> float:
+    return r.first_token_time - r.spec.arrival_time
+
+
+def request_tpot(r: ClusterRequest) -> Optional[float]:
+    if r.spec.output_len <= 1:
+        return None
+    return (r.finish_time - r.first_token_time) / (r.spec.output_len - 1)
+
+
+def request_e2e(r: ClusterRequest) -> float:
+    return r.finish_time - r.spec.arrival_time
+
+
+def request_queue_delay(r: ClusterRequest) -> float:
+    return r.admit_time - r.spec.arrival_time
+
+
+def meets_slo(r: ClusterRequest, slo: SLO) -> bool:
+    if slo.ttft is not None and request_ttft(r) > slo.ttft:
+        return False
+    if slo.tpot is not None:
+        tpot = request_tpot(r)
+        if tpot is not None and tpot > slo.tpot:
+            return False
+    if slo.e2e is not None and request_e2e(r) > slo.e2e:
+        return False
+    return True
+
+
+def summarize(
+    completed: List[ClusterRequest],
+    horizon: float,
+    slo: Optional[SLO] = None,
+    replicas: Optional[List[Replica]] = None,
+    end_time: Optional[float] = None,
+) -> Dict:
+    """Aggregate a finished cluster run into the standard report dict."""
+    out: Dict = {"n_completed": len(completed), "horizon": horizon}
+    if not completed:
+        return out
+
+    ttfts = [request_ttft(r) for r in completed]
+    tpots = [t for t in (request_tpot(r) for r in completed) if t is not None]
+    e2es = [request_e2e(r) for r in completed]
+    qdelays = [request_queue_delay(r) for r in completed]
+
+    out["ttft"] = percentiles(ttfts)
+    out["tpot"] = percentiles(tpots)
+    out["e2e"] = percentiles(e2es)
+    out["queue_delay"] = percentiles(qdelays)
+    # Throughput over the *served* span (arrivals + drain): under overload
+    # every request still completes eventually, so dividing by the arrival
+    # horizon would just echo the offered rate, not measured capacity.
+    span = end_time or max(r.finish_time for r in completed)
+    span = max(span, horizon)
+    out["throughput_rps"] = len(completed) / span
+    out["output_tokens_per_s"] = (
+        sum(r.spec.output_len for r in completed) / span
+    )
+
+    if slo is not None:
+        # goodput stays per horizon second: SLO-compliant completions
+        # relative to the offered-traffic window (backlog completions blow
+        # TTFT and fall out of `good` on their own)
+        good = [r for r in completed if meets_slo(r, slo)]
+        out["goodput_rps"] = len(good) / horizon
+        out["slo_attainment"] = len(good) / len(completed)
+
+    if replicas is not None:
+        out["replica_util"] = {
+            str(rep.replica_id): (rep.busy_time / span if span > 0 else 0.0)
+            for rep in replicas
+        }
+        out["replica_steps"] = {
+            str(rep.replica_id): rep.n_steps for rep in replicas
+        }
+    return out
+
+
+def max_rate_under_slo(
+    results_by_rate: Dict[float, Dict], slo: SLO, metric: str = "tpot", q: str = "p99"
+) -> float:
+    """Knee finder: the highest swept arrival rate whose ``metric`` ``q``
+    stays within the SLO (0.0 if none qualifies).
+
+    ``results_by_rate`` maps arrival rate → a ``summarize()`` dict.
+    """
+    target = getattr(slo, metric)
+    assert target is not None, f"SLO has no {metric} component"
+    ok = [
+        rate
+        for rate, res in results_by_rate.items()
+        if metric in res and res[metric][q] <= target
+    ]
+    return max(ok) if ok else 0.0

@@ -1,0 +1,224 @@
+"""One Sieve-serving replica: continuous batching over simulated steps.
+
+A replica mirrors the live engine's slot lifecycle (``serving.batching``:
+admit → chunked prefill → decode → retire) but instead of executing a
+model it asks the cycle-approximate :class:`repro.sim.ServingSimulator`
+how long each engine step takes given the *current* batch composition —
+so step time correctly varies with batch size, KV depth, colocated
+prefill chunks, and the policy's token→expert split.  The replica keeps a
+persistent EMA cost table across steps, exactly like a long-running Sieve
+runtime (paper §5.1).
+
+Step-time calls dominate the cluster simulator's cost, so durations are
+memoized on a quantized batch state (decode count, KV-depth bucket,
+prefill-token bucket).  The cost table is warmed before the first cached
+entry so cached values reflect the converged table.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cost_model import SystemSpec
+from repro.sim.engine import BatchState, ServingSimulator
+from repro.sim.models import SimModelConfig
+from .arrivals import RequestSpec
+
+
+@dataclass
+class ClusterRequest:
+    """Runtime state of one request inside the cluster simulator."""
+
+    spec: RequestSpec
+    dispatch_time: float = 0.0  # when the router assigned it to a replica
+    admit_time: Optional[float] = None  # when it got a KV slot
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    replica_id: Optional[int] = None
+
+    prefill_done: int = 0
+    generated: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.spec.output_len
+
+    @property
+    def position(self) -> int:
+        """Current KV depth (prefilled prompt + generated tokens)."""
+        return self.prefill_done + self.generated
+
+
+@dataclass
+class ReplicaConfig:
+    n_slots: int = 32
+    prefill_chunk: int = 512  # prompt tokens prefilled per step per request
+    max_prefills_per_step: int = 2
+    seq_bucket: int = 256  # KV-depth quantization for the step-time cache
+    step_warmup: int = 2  # cost-table warmup calls before caching
+
+
+class Replica:
+    """One serving instance (its own simulator seed and cost table)."""
+
+    def __init__(
+        self,
+        replica_id: int,
+        model: SimModelConfig,
+        system: SystemSpec,
+        policy: str,
+        cfg: Optional[ReplicaConfig] = None,
+        seed: int = 0,
+    ):
+        self.replica_id = replica_id
+        self.policy = policy
+        self.cfg = cfg or ReplicaConfig()
+        self.sim = ServingSimulator(model, system, seed=seed + replica_id)
+        self.cost_table = self.sim._default_cost_table()
+        self._warmed = False
+
+        self.queue: List[ClusterRequest] = []
+        self.slots: List[Optional[ClusterRequest]] = [None] * self.cfg.n_slots
+        self.completed: List[ClusterRequest] = []
+
+        self.busy_until: Optional[float] = None  # end of the in-flight step
+        self._step_plan: Optional[Tuple[List[ClusterRequest], List[Tuple[ClusterRequest, int]]]] = None
+        self.busy_time = 0.0
+        self.n_steps = 0
+        self._step_cache: Dict[Tuple[int, int, int], float] = {}
+
+    # ---- load signals used by the router --------------------------------
+    @property
+    def active(self) -> List[ClusterRequest]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def queue_len(self) -> int:
+        """Outstanding requests (queued + holding a slot)."""
+        return len(self.queue) + len(self.active)
+
+    @property
+    def kv_load(self) -> int:
+        """Total committed KV tokens (+ queued prompts about to claim KV).
+
+        An admitted request counts its full prompt even before its chunked
+        prefill has written it — the slot is committed to that much KV, and
+        counting only ``position`` would make the router keep dumping long
+        prompts onto the most KV-committed replica.
+        """
+        return sum(
+            max(r.position, r.spec.prompt_len) for r in self.active
+        ) + sum(r.spec.prompt_len for r in self.queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)
+
+    # ---- lifecycle ------------------------------------------------------
+    def reset_requests(self) -> None:
+        """Clear request state for a fresh run; keep the warmed cost table
+        and step-time cache (a drained replica has nothing in flight)."""
+        assert self.busy_until is None, "cannot reset a replica mid-step"
+        self.queue = []
+        self.slots = [None] * self.cfg.n_slots
+        self.completed = []
+        self._step_plan = None
+        self.busy_time = 0.0
+        self.n_steps = 0
+
+    def submit(self, req: ClusterRequest, now: float) -> None:
+        req.dispatch_time = now
+        req.replica_id = self.replica_id
+        self.queue.append(req)
+
+    def _admit(self, now: float) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                req.admit_time = now
+                self.slots[i] = req
+
+    def _step_time(self, state: BatchState) -> float:
+        if not self._warmed:
+            # converge the EMA table before caching any duration
+            for _ in range(self.cfg.step_warmup):
+                self.sim.step_time(state, self.policy, cost_table=self.cost_table)
+            self._warmed = True
+        b = self.cfg.seq_bucket
+        key = (
+            state.n_decode,
+            -(-max(state.seq, 1) // b) * b,
+            -(-state.prefill_tokens // b) * b if state.prefill_tokens else 0,
+        )
+        hit = self._step_cache.get(key)
+        if hit is None:
+            hit = self.sim.step_time(
+                BatchState(key[0], key[1], key[2]),
+                self.policy,
+                cost_table=self.cost_table,
+            )
+            self._step_cache[key] = hit
+        return hit
+
+    def start_step(self, now: float) -> float:
+        """Admit, pick this step's work, and return the step duration."""
+        assert self.busy_until is None
+        self._admit(now)
+
+        prefilling = [
+            r for r in self.active if r.prefill_done < r.spec.prompt_len
+        ][: self.cfg.max_prefills_per_step]
+        prefill_work = [
+            (r, min(self.cfg.prefill_chunk, r.spec.prompt_len - r.prefill_done))
+            for r in prefilling
+        ]
+        decoding = [
+            r
+            for r in self.active
+            if r.prefill_done >= r.spec.prompt_len and not r.done
+        ]
+        assert prefill_work or decoding, "start_step called with no work"
+
+        mean_seq = (
+            int(sum(r.position for r in decoding) / len(decoding))
+            if decoding
+            else 0
+        )
+        state = BatchState(
+            n_decode=len(decoding),
+            seq=mean_seq,
+            prefill_tokens=sum(n for _, n in prefill_work),
+        )
+        dur = self._step_time(state)
+        self._step_plan = (decoding, prefill_work)
+        self.busy_until = now + dur
+        self.busy_time += dur
+        self.n_steps += 1
+        return dur
+
+    def finish_step(self, now: float) -> List[ClusterRequest]:
+        """Apply the in-flight step's effects at its end time ``now``."""
+        assert self._step_plan is not None
+        decoding, prefill_work = self._step_plan
+        self._step_plan, self.busy_until = None, None
+
+        for r, n in prefill_work:
+            r.prefill_done += n
+            if r.prefill_done >= r.spec.prompt_len:
+                # the prefill pass samples the first output token
+                r.generated = 1
+                r.first_token_time = now
+        for r in decoding:
+            r.generated += 1
+
+        done = []
+        for i, r in enumerate(self.slots):
+            if r is not None and r.done:
+                if r.first_token_time is None:  # output_len == 1 edge
+                    r.first_token_time = now
+                r.finish_time = now
+                self.slots[i] = None
+                self.completed.append(r)
+                done.append(r)
+        return done

@@ -1,0 +1,50 @@
+"""Multi-replica dispatch policies.
+
+The router is the cluster's only global decision point: every arriving
+request is assigned to exactly one replica at arrival time (no migration).
+Policies:
+
+* ``round_robin`` — load-oblivious baseline;
+* ``jsq`` — join-shortest-queue by outstanding request count, the classic
+  latency-optimal policy for homogeneous servers;
+* ``least_kv`` — join the replica with the fewest resident + queued KV
+  tokens; a better signal than request count when request lengths are
+  heavy-tailed (a single 8k-prompt request occupies as much KV as dozens
+  of short ones).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .replica import ClusterRequest, Replica
+
+ROUTER_POLICIES = ("round_robin", "jsq", "least_kv")
+
+
+class Router:
+    def __init__(self, policy: str, replicas: List[Replica]):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(
+                f"unknown router policy {policy!r}; expected one of {ROUTER_POLICIES}"
+            )
+        self.policy = policy
+        self.replicas = replicas
+        self._rr_next = 0
+        self.dispatched = 0
+
+    def choose(self) -> Replica:
+        if self.policy == "round_robin":
+            r = self.replicas[self._rr_next % len(self.replicas)]
+            self._rr_next += 1
+            return r
+        if self.policy == "jsq":
+            return min(self.replicas, key=lambda r: (r.queue_len, r.replica_id))
+        # least_kv
+        return min(self.replicas, key=lambda r: (r.kv_load, r.replica_id))
+
+    def dispatch(self, req: ClusterRequest, now: float) -> Replica:
+        r = self.choose()
+        r.submit(req, now)
+        self.dispatched += 1
+        return r

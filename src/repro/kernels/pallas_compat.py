@@ -1,0 +1,16 @@
+"""Version portability for ``jax.experimental.pallas.tpu``.
+
+jax renamed ``TPUCompilerParams`` to ``CompilerParams`` around 0.5; the
+kernels import the alias from here so they run on both sides of the
+rename (this container ships 0.4.x).
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    # jax 0.4.x name; if this also fails, the AttributeError surfaces at
+    # import time and names the missing class instead of a NoneType call
+    # deep inside pallas_call.
+    CompilerParams = pltpu.TPUCompilerParams

@@ -372,12 +372,8 @@ def gqa_decode_seqpar(
 
 
 def _shard_map_attn(body, mi, args, in_specs, out_specs):
-    try:
-        from jax import shard_map as _sm
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _sm
-    return _sm(body, mesh=mi.mesh, in_specs=in_specs, out_specs=out_specs,
-               check_vma=False)(*args)
+    from .shard_compat import shard_map_unchecked as _sm
+    return _sm(body, mesh=mi.mesh, in_specs=in_specs, out_specs=out_specs)(*args)
 
 
 # ---------------------------------------------------------------------------

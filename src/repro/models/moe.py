@@ -28,10 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, MoEConfig
 from .layers import _he
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from .shard_compat import shard_map_unchecked as _shard_map
 
 from jax.sharding import PartitionSpec as P
 
@@ -374,7 +371,6 @@ def moe_block(
                 mesh=mi.mesh,
                 in_specs=(w_specs, token_spec),
                 out_specs=MoEOut(token_spec, P(), P(), P()),
-                check_vma=False,
             )(routed_params, xt)
         else:
             routed = _shard_map(
@@ -382,7 +378,6 @@ def moe_block(
                 mesh=mi.mesh,
                 in_specs=(w_specs, P(dp, None)),
                 out_specs=MoEOut(P(dp, None), P(), P(), P()),
-                check_vma=False,
             )(routed_params, xt)
     else:
         routed = moe_local(

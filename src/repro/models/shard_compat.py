@@ -1,0 +1,28 @@
+"""shard_map portability across jax versions.
+
+jax moved ``shard_map`` from ``jax.experimental`` to the top level and
+renamed its replication-check kwarg (``check_rep`` in 0.4.x,
+``check_vma`` from 0.6).  ``shard_map_unchecked`` hides both differences:
+it always disables the replication check (the EP bodies do manual psums
+that the checker cannot verify).
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    kw = {_CHECK_KW: False}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -177,7 +177,10 @@ class ServingEngine:
                 tokens[r.slot, 0] = (
                     r.generated[-1] if r.generated else r.prompt[-1]
                 )
-                position[r.slot] = r.position
+                # KV-write position of the token being fed: generated[-1]
+                # was sampled but not yet written, so it lands one before
+                # the request's next-write cursor.
+                position[r.slot] = r.position - 1 if r.generated else r.position
             db = {"tokens": jnp.asarray(tokens), "position": jnp.asarray(position)}
             if self.lm.arch.family == "vlm":
                 mp = jnp.asarray(position)[None, :, None]

@@ -7,6 +7,7 @@ and the calibrated bimodal token→expert trace generator.
 
 from .dram import PimGemvModel  # noqa: F401
 from .engine import (  # noqa: F401
+    BatchState,
     PIM_POLICIES,
     SCHEDULER_OVERHEAD,
     ServingSimulator,

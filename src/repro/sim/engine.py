@@ -63,6 +63,25 @@ class StepResult:
     diag: Dict[str, float] = field(default_factory=dict)
 
 
+@dataclass(frozen=True)
+class BatchState:
+    """Composition of one engine step's batch (the request-level view).
+
+    This is the reusable entry point for callers that track request
+    lifecycles (repro.cluster): step duration depends on how many
+    sequences are decoding, their KV depth, and how many prompt tokens
+    are being chunk-prefilled alongside them this step.
+    """
+
+    n_decode: int  # sequences producing one token this step
+    seq: int  # mean KV length of the decoding sequences
+    prefill_tokens: int = 0  # colocated prompt tokens this step
+
+    @property
+    def n_tokens(self) -> int:
+        return self.n_decode + self.prefill_tokens
+
+
 class ServingSimulator:
     def __init__(
         self,
@@ -264,6 +283,108 @@ class ServingSimulator:
         return loads
 
     # ------------------------------------------------------------------
+    def _default_cost_table(self) -> Optional[CostTable]:
+        if self.pim is None:
+            return None
+        cm0 = CostModel(
+            system=self.system, layer=self.model.moe, ep_degree=self.n_gpus
+        )
+        return CostTable(fallback=cm0.t_pim_gemv_roofline)
+
+    def _t_lm_head(self) -> float:
+        # LM head: memory-bound logits GEMV over the vocab (same for all
+        # policies; vocab approximated at 150k like the evaluated models).
+        lm_head_bytes = 150_000 * self.model.moe.d_model * self.model.moe.dtype_bytes
+        return lm_head_bytes / self.system.xpu.hbm_bw
+
+    def _sample_layer(
+        self,
+        policy: str,
+        n_decode: int,
+        prefill_tokens: int,
+        seq: int,
+        cost_table: Optional[CostTable],
+        schedule_dag: bool = True,
+    ):
+        """One sampled MoE-layer instance.
+
+        Builds the per-(gpu, half-batch) DAGs from a fresh token→expert
+        sample, feeds observed PIM times into the cost table, and — when
+        ``schedule_dag`` — merges the interleaved halves per GPU and
+        list-schedules them.  Returns ``(t_layer, utils, split_frac)``;
+        all ``None`` for warmup calls (table population only).
+        """
+        per_gpu_makespans = []
+        for h in range(self.n_interleave):
+            dec_h = n_decode // self.n_interleave
+            pre_tok_h = prefill_tokens // self.n_interleave
+            moe_tokens_h = dec_h + pre_tok_h
+            counts = self.trace.sample_counts(max(moe_tokens_h, 1))
+            local = self._local_expert_counts(counts)
+            dags_h = []
+            for g in range(self.n_gpus):
+                dag, part = self._half_layer_dag(
+                    policy,
+                    local[g],
+                    max(dec_h // self.n_gpus, 1),
+                    pre_tok_h // self.n_gpus,
+                    seq,
+                    cost_table,
+                    charge_weight_loads=(h == 0),
+                    gpu_idx=g,
+                )
+                if cost_table is not None and policy in (
+                    "sieve", "sieve_argmin", "pimoe", "pimoe_dynamic",
+                ):
+                    self._observe_pim_times(cost_table, part, local[g])
+                dags_h.append((dag, part))
+            per_gpu_makespans.append(dags_h)
+        if not schedule_dag:
+            return None, None, None
+        # merge the halves per GPU, schedule, take max over GPUs
+        t_layer_gpu = []
+        utils: Dict[str, List[float]] = {}
+        for g in range(self.n_gpus):
+            merged = merge_dags(
+                {f"h{h}": per_gpu_makespans[h][g][0] for h in range(self.n_interleave)}
+            )
+            sched = list_schedule(merged)
+            t_layer_gpu.append(sched.makespan)
+            for r in ("gpu", "pim", "link", "gpu_hbm"):
+                utils.setdefault(r, []).append(sched.utilization(r))
+        n_active = sum(
+            p.meta.get("n_active", 0) for _, p in per_gpu_makespans[0]
+        )
+        n_gpu_side = sum(len(p.gpu_experts) for _, p in per_gpu_makespans[0])
+        return max(t_layer_gpu), utils, n_gpu_side / max(n_active, 1)
+
+    def step_time(
+        self,
+        state: BatchState,
+        policy: str,
+        cost_table: Optional[CostTable] = None,
+        n_layer_samples: int = 1,
+    ) -> float:
+        """Duration (seconds) of one engine step with batch ``state``.
+
+        The reusable per-step cost API: pass a persistent ``cost_table``
+        across calls to model Sieve's online EMA warmup, exactly like a
+        long-running replica would experience it.
+        """
+        if cost_table is None:
+            cost_table = self._default_cost_table()
+        ts = []
+        for _ in range(max(n_layer_samples, 1)):
+            t_layer, _, _ = self._sample_layer(
+                policy,
+                state.n_decode,
+                state.prefill_tokens,
+                max(state.seq, 1),
+                cost_table,
+            )
+            ts.append(t_layer)
+        return float(np.mean(ts)) * self.model.n_layers + self._t_lm_head()
+
     def simulate_step(
         self,
         policy: str,
@@ -276,71 +397,32 @@ class ServingSimulator:
         warmup: int = 2,
     ) -> StepResult:
         """Simulate one decode step (optionally colocated with prefills)."""
-        m = self.model.moe
         n_decode = batch - n_prefill
         assert n_decode >= 0
-        if cost_table is None and self.pim is not None:
-            cm0 = CostModel(system=self.system, layer=m, ep_degree=self.n_gpus)
-            cost_table = CostTable(fallback=cm0.t_pim_gemv_roofline)
+        if cost_table is None:
+            cost_table = self._default_cost_table()
 
         layer_times: List[float] = []
         utils: Dict[str, List[float]] = {}
         split_fracs: List[float] = []
+        prefill_tokens = n_prefill * prefill_len
         # Warmup iterations populate the EMA cost table (paper §5.1: the
         # table converges within the first few iterations) before recording.
         for it in range(warmup + n_layer_samples):
             record = it >= warmup
-            # sample per-half global assignments
-            per_gpu_makespans = []
-            for h in range(self.n_interleave):
-                dec_h = n_decode // self.n_interleave
-                pre_tok_h = n_prefill * prefill_len // self.n_interleave
-                moe_tokens_h = dec_h + pre_tok_h
-                counts = self.trace.sample_counts(max(moe_tokens_h, 1))
-                local = self._local_expert_counts(counts)
-                dags_h = []
-                for g in range(self.n_gpus):
-                    dag, part = self._half_layer_dag(
-                        policy,
-                        local[g],
-                        max(dec_h // self.n_gpus, 1),
-                        pre_tok_h // self.n_gpus,
-                        seq,
-                        cost_table,
-                        charge_weight_loads=(h == 0),
-                        gpu_idx=g,
-                    )
-                    if cost_table is not None and policy in (
-                        "sieve", "sieve_argmin", "pimoe", "pimoe_dynamic",
-                    ):
-                        self._observe_pim_times(cost_table, part, local[g])
-                    dags_h.append((dag, part))
-                per_gpu_makespans.append(dags_h)
+            t_layer, u, frac = self._sample_layer(
+                policy, n_decode, prefill_tokens, seq, cost_table,
+                schedule_dag=record,
+            )
             if not record:
                 continue
-            # merge the halves per GPU, schedule, take max over GPUs
-            t_layer_gpu = []
-            for g in range(self.n_gpus):
-                merged = merge_dags(
-                    {f"h{h}": per_gpu_makespans[h][g][0] for h in range(self.n_interleave)}
-                )
-                sched = list_schedule(merged)
-                t_layer_gpu.append(sched.makespan)
-                for r in ("gpu", "pim", "link", "gpu_hbm"):
-                    utils.setdefault(r, []).append(sched.utilization(r))
-            layer_times.append(max(t_layer_gpu))
-            n_active = sum(
-                p.meta.get("n_active", 0) for _, p in per_gpu_makespans[0]
-            )
-            n_gpu_side = sum(len(p.gpu_experts) for _, p in per_gpu_makespans[0])
-            split_fracs.append(n_gpu_side / max(n_active, 1))
+            layer_times.append(t_layer)
+            split_fracs.append(frac)
+            for r, vals in u.items():
+                utils.setdefault(r, []).extend(vals)
 
         t_layer = float(np.mean(layer_times))
-        # LM head: memory-bound logits GEMV over the vocab (same for all
-        # policies; vocab approximated at 150k like the evaluated models).
-        lm_head_bytes = 150_000 * m.d_model * m.dtype_bytes
-        t_lm_head = lm_head_bytes / self.system.xpu.hbm_bw
-        t_step = t_layer * self.model.n_layers + t_lm_head
+        t_step = t_layer * self.model.n_layers + self._t_lm_head()
 
         return StepResult(
             policy=policy,

@@ -1,0 +1,173 @@
+"""Compat shim for `hypothesis` in offline environments.
+
+The tier-1 suite property-tests several modules with hypothesis, but the
+test container has no network and hypothesis may not be installed.  This
+module re-exports the real package when available and otherwise provides
+a minimal, deterministic stand-in: ``@given`` runs a handful of seeded
+examples (always including the low/high boundary draw) instead of
+hypothesis' shrinking search.  Test modules import from here instead of
+from ``hypothesis`` directly.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _MAX_FALLBACK_EXAMPLES = 8
+
+    class _Strategy:
+        """Base: a strategy draws values from a seeded Generator."""
+
+        def sample(self, rng: np.random.Generator):
+            raise NotImplementedError
+
+        def edge(self, which: str):
+            raise NotImplementedError
+
+        def map(self, fn):
+            return _Mapped(self, fn)
+
+        def filter(self, pred):
+            return _Filtered(self, pred)
+
+    class _Mapped(_Strategy):
+        def __init__(self, inner, fn):
+            self.inner = inner
+            self.fn = fn
+
+        def sample(self, rng):
+            return self.fn(self.inner.sample(rng))
+
+        def edge(self, which):
+            return self.fn(self.inner.edge(which))
+
+    class _Filtered(_Strategy):
+        def __init__(self, inner, pred):
+            self.inner = inner
+            self.pred = pred
+
+        def sample(self, rng):
+            for _ in range(1000):
+                v = self.inner.sample(rng)
+                if self.pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+
+        def edge(self, which):
+            v = self.inner.edge(which)
+            if self.pred(v):
+                return v
+            return self.sample(np.random.default_rng(0))
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=100):
+            self.min_value = int(min_value)
+            self.max_value = int(max_value)
+
+        def sample(self, rng):
+            return int(rng.integers(self.min_value, self.max_value + 1))
+
+        def edge(self, which):
+            return self.min_value if which == "low" else self.max_value
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+            self.min_value = float(min_value)
+            self.max_value = float(max_value)
+
+        def sample(self, rng):
+            # log-uniform when the range spans decades (timings etc.)
+            if self.min_value > 0 and self.max_value / self.min_value > 1e3:
+                lo, hi = np.log(self.min_value), np.log(self.max_value)
+                return float(np.exp(rng.uniform(lo, hi)))
+            return float(rng.uniform(self.min_value, self.max_value))
+
+        def edge(self, which):
+            return self.min_value if which == "low" else self.max_value
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elements = elements
+            self.min_size = int(min_size)
+            self.max_size = int(max_size)
+
+        def sample(self, rng):
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elements.sample(rng) for _ in range(n)]
+
+        def edge(self, which):
+            if which == "low":
+                return [self.elements.edge("low")] * max(self.min_size, 1)
+            return [self.elements.edge("high")] * self.max_size
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **kw):
+            return _Floats(min_value, max_value, **kw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Lists(elements, min_size, max_size)
+
+    strategies = _StrategiesModule()
+
+    def settings(**kw):
+        """Record settings on the function; honored by the @given wrapper
+        regardless of decorator order (attrs are read off both the wrapper
+        and the wrapped function)."""
+
+        def deco(fn):
+            fn._compat_settings = kw
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(
+                    wrapper, "_compat_settings",
+                    getattr(fn, "_compat_settings", {}),
+                )
+                n = min(
+                    int(cfg.get("max_examples", _MAX_FALLBACK_EXAMPLES)),
+                    _MAX_FALLBACK_EXAMPLES,
+                )
+                seed = zlib.adler32(fn.__qualname__.encode())
+                for i in range(n):
+                    if i == 0:
+                        drawn = {k: s.edge("low") for k, s in strats.items()}
+                    elif i == 1:
+                        drawn = {k: s.edge("high") for k, s in strats.items()}
+                    else:
+                        rng = np.random.default_rng(seed + i)
+                        drawn = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # Hide the strategy-drawn params from pytest's fixture
+            # resolution (real hypothesis rewrites the signature too).
+            sig = inspect.signature(fn)
+            params = [
+                p for name, p in sig.parameters.items() if name not in strats
+            ]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -125,11 +125,11 @@ class TestElastic:
         a (1-device) mesh — the mechanism used when the world size changes."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
+        from repro.launch.mesh import make_mesh
+
         t = {"w": jnp.arange(16.0).reshape(4, 4)}
         save_checkpoint(str(tmp_path), 1, t)
-        mesh = jax.make_mesh(
-            (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        mesh = make_mesh((1,), ("model",))
         sh = {"w": NamedSharding(mesh, P("model", None))}
         r = restore_checkpoint(
             str(tmp_path), 1, jax.eval_shape(lambda: t), shardings=sh

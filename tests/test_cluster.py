@@ -1,0 +1,318 @@
+"""Cluster simulator: arrivals, SLO metrics, routing, conservation,
+and the step_time API it is built on."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import b200_pim_system
+from repro.core.cost_model import SystemSpec
+from repro.cluster import (
+    SLO,
+    ClusterRequest,
+    ClusterSimulator,
+    LengthModel,
+    MMPPProcess,
+    PoissonProcess,
+    Router,
+    RequestSpec,
+    TraceReplay,
+    max_rate_under_slo,
+    meets_slo,
+    summarize,
+)
+from repro.cluster.replica import ReplicaConfig
+from repro.sim import SIM_MODELS, BatchState, ServingSimulator
+
+MODEL = SIM_MODELS["qwen3-30b"]
+
+
+def system() -> SystemSpec:
+    return b200_pim_system()
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+
+class TestArrivals:
+    def test_poisson_seeded_determinism(self):
+        a = PoissonProcess(rate=40.0, seed=3).generate(5.0)
+        b = PoissonProcess(rate=40.0, seed=3).generate(5.0)
+        assert [(r.arrival_time, r.prompt_len, r.output_len) for r in a] == [
+            (r.arrival_time, r.prompt_len, r.output_len) for r in b
+        ]
+        c = PoissonProcess(rate=40.0, seed=4).generate(5.0)
+        assert [r.arrival_time for r in a] != [r.arrival_time for r in c]
+
+    def test_poisson_rate_correctness(self):
+        horizon = 200.0
+        reqs = PoissonProcess(rate=50.0, seed=0).generate(horizon)
+        emp = len(reqs) / horizon
+        # 3-sigma band for a Poisson count at n = rate * horizon
+        assert emp == pytest.approx(50.0, abs=3 * np.sqrt(50.0 / horizon))
+        ts = [r.arrival_time for r in reqs]
+        assert ts == sorted(ts)
+        assert all(0 <= t < horizon for t in ts)
+
+    def test_poisson_request_ids_unique_and_lengths_positive(self):
+        reqs = PoissonProcess(rate=30.0, seed=1).generate(10.0)
+        assert len({r.req_id for r in reqs}) == len(reqs)
+        assert all(r.prompt_len >= 1 and r.output_len >= 1 for r in reqs)
+
+    def test_mmpp_mean_rate(self):
+        proc = MMPPProcess(
+            rate_calm=20.0, rate_burst=200.0,
+            mean_dwell_calm=2.0, mean_dwell_burst=0.5, seed=0,
+        )
+        horizon = 400.0
+        emp = len(proc.generate(horizon)) / horizon
+        assert emp == pytest.approx(proc.mean_rate, rel=0.15)
+
+    def test_mmpp_burstier_than_poisson(self):
+        """Index of dispersion of per-second counts must exceed Poisson's 1."""
+        proc = MMPPProcess(
+            rate_calm=10.0, rate_burst=160.0,
+            mean_dwell_calm=1.0, mean_dwell_burst=1.0, seed=2,
+        )
+        ts = [r.arrival_time for r in proc.generate(200.0)]
+        counts = np.bincount(np.asarray(ts, dtype=int), minlength=200)
+        assert counts.var() / counts.mean() > 2.0
+
+    def test_fixed_length_model(self):
+        lm = LengthModel(kind="fixed", prompt_mean=100, output_mean=7)
+        reqs = PoissonProcess(rate=20.0, lengths=lm, seed=0).generate(2.0)
+        assert all(r.prompt_len == 100 and r.output_len == 7 for r in reqs)
+
+    def test_trace_replay_roundtrip(self, tmp_path):
+        rows = [
+            {"arrival_time": 0.5, "prompt_len": 128, "output_len": 16},
+            {"arrival_time": 0.1, "prompt_len": 64, "output_len": 8},
+            {"arrival_time": 9.0, "prompt_len": 32, "output_len": 4},
+        ]
+        path = tmp_path / "trace.json"
+        path.write_text(json.dumps(rows))
+        reqs = TraceReplay.from_json(str(path)).generate(5.0)
+        # sorted by time, horizon-trimmed
+        assert [r.arrival_time for r in reqs] == [0.1, 0.5]
+        assert reqs[0].prompt_len == 64
+        # time_scale compresses the clock (doubles the offered rate)
+        fast = TraceReplay.from_json(str(path), time_scale=0.5).generate(5.0)
+        assert [r.arrival_time for r in fast] == [0.05, 0.25, 4.5]
+
+
+# ---------------------------------------------------------------------------
+# Metrics (hand-computed fixtures)
+# ---------------------------------------------------------------------------
+
+
+def _req(arrival, admit, first, finish, output_len, req_id=0) -> ClusterRequest:
+    r = ClusterRequest(
+        spec=RequestSpec(
+            req_id=req_id, arrival_time=arrival, prompt_len=32,
+            output_len=output_len,
+        )
+    )
+    r.admit_time = admit
+    r.first_token_time = first
+    r.finish_time = finish
+    return r
+
+
+class TestMetrics:
+    def test_percentiles_and_goodput_hand_computed(self):
+        # 4 requests: TTFTs 0.1, 0.2, 0.3, 0.4; TPOT (finish-first)/(out-1)
+        reqs = [
+            _req(0.0, 0.0, 0.1, 1.1, output_len=11, req_id=0),  # tpot 0.1
+            _req(1.0, 1.0, 1.2, 1.7, output_len=11, req_id=1),  # tpot 0.05
+            _req(2.0, 2.1, 2.3, 4.3, output_len=11, req_id=2),  # tpot 0.2
+            _req(3.0, 3.0, 3.4, 3.9, output_len=11, req_id=3),  # tpot 0.05
+        ]
+        slo = SLO(ttft=0.35, tpot=0.15)
+        rep = summarize(reqs, horizon=4.0, slo=slo)
+        assert rep["n_completed"] == 4
+        # np.percentile linear interpolation on [0.1, 0.2, 0.3, 0.4]
+        assert rep["ttft"]["p50"] == pytest.approx(0.25)
+        assert rep["ttft"]["p90"] == pytest.approx(0.37)
+        assert rep["ttft"]["p99"] == pytest.approx(0.397)
+        assert rep["tpot"]["p50"] == pytest.approx(0.075)
+        # req 2 blows TPOT, req 3 blows TTFT -> goodput 2 / 4s
+        assert rep["goodput_rps"] == pytest.approx(0.5)
+        assert rep["slo_attainment"] == pytest.approx(0.5)
+        # throughput over the served span (last finish at 4.3s), not the
+        # 4s arrival horizon
+        assert rep["throughput_rps"] == pytest.approx(4 / 4.3)
+        # queue delays [0, 0, 0.1, 0]
+        assert rep["queue_delay"]["p50"] == pytest.approx(0.0)
+
+    def test_single_token_requests_excluded_from_tpot(self):
+        reqs = [
+            _req(0.0, 0.0, 0.1, 0.1, output_len=1, req_id=0),
+            _req(0.0, 0.0, 0.2, 1.2, output_len=11, req_id=1),
+        ]
+        rep = summarize(reqs, horizon=1.0)
+        assert rep["tpot"]["p50"] == pytest.approx(0.1)
+
+    def test_meets_slo_components(self):
+        r = _req(0.0, 0.0, 0.5, 2.5, output_len=21)
+        assert meets_slo(r, SLO())
+        assert meets_slo(r, SLO(ttft=0.5, tpot=0.1, e2e=2.5))
+        assert not meets_slo(r, SLO(ttft=0.4))
+        assert not meets_slo(r, SLO(tpot=0.09))
+        assert not meets_slo(r, SLO(e2e=2.0))
+
+    def test_max_rate_under_slo_knee(self):
+        by_rate = {
+            10.0: {"tpot": {"p99": 0.010}},
+            20.0: {"tpot": {"p99": 0.019}},
+            40.0: {"tpot": {"p99": 0.031}},
+        }
+        assert max_rate_under_slo(by_rate, SLO(tpot=0.02)) == 20.0
+        assert max_rate_under_slo(by_rate, SLO(tpot=0.005)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# step_time API (the sim/engine refactor the cluster layer is built on)
+# ---------------------------------------------------------------------------
+
+
+class TestStepTime:
+    def test_positive_and_scales_with_batch(self):
+        sim = ServingSimulator(MODEL, system(), seed=0)
+        table = sim._default_cost_table()
+        t1 = sim.step_time(
+            BatchState(n_decode=1, seq=2048), "sieve",
+            cost_table=table, n_layer_samples=2,
+        )
+        t64 = sim.step_time(
+            BatchState(n_decode=64, seq=2048), "sieve",
+            cost_table=table, n_layer_samples=2,
+        )
+        assert 0 < t1 < t64
+
+    def test_prefill_tokens_add_time(self):
+        sim = ServingSimulator(MODEL, system(), seed=0)
+        table = sim._default_cost_table()
+        base = sim.step_time(
+            BatchState(n_decode=8, seq=1024), "sieve",
+            cost_table=table, n_layer_samples=2,
+        )
+        mixed = sim.step_time(
+            BatchState(n_decode=8, seq=1024, prefill_tokens=4096), "sieve",
+            cost_table=table, n_layer_samples=2,
+        )
+        assert mixed > base
+
+    def test_simulate_step_consistent_with_step_time(self):
+        """The sweep entry point and the per-step API share one cost path."""
+        res = ServingSimulator(MODEL, system(), seed=0).simulate_step(
+            "sieve", batch=32, seq=2048, n_layer_samples=2,
+        )
+        sim2 = ServingSimulator(MODEL, system(), seed=0)
+        table = sim2._default_cost_table()
+        for _ in range(2):  # same warmup the sweep entry point applies
+            sim2.step_time(BatchState(32, 2048), "sieve", cost_table=table)
+        t = sim2.step_time(
+            BatchState(32, 2048), "sieve", cost_table=table, n_layer_samples=2
+        )
+        assert t == pytest.approx(res.t_step, rel=0.35)
+
+
+# ---------------------------------------------------------------------------
+# Cluster end-to-end
+# ---------------------------------------------------------------------------
+
+
+def small_cfg() -> ReplicaConfig:
+    return ReplicaConfig(n_slots=4, prefill_chunk=512, max_prefills_per_step=2)
+
+
+class TestCluster:
+    def test_request_conservation_across_router_and_replicas(self):
+        arr = MMPPProcess(
+            rate_calm=30.0, rate_burst=120.0,
+            mean_dwell_calm=0.5, mean_dwell_burst=0.3,
+            lengths=LengthModel(kind="fixed", prompt_mean=256, output_mean=8),
+            seed=5,
+        )
+        cs = ClusterSimulator(
+            MODEL, system(), policy="sieve", n_replicas=3,
+            router_policy="least_kv", replica_cfg=small_cfg(), seed=0,
+        )
+        res = cs.run(arr, horizon=1.5)
+        ids = [r.spec.req_id for r in res.completed]
+        assert len(ids) == res.n_submitted  # no loss
+        assert len(set(ids)) == len(ids)  # no duplication
+        for r in res.completed:
+            assert (
+                r.spec.arrival_time
+                <= r.admit_time
+                <= r.first_token_time
+                <= r.finish_time
+            )
+            assert r.generated == r.spec.output_len
+
+    def test_deterministic_given_seed(self):
+        def run():
+            cs = ClusterSimulator(
+                MODEL, system(), policy="sieve", n_replicas=2,
+                router_policy="jsq", replica_cfg=small_cfg(), seed=0,
+            )
+            arr = PoissonProcess(
+                rate=60.0,
+                lengths=LengthModel(kind="fixed", prompt_mean=256, output_mean=8),
+                seed=2,
+            )
+            res = cs.run(arr, horizon=1.0)
+            return sorted((r.spec.req_id, r.finish_time) for r in res.completed)
+
+        assert run() == run()
+
+    def test_jsq_beats_round_robin_p99_ttft_under_skew(self):
+        """Heavy-tailed prompts + load-oblivious dispatch: round-robin
+        pins the long prefills to whichever replica their turn lands on;
+        JSQ routes around the backlog."""
+        # adversarial replay: every even request drags an 8k prompt
+        rows = []
+        for i in range(24):
+            plen = 8192 if i % 2 == 0 else 64
+            rows.append((0.02 * i, plen, 4))
+        replay = TraceReplay(rows)
+
+        def run(router):
+            cs = ClusterSimulator(
+                MODEL, system(), policy="sieve", n_replicas=2,
+                router_policy=router,
+                replica_cfg=ReplicaConfig(
+                    n_slots=2, prefill_chunk=512, max_prefills_per_step=1
+                ),
+                seed=0,
+            )
+            res = cs.run(replay, horizon=2.0)
+            return res.report()["ttft"]["p99"]
+
+        assert run("jsq") <= run("round_robin")
+
+    def test_cluster_reusable_across_runs(self):
+        """Back-to-back runs on one cluster must not leak request state
+        (warmed step-time caches are kept, completions are not)."""
+        cs = ClusterSimulator(
+            MODEL, system(), policy="sieve", n_replicas=2,
+            router_policy="jsq", replica_cfg=small_cfg(), seed=0,
+        )
+        arr = PoissonProcess(
+            rate=40.0,
+            lengths=LengthModel(kind="fixed", prompt_mean=256, output_mean=8),
+            seed=2,
+        )
+        r1 = cs.run(arr, horizon=1.0)
+        r2 = cs.run(arr, horizon=1.0)
+        assert r1.n_submitted == r2.n_submitted == len(r2.completed)
+        empty = cs.run(PoissonProcess(rate=0.001, seed=0), horizon=1e-3)
+        assert empty.n_submitted == 0 and empty.report()["n_completed"] == 0
+
+    def test_router_rejects_unknown_policy(self):
+        with pytest.raises(ValueError):
+            Router("fastest", [])

@@ -1,7 +1,7 @@
 """EMA cost table tests (paper §5.1 timing models)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import CostModel, CostTable, MoELayerSpec, b200_pim_system
 

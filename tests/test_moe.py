@@ -9,7 +9,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_arch
 from repro.models.moe import (
@@ -124,9 +124,10 @@ arch = get_arch("qwen3-moe-30b-a3b").reduced()
 arch = dataclasses.replace(arch, moe=dataclasses.replace(arch.moe, capacity_factor=8.0, min_capacity=64))
 p = init_moe(jax.random.PRNGKey(0), arch, dtype=jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, arch.d_model))
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh, use_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 mi = MeshInfo(mesh=mesh, data_axes=("data",), model_axis="model")
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     out_ep = jax.jit(lambda p, x: moe_block(p, x, arch, mi))(p, x)
 out_local = moe_block(p, x, arch)
 err = float(jnp.max(jnp.abs(out_ep.y - out_local.y)))

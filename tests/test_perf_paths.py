@@ -9,7 +9,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import CostModel, MoELayerSpec, b200_pim_system
 from repro.core.scheduler import sieve_schedule
@@ -78,9 +78,10 @@ ck = jax.random.normal(ks[1], (B, T, 2, 16))
 cv = jax.random.normal(ks[2], (B, T, 2, 16))
 pos = jnp.array([5, 0, 31, 17], jnp.int32)
 y_ref, ck_ref, cv_ref = gqa_decode(p, x, pos, ck, cv, cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh, use_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 mi = MeshInfo(mesh=mesh, data_axes=("data",), model_axis="model")
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     y_sp, (ck_sp, cv_sp) = jax.jit(
         lambda *a: gqa_decode_seqpar(p, a[0], a[1], a[2], a[3], cfg, mi)
     )(x, pos, ck, cv)
@@ -107,12 +108,13 @@ cfg = AttnConfig(kind="gqa", n_heads=8, n_kv_heads=2, d_head=16, rope_theta=1e4)
 p = init_gqa(jax.random.PRNGKey(0), cfg, 64, jnp.float32)
 B, T = 4, 32
 x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, 64))
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh, use_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 mi = MeshInfo(mesh=mesh, data_axes=("data",), model_axis="model")
 ck = jnp.zeros((B, T, 2, 16)); cv = jnp.zeros((B, T, 2, 16))
 ck8 = jnp.zeros((B, T, 2, 16), jnp.int8); cv8 = jnp.zeros((B, T, 2, 16), jnp.int8)
 ks8 = jnp.zeros((B, T, 2)); vs8 = jnp.zeros((B, T, 2))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     f_ref = jax.jit(lambda *a: gqa_decode_seqpar(p, a[0], a[1], a[2], a[3], cfg, mi))
     f_q = jax.jit(lambda *a: gqa_decode_seqpar(p, a[0], a[1], a[2], a[3], cfg, mi, kv_scales=(a[4], a[5])))
     for t in range(6):
