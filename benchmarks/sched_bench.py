@@ -1,0 +1,178 @@
+"""Scheduler + simulator hot-path benchmark, tracked across PRs.
+
+Measures (1) schedules/sec for the vectorized policies and their retained
+scalar reference oracles on random count vectors (the paper's ~20us/layer
+scheduling budget, §5.2), and (2) the wall-clock of a small cluster sweep
+(the request-level workload whose cost is dominated by the scheduler +
+step-cost hot path).  Results are written to ``benchmarks/out/`` and
+compared against the committed baseline ``benchmarks/BENCH_sched.json``;
+CI runs ``--quick --check`` and fails when schedules/sec regresses more
+than 2x below the baseline.
+
+Regenerate the committed baseline after an intentional perf change:
+
+    PYTHONPATH=src python benchmarks/sched_bench.py --update-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CostModel, CostTable, MoELayerSpec, b200_pim_system
+from repro.core.scheduler import (
+    pimoe_schedule,
+    pimoe_schedule_reference,
+    sieve_schedule,
+    sieve_schedule_reference,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_PATH = os.path.join(REPO, "benchmarks", "BENCH_sched.json")
+
+LAYER = MoELayerSpec(d_model=2048, d_ff=768, n_experts=128, top_k=8)
+
+
+def bench_schedulers(n_vectors: int, iters: int, seed: int = 0) -> dict:
+    """schedules/sec per policy on random qwen3-class count vectors."""
+    cm = CostModel(system=b200_pim_system(), layer=LAYER, pim_attn_time=2e-6)
+    table = CostTable(fallback=cm.t_pim_gemv_roofline)
+    rng = np.random.default_rng(seed)
+    vecs = [rng.integers(0, 65, size=LAYER.n_experts) for _ in range(n_vectors)]
+    for k in rng.integers(1, 64, size=16):  # realistic warm table
+        table.update(int(k), float(rng.uniform(1e-6, 1e-4)))
+
+    policies = {
+        "sieve": lambda c: sieve_schedule(c, cm, table, mode="greedy"),
+        "sieve_argmin": lambda c: sieve_schedule(c, cm, table, mode="argmin"),
+        "pimoe": lambda c: pimoe_schedule(c, cm, table),
+        "sieve_reference": lambda c: sieve_schedule_reference(
+            c, cm, table, mode="greedy"
+        ),
+        "sieve_argmin_reference": lambda c: sieve_schedule_reference(
+            c, cm, table, mode="argmin"
+        ),
+        "pimoe_reference": lambda c: pimoe_schedule_reference(c, cm, table),
+    }
+    out = {}
+    for name, fn in policies.items():
+        ref = name.endswith("_reference")
+        reps = max(1, iters // (8 if ref else 1))  # references are slow
+        for c in vecs[:4]:
+            fn(c)  # warmup
+        t0 = time.perf_counter()
+        n_calls = 0
+        for _ in range(reps):
+            for c in vecs:
+                fn(c)
+                n_calls += 1
+        dt = time.perf_counter() - t0
+        out[name] = n_calls / dt
+    return out
+
+
+def bench_cluster_sweep(horizon: float, seed: int = 0) -> float:
+    """Wall-clock seconds of a small request-level cluster sweep."""
+    from repro.cluster import ClusterSimulator, LengthModel, PoissonProcess
+    from repro.sim import SIM_MODELS
+
+    t0 = time.perf_counter()
+    for policy in ("sieve", "gpu_only", "pimoe"):
+        cs = ClusterSimulator(
+            SIM_MODELS["qwen3-30b"], b200_pim_system(), policy=policy,
+            n_replicas=2, router_policy="jsq", seed=seed,
+        )
+        arr = PoissonProcess(
+            rate=120.0,
+            lengths=LengthModel(kind="lognormal", prompt_mean=512, output_mean=64),
+            seed=seed + 7,
+        )
+        cs.run(arr, horizon)
+    return time.perf_counter() - t0
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="exit nonzero if schedules/sec regresses >2x vs the baseline",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help=f"write results to {BASELINE_PATH}",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--out", default=os.path.join("benchmarks", "out", "sched_bench.json")
+    )
+    args = ap.parse_args(argv)
+
+    n_vectors, iters = (50, 8) if args.quick else (200, 25)
+    horizon = 0.5 if args.quick else 1.5
+
+    sched = bench_schedulers(n_vectors, iters, seed=args.seed)
+    sweep_s = bench_cluster_sweep(horizon, seed=args.seed)
+
+    report = {
+        "config": {
+            "n_experts": LAYER.n_experts,
+            "n_vectors": n_vectors,
+            "quick": args.quick,
+            "cluster_sweep_horizon_s": horizon,
+        },
+        "schedules_per_sec": {k: round(v, 1) for k, v in sched.items()},
+        "speedup_vs_reference": {
+            "sieve": round(sched["sieve"] / sched["sieve_reference"], 2),
+            "sieve_argmin": round(
+                sched["sieve_argmin"] / sched["sieve_argmin_reference"], 2
+            ),
+            "pimoe": round(sched["pimoe"] / sched["pimoe_reference"], 2),
+        },
+        "argmin_vs_greedy_ratio": round(
+            sched["sieve"] / sched["sieve_argmin"], 3
+        ),
+        "cluster_sweep_wall_s": round(sweep_s, 3),
+    }
+    print(json.dumps(report, indent=1))
+
+    out_path = BASELINE_PATH if args.update_baseline else args.out
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}", file=sys.stderr)
+
+    if args.check:
+        if not os.path.exists(BASELINE_PATH):
+            print("no committed baseline; skipping check", file=sys.stderr)
+            return report
+        with open(BASELINE_PATH) as f:
+            base = json.load(f)
+        # Gate on the vectorized-vs-reference speedup ratios, which are
+        # measured within this run and therefore machine-independent —
+        # absolute schedules/sec on a shared CI runner would flap against
+        # a dev-machine baseline with no code change.
+        failures = []
+        for k in ("sieve", "sieve_argmin", "pimoe"):
+            got = report["speedup_vs_reference"][k]
+            want = base["speedup_vs_reference"][k]
+            if got < want / 2.0:
+                failures.append(
+                    f"{k}: {got:.1f}x over reference < baseline {want:.1f}x / 2"
+                )
+        if failures:
+            print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
+            sys.exit(1)
+        print("perf check OK (within 2x of baseline ratios)", file=sys.stderr)
+    return report
+
+
+if __name__ == "__main__":
+    main()

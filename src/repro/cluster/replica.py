@@ -57,6 +57,17 @@ class ReplicaConfig:
     max_prefills_per_step: int = 2
     seq_bucket: int = 256  # KV-depth quantization for the step-time cache
     step_warmup: int = 2  # cost-table warmup calls before caching
+    # Upper bound on exact step-jumping (consecutive pure-decode steps with
+    # an identical duration key collapse into one event); 1 disables.
+    max_step_jump: Optional[int] = None
+
+
+def _remove_identity(lst: List[ClusterRequest], req: ClusterRequest) -> None:
+    """Remove by object identity (dataclass ``==`` compares by value)."""
+    for i, r in enumerate(lst):
+        if r is req:
+            del lst[i]
+            return
 
 
 class Replica:
@@ -81,6 +92,14 @@ class Replica:
         self.queue: List[ClusterRequest] = []
         self.slots: List[Optional[ClusterRequest]] = [None] * self.cfg.n_slots
         self.completed: List[ClusterRequest] = []
+        self._active_cache: Optional[List[ClusterRequest]] = None
+        # Incremental step-planning state: requests mid-prefill in admission
+        # (FIFO) order, requests decoding, and the running sum of the
+        # decoders' KV positions — so start_step is O(changed), not
+        # O(slots) attribute walks per step.
+        self._prefilling: List[ClusterRequest] = []
+        self._decoding: List[ClusterRequest] = []
+        self._pos_sum = 0
 
         self.busy_until: Optional[float] = None  # end of the in-flight step
         self._step_plan: Optional[Tuple[List[ClusterRequest], List[Tuple[ClusterRequest, int]]]] = None
@@ -91,7 +110,11 @@ class Replica:
     # ---- load signals used by the router --------------------------------
     @property
     def active(self) -> List[ClusterRequest]:
-        return [r for r in self.slots if r is not None]
+        """Requests holding a slot, in slot order (cached between admit /
+        retire events — rebuilt lazily, hit once per step otherwise)."""
+        if self._active_cache is None:
+            self._active_cache = [r for r in self.slots if r is not None]
+        return self._active_cache
 
     @property
     def queue_len(self) -> int:
@@ -123,6 +146,10 @@ class Replica:
         self.queue = []
         self.slots = [None] * self.cfg.n_slots
         self.completed = []
+        self._active_cache = None
+        self._prefilling = []
+        self._decoding = []
+        self._pos_sum = 0
         self._step_plan = None
         self.busy_time = 0.0
         self.n_steps = 0
@@ -133,18 +160,36 @@ class Replica:
         self.queue.append(req)
 
     def _admit(self, now: float) -> None:
+        if not self.queue:
+            return
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
                 req = self.queue.pop(0)
                 req.admit_time = now
                 self.slots[i] = req
+                self._active_cache = None
+                if req.prefill_done < req.spec.prompt_len:
+                    self._prefilling.append(req)
+                else:  # degenerate zero-length prompt
+                    self._decoding.append(req)
+                    self._pos_sum += req.prefill_done + req.generated
+
+    def prewarm(self, state: BatchState) -> None:
+        """Converge the EMA cost table on a representative batch state.
+
+        One batched ``step_time_batch`` call absorbs the warmup sequence;
+        idempotent (no-op once warm), so the cluster simulator may prewarm
+        every replica up front and the lazy path stays correct.
+        """
+        if self._warmed:
+            return
+        self.sim.step_time_batch(
+            [state] * self.cfg.step_warmup, self.policy, cost_table=self.cost_table
+        )
+        self._warmed = True
 
     def _step_time(self, state: BatchState) -> float:
-        if not self._warmed:
-            # converge the EMA table before caching any duration
-            for _ in range(self.cfg.step_warmup):
-                self.sim.step_time(state, self.policy, cost_table=self.cost_table)
-            self._warmed = True
+        self.prewarm(state)  # converge the EMA table before caching
         b = self.cfg.seq_bucket
         key = (
             state.n_decode,
@@ -161,46 +206,66 @@ class Replica:
             self._step_cache[key] = hit
         return hit
 
-    def start_step(self, now: float) -> float:
-        """Admit, pick this step's work, and return the step duration."""
+    def start_step(self, now: float, t_limit: float = float("inf")) -> float:
+        """Admit, pick this step's work, and return the in-flight duration.
+
+        Exact step-jumping: a pure-decode step whose composition and
+        duration-cache key cannot change for the next J-1 steps (no prefill
+        transitions, no retirement before step J, the mean KV depth stays
+        inside its cache bucket — it advances exactly 1/step — and no
+        arrival in ``[now, now + (J-1)·dur)`` can be admitted) is identical
+        to its successors, so J steps collapse into one event of duration
+        ``J·dur``.  Step boundaries, per-step durations, and retirement
+        steps are bit-identical to single-stepping; only the event count
+        drops.  ``t_limit`` is the next undispatched arrival's time.
+        """
         assert self.busy_until is None
         self._admit(now)
 
-        prefilling = [
-            r for r in self.active if r.prefill_done < r.spec.prompt_len
-        ][: self.cfg.max_prefills_per_step]
+        # Incrementally-maintained plan state: prefills are chosen in
+        # admission (FIFO) order — the continuous-batching choice — and the
+        # decoders' KV-position sum is carried across steps, so planning
+        # costs O(prefill picks) instead of O(slots) walks per step.
         prefill_work = [
             (r, min(self.cfg.prefill_chunk, r.spec.prompt_len - r.prefill_done))
-            for r in prefilling
+            for r in self._prefilling[: self.cfg.max_prefills_per_step]
         ]
-        decoding = [
-            r
-            for r in self.active
-            if r.prefill_done >= r.spec.prompt_len and not r.done
-        ]
+        decoding = list(self._decoding)
         assert prefill_work or decoding, "start_step called with no work"
 
-        mean_seq = (
-            int(sum(r.position for r in decoding) / len(decoding))
-            if decoding
-            else 0
-        )
+        mean_seq = int(self._pos_sum / len(decoding)) if decoding else 0
         state = BatchState(
             n_decode=len(decoding),
             seq=mean_seq,
             prefill_tokens=sum(n for _, n in prefill_work),
         )
         dur = self._step_time(state)
-        self._step_plan = (decoding, prefill_work)
-        self.busy_until = now + dur
-        self.busy_time += dur
-        self.n_steps += 1
-        return dur
+        n_jump = 1
+        if not prefill_work and decoding and self.cfg.max_step_jump != 1:
+            j = min(r.spec.output_len - r.generated for r in decoding)
+            b = self.cfg.seq_bucket
+            seq = max(mean_seq, 1)
+            j = min(j, -(-seq // b) * b - seq + 1)  # stay in the seq bucket
+            if t_limit != float("inf"):
+                # No arrival may land inside the stretch: it could be
+                # admitted at an intermediate boundary (free slot), and
+                # load-aware routers read per-request positions that jump
+                # mode only materializes at stretch end.
+                j = min(j, int((t_limit - now) / dur))
+            if self.cfg.max_step_jump is not None:
+                j = min(j, self.cfg.max_step_jump)
+            n_jump = max(j, 1)
+        self._step_plan = (decoding, prefill_work, n_jump)
+        span = n_jump * dur
+        self.busy_until = now + span
+        self.busy_time += span
+        self.n_steps += n_jump
+        return span
 
     def finish_step(self, now: float) -> List[ClusterRequest]:
-        """Apply the in-flight step's effects at its end time ``now``."""
+        """Apply the in-flight step(s)' effects at their end time ``now``."""
         assert self._step_plan is not None
-        decoding, prefill_work = self._step_plan
+        decoding, prefill_work, n_jump = self._step_plan
         self._step_plan, self.busy_until = None, None
 
         for r, n in prefill_work:
@@ -209,16 +274,34 @@ class Replica:
                 # the prefill pass samples the first output token
                 r.generated = 1
                 r.first_token_time = now
+                _remove_identity(self._prefilling, r)
+                self._decoding.append(r)
+                self._pos_sum += r.prefill_done + 1
         for r in decoding:
-            r.generated += 1
+            r.generated += n_jump
+        self._pos_sum += n_jump * len(decoding)
 
+        # Only requests this step advanced can retire — scan those instead
+        # of every slot (retirement is rare relative to steps).
         done = []
-        for i, r in enumerate(self.slots):
-            if r is not None and r.done:
+        for r in decoding:
+            if r.generated >= r.spec.output_len:
+                done.append(r)
+        for r, _ in prefill_work:
+            if r.generated >= r.spec.output_len:
+                done.append(r)
+        if done:
+            slots = self.slots
+            for r in done:
                 if r.first_token_time is None:  # output_len == 1 edge
                     r.first_token_time = now
                 r.finish_time = now
-                self.slots[i] = None
+                for i, s in enumerate(slots):  # identity, not dataclass ==
+                    if s is r:
+                        slots[i] = None
+                        break
+                _remove_identity(self._decoding, r)
+                self._pos_sum -= r.prefill_done + r.generated
                 self.completed.append(r)
-                done.append(r)
+            self._active_cache = None
         return done

@@ -17,6 +17,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.cost_model import SystemSpec
+from repro.sim.engine import BatchState
 from repro.sim.models import SimModelConfig
 from .arrivals import ArrivalProcess, RequestSpec
 from .metrics import SLO, summarize
@@ -63,6 +64,12 @@ class ClusterSimulator:
         ]
         self.router = Router(router_policy, self.replicas)
 
+    def set_router(self, router_policy: str) -> None:
+        """Swap the routing policy while keeping the replicas (and their
+        warmed cost tables + step-duration caches).  Sweeps over routers
+        reuse one cluster instead of re-paying warmup per router."""
+        self.router = Router(router_policy, self.replicas)
+
     def run(
         self, arrivals: ArrivalProcess, horizon: float, max_steps: int = 2_000_000
     ) -> ClusterResult:
@@ -75,6 +82,24 @@ class ClusterSimulator:
         specs = sorted(specs, key=lambda s: s.arrival_time)
         for rep in self.replicas:  # allow back-to-back runs on one cluster
             rep.reset_requests()
+        if specs:
+            # Batched cost-table warmup on a representative batch state
+            # (full decode slots at the trace's mean KV depth + one prefill
+            # chunk wave).  One step_time_batch call per replica, before
+            # the event loop — and warmup no longer depends on which
+            # request happens to arrive first.
+            mean_prompt = sum(s.prompt_len for s in specs) / len(specs)
+            mean_out = sum(s.output_len for s in specs) / len(specs)
+            for rep in self.replicas:
+                cfg = rep.cfg
+                rep.prewarm(
+                    BatchState(
+                        n_decode=cfg.n_slots,
+                        seq=int(mean_prompt + mean_out / 2),
+                        prefill_tokens=cfg.prefill_chunk
+                        * cfg.max_prefills_per_step,
+                    )
+                )
         i = 0
         now = 0.0
         steps = 0
@@ -96,9 +121,12 @@ class ClusterSimulator:
             for rep in self.replicas:
                 if rep.busy_until is not None and rep.busy_until <= now + _EPS:
                     rep.finish_step(now)
+            t_arr = (
+                specs[i].arrival_time if i < len(specs) else float("inf")
+            )
             for rep in self.replicas:
                 if rep.busy_until is None and rep.has_work:
-                    rep.start_step(now)
+                    rep.start_step(now, t_arr)
                     steps += 1
             if steps > max_steps:
                 raise RuntimeError(

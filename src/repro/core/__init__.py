@@ -33,7 +33,7 @@ from .distribution import (  # noqa: F401
     gemv_fraction,
     memory_bound_fraction,
 )
-from .overlap import Schedule, chain_layers, list_schedule  # noqa: F401
+from .overlap import CompiledDag, Schedule, chain_layers, list_schedule  # noqa: F401
 from .scheduler import (  # noqa: F401
     POLICIES,
     Partition,
@@ -42,6 +42,8 @@ from .scheduler import (  # noqa: F401
     gpu_only_schedule,
     noexp_schedule,
     pimoe_schedule,
+    pimoe_schedule_reference,
     schedule,
     sieve_schedule,
+    sieve_schedule_reference,
 )

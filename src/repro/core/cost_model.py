@@ -280,7 +280,7 @@ class CostModel:
         xpu = self.system.xpu
         counts = np.asarray(gpu_counts, dtype=np.int64)
         counts = counts[counts > 0]
-        padded = np.asarray([xpu.padded_rows(int(c)) for c in counts], dtype=np.int64)
+        padded = ((counts + xpu.tile_m - 1) // xpu.tile_m) * xpu.tile_m
         flops = float(self.layer.expert_flops(int(padded.sum()))) + self.gpu_base_flops
         return flops / (xpu.peak_flops * self.grouped_gemm_efficiency)
 
@@ -301,6 +301,18 @@ class CostModel:
         flops = self.layer.expert_flops(1)  # one GEMV pass streams the weights
         return n_tokens * flops / pim.peak_ops
 
+    def t_pim_gemv_roofline_vec(self, counts) -> np.ndarray:
+        """Vectorized :meth:`t_pim_gemv_roofline` over an int count array.
+
+        Bit-identical per element to the scalar call (same operation order).
+        """
+        pim = self.system.pim
+        if pim is None:
+            raise ValueError("system has no PIM")
+        c = np.asarray(counts, dtype=np.int64)
+        flops = self.layer.expert_flops(1)
+        return c.astype(np.float64) * flops / pim.peak_ops
+
     def t_pim(
         self,
         pim_counts: Sequence[int],
@@ -313,6 +325,79 @@ class CostModel:
         else:
             gemv = sum(self.t_pim_gemv_roofline(c) for c in counts)
         return self.pim_attn_time + gemv
+
+    # ---- batched prefix-split evaluation (vectorized scheduler core) -----
+    def pim_gemv_times(self, counts, cost_table=None) -> np.ndarray:
+        """Per-expert PIM GEMV seconds for an int count array (zeros -> 0).
+
+        Batched replacement for per-expert ``cost_table.lookup`` /
+        ``t_pim_gemv_roofline`` calls; values are bit-identical to the
+        scalar path.
+        """
+        c = np.asarray(counts, dtype=np.int64)
+        active = c > 0
+        out = np.zeros(c.shape, dtype=np.float64)
+        if active.any():
+            if cost_table is not None:
+                out[active] = cost_table.lookup_vec(c[active])
+            else:
+                out[active] = self.t_pim_gemv_roofline_vec(c[active])
+        return out
+
+    def t_gpu_prefix(self, sorted_counts: np.ndarray) -> np.ndarray:
+        """``t_gpu`` for every prefix of ``sorted_counts`` at once.
+
+        ``sorted_counts`` must be the active (>0) token counts sorted
+        descending; element ``g`` of the result equals
+        ``self.t_gpu(sorted_counts[:g])`` bit-exactly (integer byte/FLOP
+        totals are prefix-summed exactly in int64; the float operations then
+        mirror the scalar path's order).  O(E) instead of O(E^2).
+        """
+        xpu = self.system.xpu
+        sc = np.asarray(sorted_counts, dtype=np.int64)
+        n = sc.shape[0]
+        cum_tok = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(sc, out=cum_tok[1:])
+        padded = ((sc + xpu.tile_m - 1) // xpu.tile_m) * xpu.tile_m
+        cum_pad = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(padded, out=cum_pad[1:])
+        cum_live = np.arange(n + 1, dtype=np.int64)
+
+        m = self.layer
+        # offchip: n_live * expert_param_bytes + token_io_bytes(total) + base
+        traffic = cum_live * m.expert_param_bytes + (
+            2 * cum_tok * m.d_model * m.dtype_bytes
+        )
+        t_offchip = (traffic + self.gpu_base_bytes) / (
+            xpu.hbm_bw * self.hbm_efficiency
+        )
+        # comp: expert_flops(padded total) + base, same operation order as
+        # MoELayerSpec.expert_flops (2.0 * n * n_matrices * d_model * d_ff)
+        flops = 2.0 * cum_pad * m.n_matrices * m.d_model * m.d_ff
+        t_comp = (flops + self.gpu_base_flops) / (
+            xpu.peak_flops * self.grouped_gemm_efficiency
+        )
+        return np.maximum(t_offchip, t_comp)
+
+    def t_pim_suffix(self, sorted_counts: np.ndarray, cost_table=None) -> np.ndarray:
+        """``t_pim`` for every suffix of ``sorted_counts`` at once.
+
+        Element ``g`` equals ``self.t_pim(sorted_counts[g:][::-1], ...)``
+        bit-exactly: the suffix scan accumulates least-popular-first, the
+        same association order a scalar left-to-right sum over the reversed
+        suffix uses (floating-point addition commutes but does not
+        associate, so the order is pinned on both sides).
+        """
+        sc = np.asarray(sorted_counts, dtype=np.int64)
+        n = sc.shape[0]
+        per_expert = self.pim_gemv_times(sc, cost_table)
+        out = np.empty(n + 1, dtype=np.float64)
+        out[n] = 0.0
+        if n:
+            # cumsum over the reversed per-expert times: entry j holds
+            # ts[n-1] + ... + ts[n-1-j]; suffix split g reads entry n-1-g.
+            out[:n] = np.cumsum(per_expert[::-1])[::-1]
+        return self.pim_attn_time + out
 
     # ---- objective -------------------------------------------------------
     def t_total(

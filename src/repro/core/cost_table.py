@@ -7,11 +7,26 @@ token counts it falls back to a roofline estimate — known to be optimistic
 by 1.8-4.2x because it ignores DRAM timing overheads (row-buffer conflicts,
 bank contention, refresh).  The fallback is used at most once per key: the
 first observation replaces it.
+
+Storage is a dense ``count -> seconds`` float64 array (plus a dict spill
+for pathological keys), so the batched queries the vectorized schedulers
+issue are one fancy-index each:
+
+* :meth:`CostTable.lookup` — scalar path, unchanged semantics;
+* :meth:`CostTable.lookup_vec` — batched lookup, bit-identical per element;
+* :meth:`CostTable.update_batch` — sequential-equivalent EMA absorb; one
+  vectorized step when the batch's keys are distinct.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict
+
+import numpy as np
+
+# Observed token counts are bounded by the per-step batch; keys beyond this
+# spill to a dict so a pathological key cannot balloon the dense array.
+_DENSE_CAP = 1 << 20
 
 
 class CostTable:
@@ -21,45 +36,116 @@ class CostTable:
         self,
         fallback: Callable[[int], float],
         alpha: float = 0.25,
+        fallback_vec: Callable[[np.ndarray], np.ndarray] = None,
     ):
         if not (0.0 < alpha <= 1.0):
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         self._fallback = fallback
+        # Optional batched twin of ``fallback`` (must be bit-identical per
+        # element); lets lookup_vec resolve all misses in one array op.
+        self._fallback_vec = fallback_vec
         self.alpha = alpha
-        self._table: Dict[int, float] = {}
+        self._dense = np.zeros(0, dtype=np.float64)
+        self._dense_ok = np.zeros(0, dtype=bool)
+        self._big: Dict[int, float] = {}  # keys >= _DENSE_CAP
         self.n_updates = 0
         self.n_fallback_lookups = 0
+        # Fallback values are deterministic per key; memoize so the batched
+        # path pays for each unobserved count once.
+        self._fallback_memo: Dict[int, float] = {}
 
     # -- queries -----------------------------------------------------------
+    def _get(self, key: int):
+        if 0 <= key < self._dense_ok.shape[0] and self._dense_ok[key]:
+            return float(self._dense[key])
+        return self._big.get(key)
+
     def lookup(self, n_tokens: int) -> float:
-        t = self._table.get(int(n_tokens))
+        t = self._get(int(n_tokens))
         if t is not None:
             return t
         self.n_fallback_lookups += 1
         return self._fallback(int(n_tokens))
 
+    def lookup_vec(self, counts) -> np.ndarray:
+        """Batched :meth:`lookup` over an int array of token counts.
+
+        Returns float64 seconds per element, bit-identical to scalar
+        ``lookup`` on each element.  ``n_fallback_lookups`` advances by the
+        number of unobserved elements, mirroring the scalar accounting.
+        """
+        c = np.asarray(counts, dtype=np.int64)
+        out = np.empty(c.shape, dtype=np.float64)
+        n_dense = self._dense_ok.shape[0]
+        in_range = (c >= 0) & (c < n_dense)
+        hit = np.zeros(c.shape, dtype=bool)
+        if n_dense:
+            hit[in_range] = self._dense_ok[c[in_range]]
+            out[hit] = self._dense[c[hit]]
+        miss = ~hit
+        n_miss = int(miss.sum())
+        if n_miss:
+            if (
+                self._fallback_vec is not None
+                and not self._big
+                and c.min(initial=0) >= 0
+                and c.max(initial=0) < _DENSE_CAP
+            ):
+                out[miss] = self._fallback_vec(c[miss])
+                self.n_fallback_lookups += n_miss
+            else:
+                memo = self._fallback_memo
+                vals = []
+                for k in c[miss].tolist():
+                    t = self._big.get(k)
+                    if t is None:
+                        t = memo.get(k)
+                        if t is None:
+                            t = float(self._fallback(k))
+                            memo[k] = t
+                        self.n_fallback_lookups += 1
+                    vals.append(t)
+                out[miss] = vals
+        return out
+
     def has(self, n_tokens: int) -> bool:
-        return int(n_tokens) in self._table
+        return self._get(int(n_tokens)) is not None
 
     @property
     def coverage(self) -> int:
-        return len(self._table)
+        return int(self._dense_ok.sum()) + len(self._big)
 
     def observed(self) -> Dict[int, float]:
-        return dict(self._table)
+        out = {int(k): float(self._dense[k]) for k in np.nonzero(self._dense_ok)[0]}
+        out.update(self._big)
+        return out
 
     # -- updates -----------------------------------------------------------
+    def _ensure_dense(self, key: int) -> None:
+        if key >= self._dense_ok.shape[0]:
+            new_len = max(2 * self._dense_ok.shape[0], key + 1, 64)
+            dense = np.zeros(new_len, dtype=np.float64)
+            ok = np.zeros(new_len, dtype=bool)
+            dense[: self._dense.shape[0]] = self._dense
+            ok[: self._dense_ok.shape[0]] = self._dense_ok
+            self._dense, self._dense_ok = dense, ok
+
     def update(self, n_tokens: int, observed_time: float) -> float:
         """EMA update; returns the new table value."""
         if observed_time < 0:
             raise ValueError("observed_time must be non-negative")
         key = int(n_tokens)
-        prev = self._table.get(key)
+        prev = self._get(key)
         if prev is None:
             new = float(observed_time)  # first observation replaces fallback
         else:
             new = (1.0 - self.alpha) * prev + self.alpha * float(observed_time)
-        self._table[key] = new
+        if 0 <= key < _DENSE_CAP:
+            self._ensure_dense(key)
+            self._dense[key] = new
+            self._dense_ok[key] = True
+        else:  # negative or pathologically large keys spill to the dict
+            self._big[key] = new
         self.n_updates += 1
         return new
 
@@ -67,13 +153,55 @@ class CostTable:
         for n_tokens, t in items:
             self.update(n_tokens, t)
 
+    def update_batch(self, counts, times, assume_unique: bool = False) -> None:
+        """Sequential-equivalent batch of :meth:`update` calls.
+
+        The per-key EMA recurrence is order-sensitive, so repeated keys are
+        absorbed in the given order; when the batch's keys are distinct
+        (the engine dedupes per-step observations — pass
+        ``assume_unique=True`` to skip the re-check) the whole batch is one
+        vectorized EMA step over the dense array.
+        """
+        c = np.asarray(counts, dtype=np.int64)
+        t = np.asarray(times, dtype=np.float64)
+        if c.shape != t.shape:
+            raise ValueError("counts and times must have matching shapes")
+        if c.size and (t < 0).any():
+            raise ValueError("observed_time must be non-negative")
+        if (
+            c.size
+            and c.min(initial=0) >= 0
+            and c.max(initial=0) < _DENSE_CAP
+            and (assume_unique or np.unique(c).size == c.size)
+        ):
+            self._ensure_dense(int(c.max()))
+            ok = self._dense_ok[c]
+            prev = self._dense[c]
+            new = np.where(ok, (1.0 - self.alpha) * prev + self.alpha * t, t)
+            self._dense[c] = new
+            self._dense_ok[c] = True
+            self.n_updates += c.size
+            return
+        for key, obs in zip(c.tolist(), t.tolist()):
+            self.update(key, obs)
+
     # -- persistence (used by the serving engine across restarts) -----------
     def state_dict(self) -> dict:
-        return {"alpha": self.alpha, "table": dict(self._table)}
+        return {"alpha": self.alpha, "table": self.observed()}
 
     def load_state_dict(self, state: dict) -> None:
         self.alpha = float(state["alpha"])
-        self._table = {int(k): float(v) for k, v in state["table"].items()}
+        self._dense = np.zeros(0, dtype=np.float64)
+        self._dense_ok = np.zeros(0, dtype=bool)
+        self._big = {}
+        for k, v in state["table"].items():
+            key, val = int(k), float(v)
+            if 0 <= key < _DENSE_CAP:
+                self._ensure_dense(key)
+                self._dense[key] = val
+                self._dense_ok[key] = True
+            else:
+                self._big[key] = val
 
 
 def make_roofline_fallback(cost_model) -> Callable[[int], float]:

@@ -73,6 +73,13 @@ class Dag:
         self.topo_order()
         return self
 
+    def compile(self):
+        """Freeze this DAG's topology for repeated duration-array
+        evaluation (see :class:`repro.core.overlap.CompiledDag`)."""
+        from .overlap import CompiledDag
+
+        return CompiledDag(self)
+
 
 def merge_dags(dags: Dict[str, "Dag"]) -> "Dag":
     """Merge independent DAGs (e.g. interleaved half-batches, Fig 6a) into

@@ -77,6 +77,84 @@ class Schedule:
         return list(reversed(path))
 
 
+class CompiledDag:
+    """Topology-frozen DAG for the duration-array fast path.
+
+    ``list_schedule`` rebuilds dicts and dataclasses per call; the simulator
+    evaluates the *same* layer topology thousands of times with different
+    durations.  Compiling freezes the topo order, integer resource ids and
+    integer dependency lists once, so each evaluation is a tight scan over
+    plain floats.  :meth:`makespan` is bit-identical to
+    ``list_schedule(dag).makespan`` for any duration assignment (same
+    visit order, same float operations).
+    """
+
+    __slots__ = ("names", "slot", "resources", "_res", "_deps", "_n")
+
+    def __init__(self, dag: Dag):
+        order = dag.topo_order()
+        self.names: Tuple[str, ...] = tuple(order)
+        self.slot: Dict[str, int] = {n: i for i, n in enumerate(order)}
+        res_names = list(DEFAULT_RESOURCES)
+        for n in order:
+            r = dag.nodes[n].resource
+            if r is not None and r not in res_names:
+                res_names.append(r)
+        self.resources: Tuple[str, ...] = tuple(res_names)
+        rid = {r: i for i, r in enumerate(res_names)}
+        self._res = [
+            rid[dag.nodes[n].resource] if dag.nodes[n].resource is not None else -1
+            for n in order
+        ]
+        self._deps = [
+            tuple(self.slot[d] for d in dag.nodes[n].deps) for n in order
+        ]
+        self._n = len(order)
+
+    def makespan(self, durations) -> float:
+        """Makespan only (the common case); no per-node records kept."""
+        return self.evaluate(durations)[0]
+
+    def evaluate(self, durations):
+        """(makespan, per-resource busy seconds) for one duration vector.
+
+        ``durations`` is indexed in compiled (topo) order — use
+        :attr:`slot` to place named durations.
+        """
+        n_res = len(self.resources)
+        avail = [0.0] * n_res
+        busy = [0.0] * n_res
+        ends = [0.0] * self._n
+        makespan = 0.0
+        for i in range(self._n):
+            ready = 0.0
+            for d in self._deps[i]:
+                e = ends[d]
+                if e > ready:
+                    ready = e
+            r = self._res[i]
+            if r >= 0:
+                a = avail[r]
+                if a > ready:
+                    ready = a
+            dur = durations[i]
+            end = ready + dur
+            ends[i] = end
+            if end > makespan:
+                makespan = end
+            if r >= 0:
+                avail[r] = end
+                busy[r] += dur
+        return makespan, busy
+
+    def utilizations(self, durations) -> Dict[str, float]:
+        ms, busy = self.evaluate(durations)
+        return {
+            r: (busy[i] / ms if ms > 0 else 0.0)
+            for i, r in enumerate(self.resources)
+        }
+
+
 def list_schedule(dag: Dag, start_times: Optional[Dict[str, float]] = None) -> Schedule:
     """Earliest-start list scheduling in topological order.
 

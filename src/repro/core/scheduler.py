@@ -20,6 +20,17 @@ Policies
 ``noexp``          all experts on GPU, attention on PIM (NeuPIMs/PAISE).
 ``allexp``         all experts on PIM (PAPI/Stratum).
 ``gpu_only``       everything (incl. attention) on the GPU.
+
+Hot path
+--------
+``sieve_schedule`` and ``pimoe_schedule`` are vectorized: T_Comm/T_GPU/T_PIM
+are evaluated for *all* prefix splits of the sorted count vector at once via
+cumulative sums (``CostModel.t_gpu_prefix`` / ``t_pim_suffix``), so both the
+paper greedy and the argmin refinement cost one O(E log E) sort plus O(E)
+scans — instead of O(E^2) cost-model calls.  The straightforward scalar
+implementations are retained as ``sieve_schedule_reference`` /
+``pimoe_schedule_reference``: they are the oracles the equivalence suite
+(tests/test_sched_vectorized.py) holds the vectorized path bit-exactly to.
 """
 
 from __future__ import annotations
@@ -94,6 +105,66 @@ def sieve_schedule(
 
     ``counts`` is the global token count per expert hosted on this device
     (after the routing-map AllGather, §6.1 ③).
+
+    Vectorized: the greedy only ever moves the current most-popular expert,
+    so its reachable states are exactly the prefixes of the sorted order.
+    T_total for every prefix split comes from two cumulative-sum scans
+    (O(E) after the sort); the greedy is the first non-improvement in that
+    array and the argmin is its global minimum.  Bit-identical to
+    :func:`sieve_schedule_reference`.
+    """
+    if mode not in ("greedy", "argmin"):
+        raise ValueError(f"unknown mode {mode!r}")
+    ids, counts = _active(counts)
+    total_routed = int(counts.sum())
+    t_comm = cost_model.t_comm(total_routed)
+
+    sorted_counts = counts[ids]  # descending
+    n = len(ids)
+
+    t_gpu_all = cost_model.t_gpu_prefix(sorted_counts)
+    t_pim_all = cost_model.t_pim_suffix(sorted_counts, cost_table)
+    t_all = np.maximum(np.maximum(t_gpu_all, t_pim_all), t_comm)
+
+    if mode == "greedy":
+        # First split whose successor does not strictly improve: the scalar
+        # greedy advances while t[g+1] < t[g] and stops at the first
+        # non-improvement, having evaluated splits 0..g+1.
+        nonimp = np.nonzero(t_all[1:] >= t_all[:-1])[0]
+        g = int(nonimp[0]) if nonimp.size else n
+        iters = g + 2 if g < n else n + 1
+    else:
+        g = int(np.argmin(t_all))  # first occurrence, like the scalar scan
+        iters = n + 1
+
+    part = Partition(
+        gpu_experts=ids[:g].copy(),
+        pim_experts=ids[g:].copy(),
+        t_comm=t_comm,
+        t_gpu=float(t_gpu_all[g]),
+        t_pim=float(t_pim_all[g]),
+        iterations=iters,
+        policy="sieve" if mode == "greedy" else "sieve_argmin",
+        meta={"split": g, "n_active": n},
+    )
+    # no validate() here: a prefix split of distinct active ids satisfies
+    # the partition invariants by construction, and the O(E) set walk is
+    # measurable on the hot path (the scalar reference still validates).
+    return part
+
+
+def sieve_schedule_reference(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+    *,
+    mode: str = "greedy",
+) -> Partition:
+    """Scalar oracle for :func:`sieve_schedule` (O(E^2) cost-model calls).
+
+    Retained for the equivalence suite; do not use on the hot path.  The
+    per-split PIM sum runs least-popular-first (the reversed suffix) so its
+    float association order matches the vectorized suffix scan exactly.
     """
     if mode not in ("greedy", "argmin"):
         raise ValueError(f"unknown mode {mode!r}")
@@ -109,7 +180,7 @@ def sieve_schedule(
     # reachable states are exactly the prefixes of the sorted order).
     def eval_split(g: int):
         gpu_c = sorted_counts[:g]
-        pim_c = sorted_counts[g:]
+        pim_c = sorted_counts[g:][::-1]  # least-popular-first summation
         t_gpu = cost_model.t_gpu(gpu_c)
         t_pim = cost_model.t_pim(pim_c, cost_table)
         return t_gpu, t_pim, max(t_comm, t_gpu, t_pim)
@@ -180,7 +251,117 @@ def pimoe_schedule(
     streaming per expert); stack-level EP is the strongest reasonable
     reading of PIMoE's design and still exhibits the utilization imbalance
     of paper Fig 10.
+
+    Vectorized: per-expert GEMV times are looked up in one batch and each
+    iteration re-runs LPT + channel makespans as array ops; bit-identical
+    to :func:`pimoe_schedule_reference`.
     """
+    ids, counts = _active(counts)
+    n = len(ids)
+    pim = cost_model.system.pim
+    n_channels = pim.stacks if pim is not None else 1
+
+    sorted_counts = counts[ids]
+    if cost_table is not None:
+        gemv = cost_table.lookup_vec(sorted_counts) if n else np.zeros(0)
+    else:
+        gemv = (
+            cost_model.t_pim_gemv_roofline_vec(sorted_counts)
+            if n
+            else np.zeros(0)
+        )
+    # stack-EP: an expert's GEMVs run on a single stack, which serves only
+    # 1/n_stacks of the aggregate PIM bandwidth.
+    gemv_ep = gemv * n_channels
+
+    # Python-scalar loop state: the move loop is sequential by nature (each
+    # LPT re-pack depends on the previous move), so the win comes from O(1)
+    # incremental T_GPU (exact integer byte/FLOP accumulators mirroring
+    # CostModel.t_gpu) and a single LPT pass per move that also records each
+    # channel's first (most popular) expert.
+    cnts = sorted_counts.tolist()
+    times_ep = gemv_ep.tolist()
+    tile = cost_model.system.xpu.tile_m
+    m = cost_model.layer
+    hbm_denom = cost_model.system.xpu.hbm_bw * cost_model.hbm_efficiency
+    flop_denom = (
+        cost_model.system.xpu.peak_flops * cost_model.grouped_gemm_efficiency
+    )
+    gpu_weight_bytes = 0  # n_live * expert_param_bytes
+    gpu_tokens = 0
+    gpu_padded = 0
+    remaining = list(range(n))  # sorted-order indices still on PIM
+    moved: List[int] = []  # sorted-order indices, in move order
+    iters = 0
+    while True:
+        iters += 1
+        # LPT over remaining token counts; track per-channel time load and
+        # the first expert assigned to each channel (= its most popular).
+        loads_cnt = [0.0] * n_channels
+        loads_t = [0.0] * n_channels
+        first_of = [-1] * n_channels
+        for i in remaining:
+            c = 0
+            best = loads_cnt[0]
+            for ch in range(1, n_channels):
+                if loads_cnt[ch] < best:
+                    best, c = loads_cnt[ch], ch
+            loads_cnt[c] = best + cnts[i]
+            loads_t[c] += times_ep[i]
+            if first_of[c] < 0:
+                first_of[c] = i
+        t_pim = max(loads_t) if remaining else 0.0  # no attention term!
+        # incremental T_GPU = max(offchip, comp), same arithmetic as
+        # CostModel.t_gpu on the moved set (integer totals are exact)
+        act_bytes = 2 * gpu_tokens * m.d_model * m.dtype_bytes
+        t_offchip = (
+            gpu_weight_bytes + act_bytes + cost_model.gpu_base_bytes
+        ) / hbm_denom
+        flops = 2.0 * gpu_padded * m.n_matrices * m.d_model * m.d_ff
+        t_comp = (flops + cost_model.gpu_base_flops) / flop_denom
+        t_gpu = t_offchip if t_offchip > t_comp else t_comp
+        if t_pim <= t_gpu or not remaining:
+            break
+        # move the most popular expert from the busiest channel to the GPU
+        busiest = loads_t.index(max(loads_t))
+        mover = first_of[busiest]
+        remaining.remove(mover)
+        moved.append(mover)
+        gpu_weight_bytes += m.expert_param_bytes
+        gpu_tokens += cnts[mover]
+        gpu_padded += -(-cnts[mover] // tile) * tile
+
+    # Final ordering matches the scalar oracle: GPU experts stable-sorted by
+    # count over their *move order* (count ties keep move order); PIM
+    # experts keep the sorted order, which is already count-descending.
+    moved_arr = np.asarray(moved, dtype=np.int64)
+    gpu_order = moved_arr[np.argsort(-sorted_counts[moved_arr], kind="stable")]
+    gpu_ids = ids[gpu_order]
+    pim_ids = ids[np.asarray(remaining, dtype=np.int64)]
+    total_routed = int(counts.sum())
+    # Report the *actual* times (including the terms PIMoE ignored) so the
+    # simulator charges PIMoE for its blind spots.
+    t_pim_actual = cost_model.t_pim(counts[pim_ids], cost_table)
+    part = Partition(
+        gpu_experts=gpu_ids,
+        pim_experts=pim_ids,
+        t_comm=cost_model.t_comm(total_routed),
+        t_gpu=cost_model.t_gpu(counts[gpu_ids]),
+        t_pim=t_pim_actual,
+        iterations=iters,
+        policy="pimoe",
+        meta={"n_active": n},
+    )
+    # validated by construction (disjoint move-set/remainder of active ids)
+    return part
+
+
+def pimoe_schedule_reference(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+) -> Partition:
+    """Scalar oracle for :func:`pimoe_schedule` (per-expert dict walk)."""
     ids, counts = _active(counts)
     n = len(ids)
     pim = cost_model.system.pim
@@ -307,12 +488,19 @@ def pimoe_static_partition(
     shifts).  ``static_pim_ids`` is the expert-id set assigned to PIM during
     calibration (see :func:`pimoe_schedule`); at runtime each activated
     expert executes wherever its id was pinned, regardless of its current
-    token count.
+    token count.  ``static_pim_ids`` may also be a precomputed boolean mask
+    over expert ids (the runtime's O(1) pinning lookup).
     """
     ids, counts = _active(counts)
-    static_pim_ids = set(int(e) for e in static_pim_ids)
-    pim_ids = np.asarray([e for e in ids if int(e) in static_pim_ids], dtype=np.int64)
-    gpu_ids = np.asarray([e for e in ids if int(e) not in static_pim_ids], dtype=np.int64)
+    if isinstance(static_pim_ids, np.ndarray) and static_pim_ids.dtype == np.bool_:
+        mask = static_pim_ids[ids]
+    else:
+        static_arr = np.fromiter(
+            (int(e) for e in static_pim_ids), dtype=np.int64
+        )
+        mask = np.isin(ids, static_arr)
+    pim_ids = ids[mask]
+    gpu_ids = ids[~mask]
     part = Partition(
         gpu_experts=gpu_ids,
         pim_experts=pim_ids,

@@ -54,29 +54,36 @@ class SieveParams:
 
 
 def export_cost_table(cost_table, cost_model, max_count: int) -> np.ndarray:
-    """Dense per-token-count PIM time array for the jit scheduler."""
+    """Dense per-token-count PIM time array for the jit scheduler.
+
+    Batched: one ``lookup_vec`` / roofline evaluation over the whole count
+    range instead of ``max_count`` scalar lookups.
+    """
     out = np.empty(max_count + 1, dtype=np.float32)
     out[0] = 0.0
-    for c in range(1, max_count + 1):
-        out[c] = (
-            cost_table.lookup(c)
-            if cost_table is not None
-            else cost_model.t_pim_gemv_roofline(c)
-        )
+    counts = np.arange(1, max_count + 1, dtype=np.int64)
+    if cost_table is not None:
+        out[1:] = cost_table.lookup_vec(counts)
+    else:
+        out[1:] = cost_model.t_pim_gemv_roofline_vec(counts)
     return out
 
 
-@partial(jax.jit, static_argnames=("params",))
+@partial(jax.jit, static_argnames=("params", "mode"))
 def sieve_partition_jax(
     counts: jax.Array,  # (E,) int32 token count per local expert
     pim_time_by_count: jax.Array,  # (maxc+1,) float32 seconds
     params: SieveParams,
+    mode: str = "argmin",
 ) -> dict:
     """Returns ``gpu_mask`` (E,) bool plus the evaluated split diagnostics.
 
-    Equivalent to ``scheduler.sieve_schedule(..., mode='argmin')`` — the
-    global argmin over the prefix family (the beyond-paper refinement; the
-    paper's first-increase greedy is a prefix of the same family).
+    ``mode='argmin'`` is equivalent to ``scheduler.sieve_schedule(...,
+    mode='argmin')`` — the global argmin over the prefix family (the
+    beyond-paper refinement).  ``mode='greedy'`` reproduces the paper's
+    first-non-improvement stop on the same prefix arrays — the host
+    NumPy scheduler and this jit twin share the cumulative-sum
+    formulation, so both cost one sort + O(E) scans.
     """
     E = counts.shape[0]
     counts = counts.astype(jnp.int32)
@@ -114,7 +121,12 @@ def sieve_partition_jax(
     # splits beyond the active prefix are duplicates of g = n_active
     valid = jnp.arange(E + 1) <= n_active
     t_total = jnp.where(valid, t_total, jnp.inf)
-    g_star = jnp.argmin(t_total)
+    if mode == "greedy":
+        # first split whose successor does not strictly improve (paper §5.2)
+        nonimp = (t_total[1:] >= t_total[:-1]) & valid[1:]
+        g_star = jnp.where(jnp.any(nonimp), jnp.argmax(nonimp), n_active)
+    else:
+        g_star = jnp.argmin(t_total)
 
     rank = jnp.argsort(order, stable=True)  # expert id -> popularity rank
     gpu_mask = (rank < g_star) & (counts > 0)

@@ -22,6 +22,9 @@ Execution model for an expert with ``n`` tokens (NeuPIMs-style, §6.2):
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
 
 from repro.core.cost_model import MoELayerSpec, PIMSpec
 
@@ -139,12 +142,32 @@ class PimGemvModel:
             self.refresh_factor * stream_tok, cmd_tok
         )
 
+    def expert_time_vec(
+        self, layer: MoELayerSpec, counts, n_channels: int | None = None
+    ) -> "np.ndarray":
+        """Batched :meth:`expert_time` (pipelined path).
+
+        One array expression over an int count vector; per element the
+        float operations mirror the scalar path's order, so values are
+        bit-identical to per-count ``expert_time`` calls.
+        """
+        n = np.asarray(counts, dtype=np.int64)
+        act_base, reuse_coeff, tok_cost, rf = _gemv_vec_constants(
+            self, layer, self.pim.n_channels if n_channels is None else n_channels
+        )
+        act = act_base * (1.0 + (n - 1) * reuse_coeff)
+        out = rf * act + n * tok_cost
+        return np.where(n > 0, out, 0.0)
+
     def experts_time_tp(self, layer: MoELayerSpec, counts) -> float:
         """Total PIM time for a set of experts under channel-TP (Sieve §6.2):
         serialized GEMVs at full internal bandwidth, pipelined command path,
         one batch setup."""
-        ts = [self.expert_time(layer, int(n)) for n in counts if n > 0]
-        return (self.expert_setup + sum(ts)) if ts else 0.0
+        c = np.asarray(counts, dtype=np.int64)
+        c = c[c > 0]
+        if c.size == 0:
+            return 0.0
+        return self.expert_setup + float(self.expert_time_vec(layer, c).sum())
 
     def roofline_time(self, layer: MoELayerSpec, n_tokens: int) -> float:
         """The optimistic estimate the paper's fallback uses (§5.1)."""
@@ -156,6 +179,30 @@ class PimGemvModel:
         """actual / roofline — the paper reports 1.8-4.2x at small N."""
         return self.expert_time(layer, n_tokens, isolated=True) / self.roofline_time(
             layer, n_tokens
+        )
+
+    def _gemv_scalar_constants(self, layer: MoELayerSpec, nch: int):
+        """Count-independent factors of :meth:`expert_time` (pipelined).
+
+        Same expressions and evaluation order as the scalar path, so the
+        vectorized twin stays bit-identical; memoized per (model, layer,
+        channel subset) via :func:`_gemv_vec_constants`.
+        """
+        banks = nch * self.pim.banks_per_channel
+        bytes_per_bank = layer.expert_param_bytes / banks
+        pages_per_bank = max(bytes_per_bank / self.pim.page_bytes, 1.0)
+        t_activate = (
+            self.pim.timing.seconds(self.pim.timing.tRC) * self.bank_conflict_factor
+        )
+        per_bank_bw = self.pim.internal_bw / self.n_banks_total
+        t_burst = self.pim.page_bytes / per_bank_bw
+        stream_tok = pages_per_bank * t_burst
+        cmd_tok = self.cmd_time_per_token(layer)
+        return (
+            pages_per_bank * t_activate,
+            1.0 - self.row_reuse,
+            max(self.refresh_factor * stream_tok, cmd_tok),
+            self.refresh_factor,
         )
 
     def attention_time(
@@ -175,3 +222,10 @@ class PimGemvModel:
         t_act_exposed = pages_per_bank * t_activate
         t_cmd = n_requests * self.n_dependent_stages * self.cmd_issue_overhead
         return self.refresh_factor * (t_stream + t_act_exposed) + t_cmd
+
+
+@lru_cache(maxsize=64)
+def _gemv_vec_constants(model: PimGemvModel, layer: MoELayerSpec, nch: int):
+    """Memoized count-independent GEMV timing factors (hashable frozen
+    dataclass keys; both specs are immutable)."""
+    return model._gemv_scalar_constants(layer, nch)

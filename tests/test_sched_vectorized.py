@@ -1,0 +1,319 @@
+"""Equivalence suite for the vectorized scheduler/simulator hot path.
+
+The vectorized prefix-scan schedulers, batched cost-table/cost-model
+queries, and the compiled duration-array DAG evaluator must be
+*bit-identical* to the retained scalar references — these tests are the
+contract that lets the hot path evolve without drifting the simulated
+numbers.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    CostModel,
+    CostTable,
+    MoELayerSpec,
+    b200_pim_system,
+    brute_force_schedule,
+)
+from repro.core.dag import build_moe_layer_dag, merge_dags
+from repro.core.overlap import CompiledDag, list_schedule
+from repro.core.scheduler import (
+    pimoe_schedule,
+    pimoe_schedule_reference,
+    sieve_schedule,
+    sieve_schedule_reference,
+)
+from repro.sim import SIM_MODELS, BatchState, ServingSimulator
+from repro.sim.dram import PimGemvModel
+from repro.sim.engine import pareto_sweep, split_evenly
+
+LAYER = MoELayerSpec(d_model=2048, d_ff=768, n_experts=128, top_k=8)
+SYS = b200_pim_system()
+
+
+def make_cm(**kw):
+    return CostModel(system=SYS, layer=LAYER, **kw)
+
+
+def make_table(seed=0, n=12):
+    cm = make_cm()
+    table = CostTable(fallback=cm.t_pim_gemv_roofline)
+    rng = np.random.default_rng(seed)
+    for k in rng.integers(1, 64, size=n):
+        table.update(int(k), float(rng.uniform(1e-7, 1e-4)))
+    return table
+
+
+counts_strategy = st.lists(
+    st.integers(min_value=0, max_value=64), min_size=1, max_size=32
+).map(np.asarray)
+
+
+def assert_partitions_identical(a, b):
+    assert np.array_equal(a.gpu_experts, b.gpu_experts)
+    assert np.array_equal(a.pim_experts, b.pim_experts)
+    assert a.t_comm == b.t_comm  # bitwise
+    assert a.t_gpu == b.t_gpu
+    assert a.t_pim == b.t_pim
+    assert a.iterations == b.iterations
+    assert a.meta.get("split") == b.meta.get("split")
+
+
+class TestSieveEquivalence:
+    @given(counts=counts_strategy)
+    @settings(max_examples=60, deadline=None)
+    def test_greedy_matches_reference(self, counts):
+        cm = make_cm(pim_attn_time=2e-6, ep_degree=4)
+        assert_partitions_identical(
+            sieve_schedule(counts, cm, mode="greedy"),
+            sieve_schedule_reference(counts, cm, mode="greedy"),
+        )
+
+    @given(counts=counts_strategy)
+    @settings(max_examples=60, deadline=None)
+    def test_argmin_matches_reference(self, counts):
+        cm = make_cm(pim_attn_time=2e-6)
+        assert_partitions_identical(
+            sieve_schedule(counts, cm, mode="argmin"),
+            sieve_schedule_reference(counts, cm, mode="argmin"),
+        )
+
+    @given(counts=counts_strategy)
+    @settings(max_examples=40, deadline=None)
+    def test_matches_reference_with_cost_table(self, counts):
+        cm = make_cm(pim_attn_time=1e-6)
+        table = make_table()
+        for mode in ("greedy", "argmin"):
+            assert_partitions_identical(
+                sieve_schedule(counts, cm, table, mode=mode),
+                sieve_schedule_reference(counts, cm, table, mode=mode),
+            )
+
+    @given(
+        counts=st.lists(
+            st.integers(min_value=0, max_value=48), min_size=1, max_size=9
+        ).map(np.asarray)
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_small_e_against_brute_force(self, counts):
+        """The vectorized argmin finds the best *prefix* split; the 2^E
+        brute force may beat it by at most the m-tile padding slack (the
+        bound the paper's prefix family accepts, see test_scheduler)."""
+        cm = make_cm(pim_attn_time=1e-6)
+        bf = brute_force_schedule(counts, cm)
+        vec = sieve_schedule(counts, cm, mode="argmin")
+        assert vec.t_total <= bf.t_total * 1.10 + 1e-12
+        # and when the brute-force optimum IS a prefix, we find exactly it
+        ref = sieve_schedule_reference(counts, cm, mode="argmin")
+        assert vec.t_total == ref.t_total
+
+
+class TestPimoeEquivalence:
+    @given(counts=counts_strategy)
+    @settings(max_examples=40, deadline=None)
+    def test_matches_reference(self, counts):
+        cm = make_cm()
+        assert_partitions_identical(
+            pimoe_schedule(counts, cm), pimoe_schedule_reference(counts, cm)
+        )
+
+    @given(counts=counts_strategy)
+    @settings(max_examples=30, deadline=None)
+    def test_matches_reference_with_cost_table(self, counts):
+        cm = make_cm()
+        table = make_table(seed=3)
+        assert_partitions_identical(
+            pimoe_schedule(counts, cm, table),
+            pimoe_schedule_reference(counts, cm, table),
+        )
+
+
+class TestBatchedCostQueries:
+    @given(
+        counts=st.lists(
+            st.integers(min_value=1, max_value=200), min_size=1, max_size=64
+        )
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_lookup_vec_matches_scalar(self, counts):
+        table = make_table(seed=1)
+        vec = table.lookup_vec(np.asarray(counts))
+        for i, c in enumerate(counts):
+            assert vec[i] == table.lookup(c)  # bitwise
+
+    def test_lookup_vec_with_vectorized_fallback(self):
+        cm = make_cm()
+        table = CostTable(
+            fallback=cm.t_pim_gemv_roofline,
+            fallback_vec=cm.t_pim_gemv_roofline_vec,
+        )
+        table.update(5, 3e-6)
+        counts = np.array([1, 5, 9, 200, 5])
+        vec = table.lookup_vec(counts)
+        for i, c in enumerate(counts):
+            assert vec[i] == table.lookup(int(c))
+
+    def test_update_batch_matches_sequential(self):
+        rng = np.random.default_rng(2)
+        keys = rng.integers(1, 8, size=64)
+        vals = rng.uniform(1e-7, 1e-4, size=64)
+        a, b = make_table(n=0), make_table(n=0)
+        a.update_batch(keys, vals)
+        for k, v in zip(keys, vals):
+            b.update(int(k), float(v))
+        assert a.observed() == b.observed()  # bitwise per key
+        assert a.n_updates == b.n_updates
+
+    def test_fallback_counter_advances_per_miss(self):
+        table = make_table(n=0)
+        table.update(2, 1e-6)
+        table.lookup_vec(np.array([1, 2, 3, 1]))
+        assert table.n_fallback_lookups == 3  # 1, 3, 1 miss; 2 hits
+
+    def test_state_dict_roundtrip_preserves_vec_path(self):
+        table = make_table(n=4)
+        clone = CostTable(fallback=table._fallback)
+        clone.load_state_dict(table.state_dict())
+        counts = np.arange(1, 70)
+        assert np.array_equal(table.lookup_vec(counts), clone.lookup_vec(counts))
+
+    @given(
+        counts=st.lists(st.integers(min_value=1, max_value=96), min_size=1, max_size=40)
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_dram_expert_time_vec_matches_scalar(self, counts):
+        pm = PimGemvModel(SYS.pim)
+        layer = SIM_MODELS["qwen3-30b"].moe
+        vec = pm.expert_time_vec(layer, np.asarray(counts))
+        for i, c in enumerate(counts):
+            assert vec[i] == pm.expert_time(layer, c)  # bitwise
+
+    def test_prefix_arrays_match_scalar_cost_model(self):
+        cm = make_cm(pim_attn_time=2e-6, gpu_base_flops=1e9, gpu_base_bytes=1e6)
+        rng = np.random.default_rng(0)
+        sc = np.sort(rng.integers(1, 64, size=24))[::-1].copy()
+        table = make_table(seed=5)
+        t_gpu = cm.t_gpu_prefix(sc)
+        t_pim = cm.t_pim_suffix(sc, table)
+        for g in range(len(sc) + 1):
+            assert t_gpu[g] == cm.t_gpu(sc[:g])
+            assert t_pim[g] == cm.t_pim(sc[g:][::-1], table)
+
+
+class TestCompiledDag:
+    def _durs(self, rng):
+        return dict(
+            t_attn=rng.uniform(1e-6, 1e-4),
+            attn_on_pim=bool(rng.integers(2)),
+            t_router=rng.uniform(1e-6, 1e-4),
+            t_qkv_load=float(rng.choice([0.0, 2e-5])),
+            t_prefill_attn=float(rng.choice([0.0, 3e-5])),
+            t_allgather=rng.uniform(1e-6, 1e-4),
+            t_metadata=1e-6,
+            t_dispatch=rng.uniform(1e-6, 1e-4),
+            t_sieve=2e-5,
+            t_load_weights=rng.uniform(1e-6, 1e-4),
+            t_pim_cmds=1e-6,
+            t_grouped_gemm=rng.uniform(1e-6, 1e-4),
+            t_pim_gemv=rng.uniform(1e-6, 1e-4),
+            t_pim_readback=rng.uniform(1e-6, 1e-5),
+            t_combine=rng.uniform(1e-6, 1e-4),
+            t_aggregate=rng.uniform(1e-6, 1e-5),
+            t_shared_load=float(rng.choice([0.0, 1e-5])),
+            t_shared_gemm=float(rng.choice([0.0, 2e-5])),
+        )
+
+    def test_compiled_matches_list_schedule(self):
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            dag = build_moe_layer_dag(**self._durs(rng))
+            compiled = CompiledDag(dag)
+            durations = [dag.nodes[n].duration for n in compiled.names]
+            ms, busy = compiled.evaluate(durations)
+            sched = list_schedule(dag)
+            assert ms == sched.makespan  # bitwise
+            for i, r in enumerate(compiled.resources):
+                assert busy[i] == pytest.approx(sched.busy_time(r), rel=1e-12)
+
+    def test_compiled_matches_on_merged_interleaved_halves(self):
+        rng = np.random.default_rng(11)
+        for _ in range(10):
+            halves = {
+                f"h{h}": build_moe_layer_dag(**self._durs(rng)) for h in range(2)
+            }
+            merged = merge_dags(halves)
+            compiled = CompiledDag(merged)
+            durations = [merged.nodes[n].duration for n in compiled.names]
+            assert compiled.makespan(durations) == list_schedule(merged).makespan
+
+
+class TestEngineFastPath:
+    @pytest.mark.parametrize("policy", ["sieve", "pimoe", "noexp", "gpu_only"])
+    def test_fused_equals_generic_step_time(self, policy):
+        a = ServingSimulator(SIM_MODELS["qwen3-30b"], SYS, seed=5, fused=True)
+        b = ServingSimulator(SIM_MODELS["qwen3-30b"], SYS, seed=5, fused=False)
+        state = BatchState(n_decode=13, seq=1777, prefill_tokens=300)
+        ta = a.step_time(state, policy, n_layer_samples=2)
+        tb = b.step_time(state, policy, n_layer_samples=2)
+        assert ta == tb  # bitwise: fused scan == generic list scheduler
+
+    def test_split_evenly_conserves_tokens(self):
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            total = int(rng.integers(0, 500))
+            k = int(rng.integers(1, 9))
+            parts = split_evenly(total, k)
+            assert sum(parts) == total
+            assert len(parts) == k
+            assert max(parts) - min(parts) <= 1
+            assert all(p >= 0 for p in parts)
+            assert parts == sorted(parts, reverse=True)  # remainder first
+
+    def test_layer_samples_conserve_batch_tokens(self):
+        """The interleave-half/GPU split must neither drop remainder tokens
+        nor invent tokens for tiny batches (regression for the old
+        ``n_decode // n_interleave`` + ``max(dec // n_gpus, 1)`` behavior).
+        """
+        sim = ServingSimulator(SIM_MODELS["gpt-oss-120b"], SYS, seed=0)
+        sampled = []
+        orig = sim.trace.sample_counts_multi
+        sim.trace.sample_counts_multi = lambda sizes, drift=True: (
+            sampled.extend(sizes),
+            orig(sizes, drift),
+        )[1]
+        decodes = []
+        orig_half = sim._half_layer_durations
+
+        def record_half(policy, local, dec, pre, *a, **kw):
+            decodes.append((dec, pre))
+            return orig_half(policy, local, dec, pre, *a, **kw)
+
+        sim._half_layer_durations = record_half
+        sim.step_time(BatchState(n_decode=5, seq=128, prefill_tokens=3), "sieve")
+        assert sum(sampled) == 8  # per layer sample: all tokens routed
+        assert sum(d for d, _ in decodes) == 5  # decode sequences conserved
+        assert sum(p for _, p in decodes) == 3  # prefill tokens conserved
+
+    def test_pareto_sweep_reuses_one_cost_table_per_policy(self, monkeypatch):
+        """Regression: the sweep's EMA table must persist across the batch
+        sweep (it used to be initialized to None and never rebound)."""
+        from repro.sim import engine as engine_mod
+
+        seen = []
+        orig = engine_mod.ServingSimulator.simulate_step
+
+        def spy(self, policy, batch, seq, **kw):
+            seen.append(kw.get("cost_table"))
+            return orig(self, policy, batch, seq, **kw)
+
+        monkeypatch.setattr(engine_mod.ServingSimulator, "simulate_step", spy)
+        pareto_sweep(
+            SIM_MODELS["qwen3-30b"], SYS, policies=["sieve"],
+            batches=[4, 16], n_layer_samples=1, warmup=0,
+        )
+        assert len(seen) == 2
+        assert seen[0] is not None
+        assert seen[0] is seen[1]  # one persistent table across batches
