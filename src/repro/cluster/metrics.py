@@ -119,6 +119,12 @@ def summarize(
         out["replica_steps"] = {
             str(rep.replica_id): rep.n_steps for rep in replicas
         }
+        # MoE capacity-overflow drops (estimated per step by the replica
+        # simulators; live engines report the measured MoEOut.n_dropped)
+        dropped = sum(getattr(rep, "dropped_tokens", 0.0) for rep in replicas)
+        routed = sum(getattr(rep, "routed_tokens", 0.0) for rep in replicas)
+        out["expert_dropped_tokens"] = dropped
+        out["expert_drop_rate"] = dropped / routed if routed > 0 else 0.0
     return out
 
 

@@ -105,7 +105,12 @@ class Replica:
         self._step_plan: Optional[Tuple[List[ClusterRequest], List[Tuple[ClusterRequest, int]]]] = None
         self.busy_time = 0.0
         self.n_steps = 0
-        self._step_cache: Dict[Tuple[int, int, int], float] = {}
+        # MoE capacity-overflow drop accounting (estimated by the step
+        # simulator from the sampled token→expert counts; cached alongside
+        # step durations so step-jumping and cache hits stay consistent)
+        self.dropped_tokens = 0.0
+        self.routed_tokens = 0.0
+        self._step_cache: Dict[Tuple[int, int, int], Tuple[float, float, float]] = {}
 
     # ---- load signals used by the router --------------------------------
     @property
@@ -153,6 +158,8 @@ class Replica:
         self._step_plan = None
         self.busy_time = 0.0
         self.n_steps = 0
+        self.dropped_tokens = 0.0
+        self.routed_tokens = 0.0
 
     def submit(self, req: ClusterRequest, now: float) -> None:
         req.dispatch_time = now
@@ -188,7 +195,8 @@ class Replica:
         )
         self._warmed = True
 
-    def _step_time(self, state: BatchState) -> float:
+    def _step_time(self, state: BatchState) -> Tuple[float, float, float]:
+        """(duration, est. dropped tokens, routed tokens) for one step."""
         self.prewarm(state)  # converge the EMA table before caching
         b = self.cfg.seq_bucket
         key = (
@@ -198,11 +206,12 @@ class Replica:
         )
         hit = self._step_cache.get(key)
         if hit is None:
-            hit = self.sim.step_time(
+            dur = self.sim.step_time(
                 BatchState(key[0], key[1], key[2]),
                 self.policy,
                 cost_table=self.cost_table,
             )
+            hit = (dur, self.sim.last_step_dropped, self.sim.last_step_routed)
             self._step_cache[key] = hit
         return hit
 
@@ -239,7 +248,7 @@ class Replica:
             seq=mean_seq,
             prefill_tokens=sum(n for _, n in prefill_work),
         )
-        dur = self._step_time(state)
+        dur, step_dropped, step_routed = self._step_time(state)
         n_jump = 1
         if not prefill_work and decoding and self.cfg.max_step_jump != 1:
             j = min(r.spec.output_len - r.generated for r in decoding)
@@ -260,6 +269,8 @@ class Replica:
         self.busy_until = now + span
         self.busy_time += span
         self.n_steps += n_jump
+        self.dropped_tokens += n_jump * step_dropped
+        self.routed_tokens += n_jump * step_routed
         return span
 
     def finish_step(self, now: float) -> List[ClusterRequest]:

@@ -49,10 +49,25 @@ class MoEConfig:
     # (cap = min(T, min_capacity) lower bound).
     min_capacity: int = 8
     router_aux_coef: float = 0.01
-    # Sieve integration: "grouped" = everything through grouped GEMM;
-    # "dual" = Sieve dual-path (grouped GEMM for popular experts + streaming
-    # GEMV for the single-token tail).
-    exec_mode: str = "grouped"
+    # Sieve integration — expert execution path:
+    #   "dense"     — one dense einsum over the full (E, C, d) capacity
+    #                 buffer (the bit-level reference oracle);
+    #   "dual_path" — runtime sieve split: popular ("head") experts run as
+    #                 grouped GEMMs, 1-few-token ("tail") experts stream
+    #                 through the expert GEMV — the TPU adaptation of the
+    #                 paper's GPU/PIM split.
+    expert_exec: str = "dense"
+    # Dual-path knobs (ignored under expert_exec="dense"):
+    # tail threshold tau: experts with <= tau buffered rows take the
+    # streaming-GEMV path (paper's PIM side).
+    dual_tail_tokens: int = 1
+    # Head compaction budget H: the grouped-GEMM path runs over the top-H
+    # experts' capacity slabs instead of all E (the sieve "GPU set" size).
+    # 0 = no budget (H = E): exact for any routing at dense-grouped cost.
+    # With 0 < H < E, rows of experts beyond both the budget and the tail
+    # threshold are dropped and counted in MoEOut.n_dropped (same contract
+    # as capacity overflow).
+    dual_max_head: int = 0
 
 
 @dataclass(frozen=True)

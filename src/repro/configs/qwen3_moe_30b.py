@@ -17,7 +17,16 @@ CONFIG = ArchConfig(
     vocab_size=151936,
     attn=AttnConfig(kind="gqa", n_heads=32, n_kv_heads=4, d_head=128,
                     rope_theta=1e6),
-    moe=MoEConfig(n_experts=128, top_k=8, d_expert=768, n_shared=0),
+    # The paper's primary eval model runs the sieve dual path: grouped GEMM
+    # for popular experts, streaming GEMV for the 1-token tail (no head
+    # budget -> exact under any routing).  On non-TPU hosts the XLA twin
+    # of the dual path adds a small constant overhead at decode-sized
+    # batches — accepted so the paper's execution path is exercised
+    # end-to-end; flip expert_exec="dense" for CPU-only throughput work.
+    moe=MoEConfig(
+        n_experts=128, top_k=8, d_expert=768, n_shared=0,
+        expert_exec="dual_path",
+    ),
     norm="rmsnorm",
     act="swiglu",
     pos="rope",

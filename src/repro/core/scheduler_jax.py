@@ -139,3 +139,48 @@ def sieve_partition_jax(
         "t_comm": jnp.asarray(params.t_comm, jnp.float32),
         "n_active": n_active,
     }
+
+
+@partial(jax.jit, static_argnames=("tail_tokens", "max_head"))
+def dual_path_split(
+    rows: jax.Array,  # (E,) int32 buffered rows per local expert
+    tail_tokens: int = 1,
+    max_head: int | None = None,
+) -> dict:
+    """Head/tail partition for the in-graph dual-path MoE executor.
+
+    Same prefix family as :func:`sieve_partition_jax` — the head is always
+    a prefix of the experts sorted by row count (descending) — but with the
+    split pinned by execution-shape constraints rather than the cost model:
+    a tail expert must fit the static ``tail_tokens``-row GEMV slab, so the
+    prefix boundary is the first expert with ``rows <= tail_tokens``.
+
+    ``max_head`` (static) additionally caps the head at the ``max_head``
+    most popular experts (the grouped path's compaction budget).  Rows of
+    experts squeezed out of the capped head beyond their first
+    ``tail_tokens`` rows cannot execute on either path and are reported in
+    ``n_dropped`` (the caller charges them like capacity overflow).
+
+    Fully vectorized and traceable under ``jit`` — counts-driven, no host
+    sync on the decode critical path.
+    """
+    E = rows.shape[0]
+    rows = rows.astype(jnp.int32)
+    order = jnp.argsort(-rows, stable=True)  # popular first
+    rank = jnp.argsort(order, stable=True)  # expert id -> popularity rank
+    head = rows > tail_tokens
+    if max_head is not None and max_head < E:
+        head = head & (rank < max_head)
+    tail = (rows > 0) & ~head
+    # rows that fit neither path: beyond the head budget and past the tail
+    # slab depth
+    overflow = jnp.where((rows > tail_tokens) & ~head, rows - tail_tokens, 0)
+    return {
+        "head_mask": head,
+        "tail_mask": tail,
+        "order": order,
+        "rank": rank,
+        "n_head": jnp.sum(head.astype(jnp.int32)),
+        "n_tail": jnp.sum(tail.astype(jnp.int32)),
+        "n_dropped": jnp.sum(overflow).astype(jnp.int32),
+    }

@@ -8,6 +8,7 @@ the kernels in interpret=True; on TPU they compile to Mosaic).
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
@@ -29,6 +30,36 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+# Mosaic's second-minor ("sublane") tiling granularity: m-block sizes must
+# be multiples of this or the TPU lowering mis-tiles (fp32 tile = (8, 128);
+# bf16's (16, 128) packs two fp32 sublanes, so 8 remains the common base).
+_SUBLANE = 8
+
+
+def _clamp_bm(bm: int, rows: int) -> int:
+    """Clamp the m-block size to the row count without leaving the sublane
+    grid: ``min(bm, rows)`` alone can yield a non-tile-aligned ``bm`` for
+    small row counts (e.g. rows=12 -> bm=12), which Mosaic rejects.  Rounds
+    the clamp target up to a sublane multiple (the wrapper pads rows), then
+    rounds the result down so it stays a valid tile height."""
+    bm = min(bm, _round_up(max(rows, 1), _SUBLANE))
+    bm = max(_SUBLANE, (bm // _SUBLANE) * _SUBLANE)
+    assert bm % _SUBLANE == 0 and bm >= _SUBLANE, bm
+    return bm
+
+
+def _fit_block(b: int, dim: int) -> int:
+    """Largest block size <= ``b`` that divides ``dim`` (k/n tile dims are
+    not padded by the wrappers, so the block must divide exactly).  For
+    power-of-two defaults this is gcd, which keeps the big power-of-two
+    factor — e.g. dim=768 (qwen3 d_expert) with the default b=512 -> 256
+    instead of the old ``min`` clamp's assert failure."""
+    b = min(b, dim)
+    if dim % b:
+        b = math.gcd(b, dim)
+    return b
+
+
 # ---------------------------------------------------------------------------
 # Grouped GEMM
 # ---------------------------------------------------------------------------
@@ -36,31 +67,36 @@ def _round_up(x: int, m: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("group_padded", "bm", "bk", "bn", "interpret"))
 def gmm_capacity(
-    buf: jax.Array,  # (E, C, K) capacity-layout dispatch buffer
+    buf: jax.Array,  # (G, C, K) capacity-layout dispatch buffer
     rhs: jax.Array,  # (E, K, N)
-    group_sizes: jax.Array,  # (E,) real rows per expert
+    group_sizes: jax.Array,  # (G,) real rows per group
     group_padded: int | None = None,
     bm: int = 128,
     bk: int = 512,
     bn: int = 128,
     interpret: bool | None = None,
+    rhs_of_group: jax.Array | None = None,  # (G,) weight row per group
 ) -> jax.Array:
-    """Grouped GEMM over the (E, C, K) capacity buffer -> (E, C, N).
+    """Grouped GEMM over the (G, C, K) capacity buffer -> (G, C, N).
 
-    C is padded to a multiple of bm so each m-tile belongs to one expert;
-    tiles with no live rows skip their MXU work.
+    C is padded to a multiple of bm so each m-tile belongs to one group;
+    tiles with no live rows skip their MXU work.  Usually G == E and group
+    g multiplies ``rhs[g]``; pass ``rhs_of_group`` to let several groups
+    share one expert's weights (the EP a2a layout, where each (expert,
+    source-shard) segment is its own ragged group).
     """
     if interpret is None:
         interpret = _interpret_default()
-    E, C, K = buf.shape
+    G, C, K = buf.shape
     N = rhs.shape[2]
-    bm = min(bm, C)
+    bm = _clamp_bm(bm, C)
+    bk, bn = _fit_block(bk, K), _fit_block(bn, N)
     Cp = _round_up(C, bm)
     if Cp != C:
         buf = jnp.pad(buf, ((0, 0), (0, Cp - C), (0, 0)))
-    lhs = buf.reshape(E * Cp, K)
+    lhs = buf.reshape(G * Cp, K)
     tiles_per_group = Cp // bm
-    m_tiles = E * tiles_per_group
+    m_tiles = G * tiles_per_group
     group_of_tile = (
         jnp.arange(m_tiles, dtype=jnp.int32) // tiles_per_group
     )
@@ -69,9 +105,10 @@ def gmm_capacity(
     ) * bm
     out = _grouped_gemm(
         lhs, rhs, group_sizes.astype(jnp.int32), group_of_tile, row_in_group,
+        rhs_of_group,
         bm=bm, bk=bk, bn=bn, interpret=interpret,
     )
-    return out.reshape(E, Cp, N)[:, :C, :]
+    return out.reshape(G, Cp, N)[:, :C, :]
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
@@ -94,6 +131,11 @@ def gmm_ragged(
     M, K = lhs.shape
     E = rhs.shape[0]
     bm = min(bm, M)
+    assert bm % _SUBLANE == 0, (
+        f"gmm_ragged: bm={bm} is not a sublane multiple ({_SUBLANE}); the "
+        "caller-built layout must use an aligned block size"
+    )
+    bk, bn = _fit_block(bk, K), _fit_block(bn, rhs.shape[2])
     padded = ((group_sizes + bm - 1) // bm) * bm
     tile_counts = padded // bm
     m_tiles = M // bm
@@ -132,6 +174,8 @@ def expert_gemv(
     if interpret is None:
         interpret = _interpret_default()
     S = tokens.shape[0]
+    bk = _fit_block(bk, tokens.shape[1])
+    bn = _fit_block(bn, weights.shape[2])
     if valid is None:
         valid = jnp.ones((S,), jnp.int32)
     return _expert_gemv(

@@ -12,20 +12,26 @@ Design (DESIGN.md §5, §8.2):
   ``jax.lax.all_to_all`` inside ``shard_map`` (the paper's ⑤/⑨ a2a steps).
 * **Sieve integration**: per-layer expert token counts are computed in-graph
   and exposed to the serving engine (which feeds the EMA cost table and the
-  Sieve scheduler).  ``exec_mode="dual"`` routes single-token experts
-  through the streaming GEMV path (kernels/expert_gemv) and multi-token
-  experts through the grouped path — the TPU adaptation of the paper's
-  PIM/GPU split (DESIGN.md §2).
+  Sieve scheduler).  ``expert_exec="dual_path"`` routes 1-few-token
+  ("tail") experts through the streaming GEMV path (kernels/expert_gemv)
+  and popular ("head") experts through grouped GEMMs
+  (kernels/grouped_gemm) — the TPU adaptation of the paper's PIM/GPU split
+  (DESIGN.md §2).  The split is computed in-graph from the routed counts
+  (:func:`repro.core.scheduler_jax.dual_path_split`): counts-driven, no
+  host sync on the decode critical path.  ``expert_exec="dense"`` keeps the
+  one-einsum capacity path as the bit-level reference oracle.
 """
 
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MoEConfig
+from repro.core.scheduler_jax import dual_path_split
 from .layers import _he
 
 from .shard_compat import shard_map_unchecked as _shard_map
@@ -200,16 +206,231 @@ def combine(
 
 
 # ---------------------------------------------------------------------------
-# Expert FFN compute (grouped over the capacity buffer)
+# Expert FFN compute: dense oracle + sieve dual-path executor
 # ---------------------------------------------------------------------------
 
 
 def experts_ffn(params: dict, buf: jax.Array) -> jax.Array:
-    """SwiGLU over (E_local, C_total, d) with (E_local, d, f) weights."""
+    """SwiGLU over (E_local, C_total, d) with (E_local, d, f) weights.
+
+    The dense reference oracle: every capacity slot — live or padding —
+    pays full FLOPs.  ``experts_ffn_dual`` is the runtime sieve split that
+    skips the dead work.
+    """
     gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
     up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
     h = jax.nn.silu(gate) * up
     return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def _dual_backend() -> str:
+    """Kernel backend for the dual path: Pallas on TPU, XLA ragged ops on
+    CPU/GPU hosts (where interpret-mode Pallas would be pure overhead).
+    ``REPRO_DUAL_BACKEND=pallas|xla`` overrides (tests force ``pallas`` to
+    make the kernels load-bearing under interpret mode)."""
+    env = os.environ.get("REPRO_DUAL_BACKEND")
+    if env in ("pallas", "xla"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _swiglu_grouped_pallas(slab, wg, wu, wd, sizes, rhs_of_group=None):
+    """Head path: gate/up/down as three grouped matmuls over the capacity
+    slab; tiles of dead rows skip their MXU work inside the kernel."""
+    from repro.kernels import ops
+
+    gate = ops.gmm_capacity(slab, wg, sizes, rhs_of_group=rhs_of_group)
+    up = ops.gmm_capacity(slab, wu, sizes, rhs_of_group=rhs_of_group)
+    h = jax.nn.silu(gate) * up
+    return ops.gmm_capacity(h, wd, sizes, rhs_of_group=rhs_of_group)
+
+
+def _swiglu_grouped_xla(slab, wg, wu, wd, sizes, rhs_of_group=None):
+    """XLA twin of the grouped head path (einsum + live-row mask)."""
+    if rhs_of_group is not None:
+        wg, wu, wd = wg[rhs_of_group], wu[rhs_of_group], wd[rhs_of_group]
+    gate = jnp.einsum("gcd,gdf->gcf", slab, wg)
+    up = jnp.einsum("gcd,gdf->gcf", slab, wu)
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("gcf,gfd->gcd", h, wd)
+    live = (
+        jnp.arange(slab.shape[1], dtype=jnp.int32)[None, :] < sizes[:, None]
+    )
+    return y * live[..., None].astype(y.dtype)
+
+
+def _swiglu_gemv_pallas(toks, wg, wu, wd, eids, valid):
+    """Tail path: each row streams its expert's weights (the PIM proxy)."""
+    from repro.kernels import ops
+
+    gate = ops.expert_gemv(toks, wg, eids, valid)
+    up = ops.expert_gemv(toks, wu, eids, valid)
+    h = jax.nn.silu(gate) * up
+    return ops.expert_gemv(h, wd, eids, valid)
+
+
+def _tail_path(slab, wg, wu, wd, e_of_g, valid, backend, gather_w: bool):
+    """Shared tail executor over the (G, tau, d) per-group slab.
+
+    ``valid`` is the (G, tau) live-row mask; ``gather_w`` is False when
+    groups already align 1:1 with the weight rows (plain layout, where an
+    identity gather would only copy the weights)."""
+    G, tau, d = slab.shape
+    if backend == "pallas":
+        toks = slab.reshape(G * tau, d)
+        eids = jnp.repeat(e_of_g, tau)
+        ty = _swiglu_gemv_pallas(
+            toks, wg, wu, wd, eids, valid.reshape(G * tau).astype(jnp.int32)
+        )
+        return ty.reshape(G, tau, d)
+    if gather_w:
+        wg, wu, wd = wg[e_of_g], wu[e_of_g], wd[e_of_g]
+    tg = jnp.einsum("gtd,gdf->gtf", slab, wg)
+    tu = jnp.einsum("gtd,gdf->gtf", slab, wu)
+    th = jax.nn.silu(tg) * tu
+    ty = jnp.einsum("gtf,gfd->gtd", th, wd)
+    return ty * valid[..., None].astype(ty.dtype)
+
+
+def experts_ffn_dual(
+    params: dict,
+    buf: jax.Array,  # (E, C, d) capacity dispatch buffer
+    rows: jax.Array,  # (E,) live rows per expert (routed count clipped at C)
+    cfg: MoEConfig,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Runtime sieve-split dual-path expert execution.
+
+    Splits the experts on the in-graph prefix rule
+    (:func:`dual_path_split`): experts with more than
+    ``cfg.dual_tail_tokens`` buffered rows form the *head* and run as three
+    grouped matmuls over their capacity slabs (compacted to the
+    ``cfg.dual_max_head`` most popular experts when a budget is set); the
+    remaining *tail* experts stream their rows through the expert-GEMV
+    kernel.  Head and tail cover disjoint buffer rows, so the merge is one
+    add.  Returns ``(y_buf, n_exec_dropped)`` where the drop count is
+    nonzero only when a head budget squeezes a >tau-row expert off the
+    grouped path (0 with the default ``dual_max_head=0``).
+    """
+    if backend is None:
+        backend = _dual_backend()
+    E, C, d = buf.shape
+    tau = int(min(max(cfg.dual_tail_tokens, 0), C))
+    H = cfg.dual_max_head if 0 < cfg.dual_max_head < E else E
+    split = dual_path_split(
+        rows, tail_tokens=tau, max_head=(H if H < E else None)
+    )
+    head_sizes_full = jnp.where(split["head_mask"], rows, 0).astype(jnp.int32)
+
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    if H < E:
+        # compact: gather the H most popular experts' slabs and weights
+        hid = split["order"][:H]
+        slab = buf[hid]
+        head_sizes = head_sizes_full[hid]
+        wgh, wuh, wdh = wg[hid], wu[hid], wd[hid]
+    else:
+        slab, head_sizes = buf, head_sizes_full
+        wgh, wuh, wdh = wg, wu, wd
+
+    if backend == "pallas":
+        y_head = _swiglu_grouped_pallas(slab, wgh, wuh, wdh, head_sizes)
+    else:
+        y_head = _swiglu_grouped_xla(slab, wgh, wuh, wdh, head_sizes)
+    if H < E:
+        y = jnp.zeros((E, C, d), y_head.dtype).at[hid].set(y_head)
+    else:
+        y = y_head
+
+    if tau > 0:
+        # tail slab: every expert's first tau capacity rows; rows of head
+        # experts / beyond the live count are masked invalid.
+        live = jnp.arange(tau, dtype=jnp.int32)[None, :] < jnp.minimum(
+            rows, tau
+        )[:, None]
+        valid = split["tail_mask"][:, None] & live
+        ty = _tail_path(
+            buf[:, :tau, :], wg, wu, wd,
+            jnp.arange(E, dtype=jnp.int32), valid, backend, gather_w=False,
+        )
+        y = y.at[:, :tau, :].add(ty.astype(y.dtype))
+
+    return y.astype(buf.dtype), split["n_dropped"]
+
+
+def experts_ffn_dual_segmented(
+    params: dict,
+    buf: jax.Array,  # (E, S, C, d): S ragged segments per local expert
+    sizes: jax.Array,  # (E, S) live rows per (expert, segment)
+    cfg: MoEConfig,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Dual-path execution over the EP a2a layout.
+
+    After the dispatch all_to_all each local expert's rows arrive as one
+    capacity segment per source shard; every (expert, segment) pair is its
+    own ragged group (a hot expert's 1-token segment from a quiet shard
+    still takes the GEMV path).  Groups share their expert's weights via
+    the kernel's ``rhs_of_group`` table — no weight replication.  No head
+    budget here (compaction would have to span segments), so nothing is
+    ever dropped.
+    """
+    if backend is None:
+        backend = _dual_backend()
+    E, S, C, d = buf.shape
+    G = E * S
+    tau = int(min(max(cfg.dual_tail_tokens, 0), C))
+    rows_g = sizes.reshape(G).astype(jnp.int32)
+    e_of_g = jnp.repeat(jnp.arange(E, dtype=jnp.int32), S)
+    split = dual_path_split(rows_g, tail_tokens=tau, max_head=None)
+    head_sizes = jnp.where(split["head_mask"], rows_g, 0).astype(jnp.int32)
+
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    slab = buf.reshape(G, C, d)
+    if backend == "pallas":
+        y = _swiglu_grouped_pallas(
+            slab, wg, wu, wd, head_sizes, rhs_of_group=e_of_g
+        )
+    else:
+        y = _swiglu_grouped_xla(
+            slab, wg, wu, wd, head_sizes, rhs_of_group=e_of_g
+        )
+
+    if tau > 0:
+        live = jnp.arange(tau, dtype=jnp.int32)[None, :] < jnp.minimum(
+            rows_g, tau
+        )[:, None]
+        valid = split["tail_mask"][:, None] & live
+        ty = _tail_path(
+            slab[:, :tau, :], wg, wu, wd, e_of_g, valid, backend,
+            gather_w=True,
+        )
+        y = y.at[:, :tau, :].add(ty.astype(y.dtype))
+    return y.reshape(E, S, C, d).astype(buf.dtype)
+
+
+_EXEC_MODES = ("dense", "dual_path")
+
+
+def _check_expert_exec(cfg: MoEConfig) -> None:
+    if cfg.expert_exec not in _EXEC_MODES:
+        raise ValueError(
+            f"unknown MoEConfig.expert_exec {cfg.expert_exec!r}; "
+            f"expected one of {_EXEC_MODES}"
+        )
+
+
+def experts_ffn_exec(
+    params: dict,
+    buf: jax.Array,  # (E, C, d)
+    rows: jax.Array,  # (E,) live rows per expert
+    cfg: MoEConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch on ``cfg.expert_exec``; returns (y_buf, n_exec_dropped)."""
+    _check_expert_exec(cfg)
+    if cfg.expert_exec == "dual_path":
+        return experts_ffn_dual(params, buf, rows, cfg)
+    return experts_ffn(params, buf), jnp.zeros((), jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -232,9 +453,10 @@ def moe_local(params: dict, x: jax.Array, arch: ArchConfig) -> MoEOut:
     r = route(x, params["w_router"], cfg)
     cap = capacity(T, cfg, cfg.n_experts)
     disp = dispatch(x, r, cfg.n_experts, cap)
-    y_buf = experts_ffn(params, disp.buf)
+    rows = jnp.minimum(r.counts, cap)
+    y_buf, exec_dropped = experts_ffn_exec(params, disp.buf, rows, cfg)
     y = combine(y_buf, disp.slot_of, r.weights, T)
-    return MoEOut(y, r.aux_loss, r.counts, disp.n_dropped)
+    return MoEOut(y, r.aux_loss, r.counts, disp.n_dropped + exec_dropped)
 
 
 def _ep_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEOut:
@@ -269,7 +491,12 @@ def _ep_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEO
     shard = jax.lax.axis_index(axis)
     disp = dispatch(x, r, E, cap, expert_offset=shard * E_loc, n_local=E_loc)
 
-    y_buf = experts_ffn(params, disp.buf)  # (E_loc, cap, d)
+    # (E_loc,) rows actually in this shard's buffer: the local slice of the
+    # global routed counts, clipped at capacity.
+    local_rows = jnp.minimum(
+        jax.lax.dynamic_slice(r.counts, (shard * E_loc,), (E_loc,)), cap
+    )
+    y_buf, exec_dropped = experts_ffn_exec(params, disp.buf, local_rows, cfg)
     y_partial = combine(y_buf, disp.slot_of, r.weights, T)
     y = jax.lax.psum(y_partial, axis)
 
@@ -277,7 +504,7 @@ def _ep_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEO
     # router saw this data shard's tokens; sum over the data axes.
     counts = r.counts
     aux = r.aux_loss
-    dropped = jax.lax.psum(disp.n_dropped, axis)
+    dropped = jax.lax.psum(disp.n_dropped + exec_dropped, axis)
     if mi.data_axes:
         counts = jax.lax.psum(counts, mi.data_axes)
         aux = jax.lax.pmean(aux, mi.data_axes)
@@ -310,9 +537,22 @@ def _ep_a2a_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> 
     # ⑤ dispatch: (E, cap, d) -> (E_loc, nm * cap, d)
     buf = disp.buf.reshape(nm, E_loc, cap, d)
     buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1, tiled=False)
-    buf = buf.reshape(E_loc, nm * cap, d)
 
-    y_buf = experts_ffn(params, buf)
+    _check_expert_exec(cfg)
+    if cfg.expert_exec == "dual_path":
+        # every (local expert, source shard) capacity segment is its own
+        # ragged group; segment sizes come from the shards' routed counts
+        # (one tiny all_gather — the paper's routing-map AllGather ③).
+        shard = jax.lax.axis_index(axis)
+        counts_all = jax.lax.all_gather(r.counts, axis)  # (nm, E)
+        local = jax.lax.dynamic_slice(
+            counts_all, (0, shard * E_loc), (nm, E_loc)
+        )
+        sizes = jnp.minimum(local.T, cap)  # (E_loc, nm)
+        y_buf = experts_ffn_dual_segmented(params, buf, sizes, cfg)
+        y_buf = y_buf.reshape(E_loc, nm * cap, d)
+    else:
+        y_buf = experts_ffn(params, buf.reshape(E_loc, nm * cap, d))
 
     # ⑨ combine: reverse the exchange
     y_buf = y_buf.reshape(E_loc, nm, cap, d)
@@ -345,13 +585,11 @@ def moe_block(
     xt = x.reshape(B * S, d)
 
     if mi.mesh is not None and mi.ep_size > 1 and cfg.n_experts % mi.ep_size == 0:
-        import os as _os
-
         dp_size = 1
         for a in mi.data_axes:
             dp_size *= mi.mesh.shape[a]
         use_a2a = (
-            _os.environ.get("REPRO_EP_MODE", "psum") == "a2a"
+            os.environ.get("REPRO_EP_MODE", "psum") == "a2a"
             and (B * S) % (dp_size * mi.ep_size) == 0
         )
         routed_params = {

@@ -42,11 +42,24 @@ class EngineStats:
     decode_tokens: int = 0
     prefill_tokens: int = 0
     wall_time: float = 0.0
+    # capacity/dual-path overflow drops measured in-graph
+    # (MoEOut.n_dropped summed over layers), next to the routed totals so
+    # drop *rate* can sit beside TTFT/TPOT in reports
+    dropped_tokens: int = 0
+    routed_tokens: int = 0
     partitions: List[Dict] = field(default_factory=list)
 
     @property
     def throughput(self) -> float:
         return self.decode_tokens / self.wall_time if self.wall_time else 0.0
+
+    @property
+    def drop_rate(self) -> float:
+        return (
+            self.dropped_tokens / self.routed_tokens
+            if self.routed_tokens
+            else 0.0
+        )
 
 
 class ServingEngine:
@@ -157,9 +170,12 @@ class ServingEngine:
                 P = prompt.shape[1]
                 pos = jnp.broadcast_to(jnp.arange(P), (1, P))
                 batch["mrope_positions"] = jnp.stack([pos, pos, pos])
-            logits, self.cache, _ = self._prefill_chunk(
+            logits, self.cache, p_aux = self._prefill_chunk(
                 self.params, batch, self.cache, req.slot
             )
+            if self.is_moe:
+                self.stats.dropped_tokens += int(p_aux.dropped)
+                self.stats.routed_tokens += int(np.asarray(p_aux.counts).sum())
             req.prefill_done = len(req.prompt)
             self.stats.prefill_tokens += len(req.prompt)
             tok = self._sample(np.asarray(logits)[:, -1])
@@ -190,6 +206,9 @@ class ServingEngine:
             for r in batch_reqs:
                 r.generated.append(int(toks[r.slot]))
                 self.stats.decode_tokens += 1
+            if self.is_moe:
+                self.stats.dropped_tokens += int(aux.dropped)
+                self.stats.routed_tokens += int(np.asarray(aux.counts).sum())
             if self.is_moe and aux.counts.shape[0] > 0:
                 self._run_sieve(np.asarray(aux.counts))
 

@@ -194,9 +194,22 @@ class ServingSimulator:
         seed: int = 0,
         n_interleave: int = 2,
         fused: bool = True,
+        capacity_factor: float = 1.25,
+        min_capacity: int = 8,
     ):
         self.model = model
         self.system = system
+        # Capacity-dispatch mirror of models.moe.capacity: overflow tokens
+        # in the sampled token→expert draws are *dropped* by the runtime,
+        # and the estimate is surfaced per step (last_step_dropped /
+        # last_step_routed) so cluster reports can show drop rate next to
+        # TTFT/TPOT.
+        self.capacity_factor = capacity_factor
+        self.min_capacity = min_capacity
+        self.last_step_dropped = 0.0
+        self.last_step_routed = 0.0
+        self._layer_dropped = 0.0
+        self._layer_routed = 0.0
         self.n_gpus = model.n_gpus
         self.gpu = GpuModel(system.xpu)
         self.pim = PimGemvModel(system.pim) if system.pim is not None else None
@@ -487,6 +500,27 @@ class ServingSimulator:
         counts_by_half = self.trace.sample_counts_multi(
             [d + p for d, p in live]
         )
+        if schedule_dag and live:
+            # capacity-overflow drop estimate on the sampled assignments
+            # (mirrors models.moe.capacity / dispatch).  One vectorized
+            # expression across halves, and skipped entirely for warmup
+            # calls (schedule_dag=False), to keep the PR-2 hot path lean.
+            moe = self.model.moe
+            toks = np.asarray([d + p for d, p in live], dtype=np.int64)
+            caps = (
+                -(-(toks * moe.top_k * self.capacity_factor) // moe.n_experts)
+            ).astype(np.int64)
+            caps = np.maximum(
+                caps, np.maximum(np.minimum(toks, self.min_capacity), 1)
+            )
+            cnts = np.stack(counts_by_half)  # (halves, E)
+            self._layer_dropped = float(
+                np.maximum(cnts - caps[:, None], 0).sum()
+            )
+            self._layer_routed = float(cnts.sum())
+        elif schedule_dag:  # zero-token step: nothing routed, nothing lost
+            self._layer_dropped = 0.0
+            self._layer_routed = 0.0
         per_half: List[List[Tuple[_HalfFlags, Dict[str, float], Partition]]] = []
         for (dec_h, pre_tok_h), counts in zip(live, counts_by_half):
             local = self._local_expert_counts(counts)
@@ -560,7 +594,7 @@ class ServingSimulator:
         """
         if cost_table is None:
             cost_table = self._default_cost_table()
-        ts = []
+        ts, ds, rs = [], [], []
         for _ in range(max(n_layer_samples, 1)):
             t_layer, _, _ = self._sample_layer(
                 policy,
@@ -570,6 +604,10 @@ class ServingSimulator:
                 cost_table,
             )
             ts.append(t_layer)
+            ds.append(self._layer_dropped)
+            rs.append(self._layer_routed)
+        self.last_step_dropped = float(np.mean(ds)) * self.model.n_layers
+        self.last_step_routed = float(np.mean(rs)) * self.model.n_layers
         return float(np.mean(ts)) * self.model.n_layers + self._t_lm_head()
 
     def step_time_batch(
