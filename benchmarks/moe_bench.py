@@ -12,6 +12,13 @@ token→expert bimodality regimes:
 * ``onehot``    — paper-style one-hot-heavy traffic: 90% of assignments
   land on 8 hot experts (§6.2-6.3 bimodal distribution).
 
+Each zipf/one-hot cell additionally times ``expert_exec="dual_path_cost"``
+(the cost-driven split over the default roofline SieveState) — the
+``cost_vs_threshold`` regime: ``cost_exec_ms`` / ``cost_speedup`` sit next
+to the threshold path's numbers and ``cost_vs_threshold`` is the direct
+threshold/cost wall-time ratio, so a regression in the in-graph argmin
+split shows up as its own gated number (``gate_speedup_cost``).
+
 Methodology: routing is synthetic (fixed expert_idx draws per regime, so
 both paths execute identical assignments), paths are jit-compiled and
 timed with ``block_until_ready`` (best of ``iters``, robust against
@@ -21,10 +28,12 @@ ragged backend — the same algorithm the Pallas kernels implement on TPU
 tests/test_moe_dual.py).  Exec-time drops from the head-compaction budget
 are recorded per cell (0 = bit-exact vs dense).
 
-CI runs ``--quick --check`` and fails when the high-bimodality speedup
-falls below 1.5x or regresses >2x against the committed baseline
-``benchmarks/BENCH_moe.json``.  The baseline is quick-mode (so its gate
-cell matches CI's); regenerate after an intentional change:
+CI runs ``--quick --check`` and fails when either dual path's
+high-bimodality speedup (threshold ``gate_speedup`` or cost-driven
+``gate_speedup_cost``) falls below 1.5x or regresses >2x against the
+committed baseline ``benchmarks/BENCH_moe.json``.  The baseline is
+quick-mode (so its gate cell matches CI's); regenerate after an
+intentional change:
 
     PYTHONPATH=src python benchmarks/moe_bench.py --quick --update-baseline
 """
@@ -52,7 +61,14 @@ N_HOT = 8  # one-hot-heavy hot-expert count (the paper's bimodal head)
 # per-regime dual-path head budgets (the sieve "GPU set" size); 0 = no
 # budget (exact for any routing, grouped path spans all experts)
 HEAD_BUDGET = {"uniform": 0, "zipf": 32, "onehot": 16}
+# regimes where the cost-driven split is additionally timed (the
+# cost_vs_threshold comparison; uniform has no head/tail structure)
+COST_REGIMES = ("zipf", "onehot")
 GATE_REGIME, GATE_MIN_SPEEDUP = "onehot", 1.5
+# floor for the cost-driven path's own high-bimodality speedup gate
+GATE_MIN_SPEEDUP_COST = 1.5
+# the gate cell must carry the cost_vs_threshold numbers it gates on
+assert GATE_REGIME in COST_REGIMES, (GATE_REGIME, COST_REGIMES)
 
 
 def _arch(expert_exec: str, dual_max_head: int = 0):
@@ -169,6 +185,12 @@ def run_bench(batch_sizes, iters: int, seed: int = 0) -> dict:
         dual_exec = _make_exec(params, arch_dual)
         dense_e2e = _make_path(params, arch_dense)
         dual_e2e = _make_path(params, arch_dual)
+        # cost_vs_threshold regime: same executor, boundary from the cost
+        # model (roofline SieveState — what ships without an engine)
+        time_cost = regime in COST_REGIMES
+        if time_cost:
+            arch_cost = _arch("dual_path_cost", HEAD_BUDGET[regime])
+            cost_exec = _make_exec(params, arch_cost)
         for T in batch_sizes:
             eidx = jnp.asarray(
                 sample_assignments(regime, T, rng), jnp.int32
@@ -195,6 +217,13 @@ def run_bench(batch_sizes, iters: int, seed: int = 0) -> dict:
                 "capacity_dropped": int(nd_dense),
                 "dual_extra_dropped": int(nd_dual) - int(nd_dense),
             }
+            if time_cost:
+                t_cost = _time(cost_exec, (buf, rows), iters)
+                cells[f"{regime}/T{T}"].update({
+                    "cost_exec_ms": round(t_cost * 1e3, 3),
+                    "cost_speedup": round(t_dense / t_cost, 2),
+                    "cost_vs_threshold": round(t_dual / t_cost, 2),
+                })
     return cells
 
 
@@ -231,6 +260,7 @@ def main(argv=None) -> dict:
             "batch_sizes": batch_sizes,
             "quick": args.quick,
             "gate_cell": gate_cell,
+            "cost_regimes": list(COST_REGIMES),
             "methodology": (
                 "synthetic fixed routing per regime; exec_speedup times the "
                 "jit-compiled expert-execution stage over one shared "
@@ -241,6 +271,7 @@ def main(argv=None) -> dict:
         },
         "cells": cells,
         "gate_speedup": cells[gate_cell]["exec_speedup"],
+        "gate_speedup_cost": cells[gate_cell]["cost_speedup"],
     }
     print(json.dumps(report, indent=1))
 
@@ -255,10 +286,16 @@ def main(argv=None) -> dict:
     if args.check:
         failures = []
         got = report["gate_speedup"]
+        got_cost = report["gate_speedup_cost"]
         if got < GATE_MIN_SPEEDUP:
             failures.append(
                 f"{gate_cell}: dual-path speedup {got:.2f}x < "
                 f"{GATE_MIN_SPEEDUP}x floor"
+            )
+        if got_cost < GATE_MIN_SPEEDUP_COST:
+            failures.append(
+                f"{gate_cell}: dual_path_cost speedup {got_cost:.2f}x < "
+                f"{GATE_MIN_SPEEDUP_COST}x floor"
             )
         if os.path.exists(BASELINE_PATH):
             with open(BASELINE_PATH) as f:
@@ -268,6 +305,12 @@ def main(argv=None) -> dict:
             if want and got < want / 2.0:
                 failures.append(
                     f"{gate_cell}: {got:.2f}x < baseline {want:.2f}x / 2"
+                )
+            want_cost = base.get("gate_speedup_cost")
+            if want_cost and got_cost < want_cost / 2.0:
+                failures.append(
+                    f"{gate_cell}: cost path {got_cost:.2f}x < baseline "
+                    f"{want_cost:.2f}x / 2"
                 )
         else:
             print("no committed baseline; floor check only", file=sys.stderr)

@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cost_model import SystemSpec
+from repro.core.scheduler import POLICIES
 from repro.sim.engine import BatchState, ServingSimulator
 from repro.sim.models import SimModelConfig
 from .arrivals import RequestSpec
@@ -60,6 +61,12 @@ class ReplicaConfig:
     # Upper bound on exact step-jumping (consecutive pure-decode steps with
     # an identical duration key collapse into one event); 1 disables.
     max_step_jump: Optional[int] = None
+    # Model-layer dual-path knobs, forwarded to the step simulator so the
+    # "dual_threshold"/"dual_cost" policies evaluate the same feasibility
+    # window (MoEConfig.dual_tail_tokens / dual_max_head) as the compiled
+    # step.  Ignored by the other policies.
+    dual_tail_tokens: int = 1
+    dual_max_head: int = 0
 
 
 def _remove_identity(lst: List[ClusterRequest], req: ClusterRequest) -> None:
@@ -71,7 +78,15 @@ def _remove_identity(lst: List[ClusterRequest], req: ClusterRequest) -> None:
 
 
 class Replica:
-    """One serving instance (its own simulator seed and cost table)."""
+    """One serving instance (its own simulator seed and cost table).
+
+    ``policy`` is any :data:`repro.core.scheduler.POLICIES` entry.  The
+    ``dual_threshold`` / ``dual_cost`` policies mirror the *model layer's*
+    split rules (``MoEConfig.expert_exec="dual_path"`` /
+    ``"dual_path_cost"``) — same prefix family, same feasibility window,
+    same cost table — so cluster reports for those policies reflect the
+    split the compiled serving step actually executes.
+    """
 
     def __init__(
         self,
@@ -82,10 +97,18 @@ class Replica:
         cfg: Optional[ReplicaConfig] = None,
         seed: int = 0,
     ):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; expected one of {POLICIES}"
+            )
         self.replica_id = replica_id
         self.policy = policy
         self.cfg = cfg or ReplicaConfig()
-        self.sim = ServingSimulator(model, system, seed=seed + replica_id)
+        self.sim = ServingSimulator(
+            model, system, seed=seed + replica_id,
+            dual_tail_tokens=self.cfg.dual_tail_tokens,
+            dual_max_head=self.cfg.dual_max_head,
+        )
         self.cost_table = self.sim._default_cost_table()
         self._warmed = False
 

@@ -55,7 +55,14 @@ class MoEConfig:
     #   "dual_path" — runtime sieve split: popular ("head") experts run as
     #                 grouped GEMMs, 1-few-token ("tail") experts stream
     #                 through the expert GEMV — the TPU adaptation of the
-    #                 paper's GPU/PIM split.
+    #                 paper's GPU/PIM split.  The head/tail boundary is the
+    #                 fixed dual_tail_tokens threshold;
+    #   "dual_path_cost" — same executor, but the boundary comes from the
+    #                 learned cost model (scheduler_jax.dual_path_split_cost
+    #                 over a SieveState: the engine-exported EMA cost table
+    #                 + packed SieveParams, refreshed on the EMA cadence
+    #                 without recompiling the decode step) — the paper's
+    #                 per-step count-driven GPU/PIM decision, in-graph.
     expert_exec: str = "dense"
     # Dual-path knobs (ignored under expert_exec="dense"):
     # tail threshold tau: experts with <= tau buffered rows take the

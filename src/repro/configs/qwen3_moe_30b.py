@@ -17,15 +17,19 @@ CONFIG = ArchConfig(
     vocab_size=151936,
     attn=AttnConfig(kind="gqa", n_heads=32, n_kv_heads=4, d_head=128,
                     rope_theta=1e6),
-    # The paper's primary eval model runs the sieve dual path: grouped GEMM
-    # for popular experts, streaming GEMV for the 1-token tail (no head
-    # budget -> exact under any routing).  On non-TPU hosts the XLA twin
+    # The paper's primary eval model runs the *cost-driven* sieve dual
+    # path: grouped GEMM for the head, streaming GEMV for the tail, with
+    # the boundary chosen per step by the learned cost model
+    # (scheduler_jax.dual_path_split_cost over the serving engine's
+    # exported EMA cost table; the roofline default elsewhere).  No head
+    # budget -> exact under any routing.  On non-TPU hosts the XLA twin
     # of the dual path adds a small constant overhead at decode-sized
     # batches — accepted so the paper's execution path is exercised
-    # end-to-end; flip expert_exec="dense" for CPU-only throughput work.
+    # end-to-end; flip expert_exec="dense" for CPU-only throughput work,
+    # or "dual_path" for the fixed-threshold baseline split.
     moe=MoEConfig(
         n_experts=128, top_k=8, d_expert=768, n_shared=0,
-        expert_exec="dual_path",
+        expert_exec="dual_path_cost",
     ),
     norm="rmsnorm",
     act="swiglu",

@@ -39,6 +39,9 @@ from .scheduler import (  # noqa: F401
     Partition,
     allexp_schedule,
     brute_force_schedule,
+    dual_cost_schedule,
+    dual_cost_schedule_reference,
+    dual_threshold_schedule,
     gpu_only_schedule,
     noexp_schedule,
     pimoe_schedule,

@@ -50,6 +50,10 @@ class CostTable:
         self._big: Dict[int, float] = {}  # keys >= _DENSE_CAP
         self.n_updates = 0
         self.n_fallback_lookups = 0
+        # Monotone content version: bumps on every mutation (update /
+        # update_batch / load_state_dict), so exporters can skip re-export
+        # when nothing changed since the last refresh.
+        self.version = 0
         # Fallback values are deterministic per key; memoize so the batched
         # path pays for each unobserved count once.
         self._fallback_memo: Dict[int, float] = {}
@@ -120,6 +124,26 @@ class CostTable:
         out.update(self._big)
         return out
 
+    def export(self, max_count: int) -> np.ndarray:
+        """Dense float32 ``count -> seconds`` array for the jit scheduler.
+
+        Stable contract (the equivalence suite pins it): ``export(m)[c] ==
+        float32(lookup(c))`` for every ``1 <= c <= m`` — observed entries
+        verbatim, the fallback elsewhere — and ``export(m)[0] == 0.0``
+        (a 0-token expert costs nothing; the schedulers mask inactive
+        experts before indexing).  Keys outside ``[0, m]`` — including the
+        negative/huge-key dict spill — cannot be represented in a dense
+        count-indexed table and are simply not exported; the jit consumer
+        clamps its index into range.  Spilled keys do not perturb the
+        in-range values.
+        """
+        out = np.empty(max_count + 1, dtype=np.float64)
+        out[0] = 0.0
+        if max_count:
+            counts = np.arange(1, max_count + 1, dtype=np.int64)
+            out[1:] = self.lookup_vec(counts)
+        return out.astype(np.float32)
+
     # -- updates -----------------------------------------------------------
     def _ensure_dense(self, key: int) -> None:
         if key >= self._dense_ok.shape[0]:
@@ -147,6 +171,7 @@ class CostTable:
         else:  # negative or pathologically large keys spill to the dict
             self._big[key] = new
         self.n_updates += 1
+        self.version += 1
         return new
 
     def update_many(self, items) -> None:
@@ -181,6 +206,7 @@ class CostTable:
             self._dense[c] = new
             self._dense_ok[c] = True
             self.n_updates += c.size
+            self.version += 1
             return
         for key, obs in zip(c.tolist(), t.tolist()):
             self.update(key, obs)
@@ -202,6 +228,7 @@ class CostTable:
                 self._dense_ok[key] = True
             else:
                 self._big[key] = val
+        self.version += 1
 
 
 def make_roofline_fallback(cost_model) -> Callable[[int], float]:

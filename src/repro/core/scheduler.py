@@ -20,6 +20,12 @@ Policies
 ``noexp``          all experts on GPU, attention on PIM (NeuPIMs/PAISE).
 ``allexp``         all experts on PIM (PAPI/Stratum).
 ``gpu_only``       everything (incl. attention) on the GPU.
+``dual_threshold`` the model layer's fixed rule (expert_exec="dual_path"):
+                   head = experts with > tail_tokens rows, cost-blind.
+``dual_cost``      the model layer's cost-driven rule
+                   (expert_exec="dual_path_cost"): sieve prefix argmin
+                   clamped to the dual-path feasibility window — the host
+                   twin of scheduler_jax.dual_path_split_cost.
 
 Hot path
 --------
@@ -51,6 +57,8 @@ POLICIES = (
     "noexp",
     "allexp",
     "gpu_only",
+    "dual_threshold",
+    "dual_cost",
 )
 
 
@@ -89,6 +97,24 @@ def _active(counts: np.ndarray):
     return ids[order], counts
 
 
+def _prefix_times(counts, cost_model, cost_table):
+    """Shared prefix-family evaluation for the sorted-prefix policies.
+
+    One cumulative-sum pass: ``t_all[g] = max(t_comm, t_gpu(prefix g),
+    t_pim(suffix g))`` for every split of the active experts sorted by
+    count descending.  ``sieve_schedule`` selects over the full range;
+    the dual-path rules clamp it to their feasibility window — keeping
+    the evaluation here means the two families cannot drift apart.
+    """
+    ids, counts = _active(counts)
+    t_comm = cost_model.t_comm(int(counts.sum()))
+    sorted_counts = counts[ids]
+    t_gpu_all = cost_model.t_gpu_prefix(sorted_counts)
+    t_pim_all = cost_model.t_pim_suffix(sorted_counts, cost_table)
+    t_all = np.maximum(np.maximum(t_gpu_all, t_pim_all), t_comm)
+    return ids, sorted_counts, t_comm, t_gpu_all, t_pim_all, t_all
+
+
 # ---------------------------------------------------------------------------
 # Sieve (paper §5.2)
 # ---------------------------------------------------------------------------
@@ -115,16 +141,10 @@ def sieve_schedule(
     """
     if mode not in ("greedy", "argmin"):
         raise ValueError(f"unknown mode {mode!r}")
-    ids, counts = _active(counts)
-    total_routed = int(counts.sum())
-    t_comm = cost_model.t_comm(total_routed)
-
-    sorted_counts = counts[ids]  # descending
+    ids, sorted_counts, t_comm, t_gpu_all, t_pim_all, t_all = _prefix_times(
+        counts, cost_model, cost_table
+    )
     n = len(ids)
-
-    t_gpu_all = cost_model.t_gpu_prefix(sorted_counts)
-    t_pim_all = cost_model.t_pim_suffix(sorted_counts, cost_table)
-    t_all = np.maximum(np.maximum(t_gpu_all, t_pim_all), t_comm)
 
     if mode == "greedy":
         # First split whose successor does not strictly improve: the scalar
@@ -213,6 +233,182 @@ def sieve_schedule_reference(
         iterations=iters,
         policy="sieve" if mode == "greedy" else "sieve_argmin",
         meta={"split": g, "n_active": n},
+    )
+    part.validate(n)
+    return part
+
+
+# ---------------------------------------------------------------------------
+# Dual-path split rules (the model layer's head/tail partition, mirrored
+# here so the simulator charges exactly the split the compiled step runs)
+# ---------------------------------------------------------------------------
+
+
+def _dual_feasible_window(sorted_counts, tail_tokens: int, max_head: int):
+    """Feasible prefix-split range ``[lo, hi]`` of the dual-path executor.
+
+    ``lo``: every expert with more than ``tail_tokens`` rows must be in the
+    grouped-GEMM head (the tail slab executes at most ``tail_tokens`` rows
+    per expert).  ``hi``: the head-compaction budget (``max_head <= 0``
+    means no budget).  ``lo > hi`` happens only when the budget squeezes a
+    popular expert off the grouped path — the budget wins and the overflow
+    rows surface as drops in the model layer.
+    """
+    n = len(sorted_counts)
+    lo = int(np.sum(sorted_counts > tail_tokens))
+    hi = n if max_head <= 0 else min(n, int(max_head))
+    return lo, hi
+
+
+def dual_threshold_schedule(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+    *,
+    tail_tokens: int = 1,
+    max_head: int = 0,
+) -> Partition:
+    """The model layer's fixed-threshold rule (``expert_exec="dual_path"``).
+
+    Head (GPU/grouped-GEMM side) = every expert with more than
+    ``tail_tokens`` routed tokens, optionally capped at the ``max_head``
+    most popular; tail (PIM/GEMV side) = the rest.  Cost-model-blind by
+    construction — this is the baseline the cost-driven rule must beat.
+    The reported times still come from the cost model so the simulator
+    charges the threshold rule for its blind spots.
+    """
+    ids, counts = _active(counts)
+    sorted_counts = counts[ids]
+    lo, hi = _dual_feasible_window(sorted_counts, tail_tokens, max_head)
+    g = min(lo, hi)  # threshold boundary, clamped by the head budget
+    part = Partition(
+        gpu_experts=ids[:g].copy(),
+        pim_experts=ids[g:].copy(),
+        t_comm=cost_model.t_comm(int(counts.sum())),
+        t_gpu=cost_model.t_gpu(sorted_counts[:g]),
+        t_pim=cost_model.t_pim(sorted_counts[g:][::-1], cost_table),
+        policy="dual_threshold",
+        meta={"split": g, "n_active": len(ids), "tail_tokens": tail_tokens},
+    )
+    # no validate(): a prefix split of distinct active ids satisfies the
+    # partition invariants by construction (cf. sieve_schedule) and this
+    # runs per layer-half on the simulator hot path
+    return part
+
+
+def dual_cost_schedule(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+    *,
+    tail_tokens: int = 1,
+    max_head: int = 0,
+    mode: str = "argmin",
+) -> Partition:
+    """Cost-driven dual-path split (``expert_exec="dual_path_cost"``).
+
+    Same prefix family and cumulative-sum evaluation as
+    :func:`sieve_schedule`, with the evaluated range clamped to the
+    dual-path executor's feasibility window (see
+    :func:`_dual_feasible_window`) — the host NumPy twin of
+    :func:`repro.core.scheduler_jax.dual_path_split_cost`, so cluster
+    simulations charge exactly the split the compiled step executes.
+    Bit-identical to :func:`dual_cost_schedule_reference`.
+    """
+    if mode not in ("greedy", "argmin"):
+        raise ValueError(f"unknown mode {mode!r}")
+    ids, sorted_counts, t_comm, t_gpu_all, t_pim_all, t_all = _prefix_times(
+        counts, cost_model, cost_table
+    )
+    n = len(ids)
+    lo, hi = _dual_feasible_window(sorted_counts, tail_tokens, max_head)
+
+    if lo > hi:  # budget below the feasibility floor: the budget wins
+        g = hi
+    elif mode == "greedy":
+        seg = t_all[lo : hi + 1]
+        nonimp = np.nonzero(seg[1:] >= seg[:-1])[0]
+        g = lo + (int(nonimp[0]) if nonimp.size else hi - lo)
+    else:
+        g = lo + int(np.argmin(t_all[lo : hi + 1]))  # first occurrence
+
+    part = Partition(
+        gpu_experts=ids[:g].copy(),
+        pim_experts=ids[g:].copy(),
+        t_comm=t_comm,
+        t_gpu=float(t_gpu_all[g]),
+        t_pim=float(t_pim_all[g]),
+        policy="dual_cost",
+        meta={
+            "split": g,
+            "n_active": n,
+            "tail_tokens": tail_tokens,
+            "window": (lo, hi),
+        },
+    )
+    # prefix split of distinct active ids: partition invariants hold by
+    # construction (cf. sieve_schedule)
+    return part
+
+
+def dual_cost_schedule_reference(
+    counts: Sequence[int],
+    cost_model: CostModel,
+    cost_table: Optional[CostTable] = None,
+    *,
+    tail_tokens: int = 1,
+    max_head: int = 0,
+    mode: str = "argmin",
+) -> Partition:
+    """Scalar oracle for :func:`dual_cost_schedule` (O(E^2) eval calls)."""
+    if mode not in ("greedy", "argmin"):
+        raise ValueError(f"unknown mode {mode!r}")
+    ids, counts = _active(counts)
+    total_routed = int(counts.sum())
+    t_comm = cost_model.t_comm(total_routed)
+    sorted_counts = counts[ids]
+    n = len(ids)
+    lo, hi = _dual_feasible_window(sorted_counts, tail_tokens, max_head)
+
+    def eval_split(g: int):
+        gpu_c = sorted_counts[:g]
+        pim_c = sorted_counts[g:][::-1]  # least-popular-first summation
+        t_gpu = cost_model.t_gpu(gpu_c)
+        t_pim = cost_model.t_pim(pim_c, cost_table)
+        return t_gpu, t_pim, max(t_comm, t_gpu, t_pim)
+
+    if lo > hi:
+        g = hi
+        t_gpu, t_pim, _ = eval_split(g)
+    elif mode == "greedy":
+        g = lo
+        t_gpu, t_pim, best = eval_split(g)
+        while g < hi:
+            t_gpu2, t_pim2, t2 = eval_split(g + 1)
+            if t2 < best:
+                g, best, t_gpu, t_pim = g + 1, t2, t_gpu2, t_pim2
+            else:
+                break
+    else:
+        best, g, t_gpu, t_pim = np.inf, lo, 0.0, 0.0
+        for k in range(lo, hi + 1):
+            t_gpu2, t_pim2, t2 = eval_split(k)
+            if t2 < best:
+                best, g, t_gpu, t_pim = t2, k, t_gpu2, t_pim2
+
+    part = Partition(
+        gpu_experts=ids[:g].copy(),
+        pim_experts=ids[g:].copy(),
+        t_comm=t_comm,
+        t_gpu=t_gpu,
+        t_pim=t_pim,
+        policy="dual_cost",
+        meta={
+            "split": g,
+            "n_active": n,
+            "tail_tokens": tail_tokens,
+            "window": (lo, hi),
+        },
     )
     part.validate(n)
     return part
@@ -528,6 +724,10 @@ def schedule(policy: str, counts, cost_model, cost_table=None, **kw) -> Partitio
         return allexp_schedule(counts, cost_model, cost_table)
     if policy == "gpu_only":
         return gpu_only_schedule(counts, cost_model, cost_table, **kw)
+    if policy == "dual_threshold":
+        return dual_threshold_schedule(counts, cost_model, cost_table, **kw)
+    if policy == "dual_cost":
+        return dual_cost_schedule(counts, cost_model, cost_table, **kw)
     raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
 
 

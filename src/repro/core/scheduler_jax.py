@@ -16,6 +16,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,22 @@ class SieveParams:
     pim_attn_time: float = 0.0
     t_comm: float = 0.0
 
+    # field order of the packed array form (to_array / from_array); the
+    # serving engine ships this as a device-resident float32 vector so a
+    # cost-table refresh never changes the compiled step's signature.
+    FIELDS = (
+        "flops_per_row",
+        "expert_param_bytes",
+        "act_bytes_per_token",
+        "hbm_bw",
+        "peak_flops_eff",
+        "tile_m",
+        "gpu_base_flops",
+        "gpu_base_bytes",
+        "pim_attn_time",
+        "t_comm",
+    )
+
     @staticmethod
     def from_cost_model(cm, total_routed_tokens: int) -> "SieveParams":
         return SieveParams(
@@ -52,21 +69,176 @@ class SieveParams:
             t_comm=cm.t_comm(total_routed_tokens),
         )
 
+    def to_array(self) -> np.ndarray:
+        """Pack into the float32 vector consumed by the dynamic scheduler."""
+        return np.asarray(
+            [float(getattr(self, f)) for f in self.FIELDS], dtype=np.float32
+        )
+
+    @staticmethod
+    def from_array(arr) -> "SieveParams":
+        vals = np.asarray(arr, dtype=np.float32)
+        kw = {f: float(vals[i]) for i, f in enumerate(SieveParams.FIELDS)}
+        kw["tile_m"] = int(kw["tile_m"])
+        return SieveParams(**kw)
+
+
+class SieveState(NamedTuple):
+    """Device-resident cost-model state for the in-graph cost-driven split.
+
+    Both leaves are plain arrays, so a :class:`SieveState` passes through
+    ``jax.jit`` as a regular pytree input: the serving engine refreshes it
+    on the EMA cost-table cadence without changing the compiled step.
+    """
+
+    pim_time_by_count: jax.Array  # (maxc+1,) float32 seconds per token count
+    params: jax.Array  # (len(SieveParams.FIELDS),) float32 packed scalars
+
+
+def make_sieve_state(cost_table, cost_model, max_count: int,
+                     total_routed_tokens: int = 0) -> SieveState:
+    """Host-side export: (CostTable, CostModel) -> a SieveState.
+
+    The leaves are host numpy arrays (trace-safe: building a state inside
+    a jit trace embeds them as constants).  Long-lived callers that pass
+    the state into a compiled step every call (the serving engine) should
+    ``jax.device_put`` it once per refresh to avoid re-uploading.
+    """
+    return SieveState(
+        pim_time_by_count=export_cost_table(cost_table, cost_model, max_count),
+        params=SieveParams.from_cost_model(
+            cost_model, total_routed_tokens
+        ).to_array(),
+    )
+
 
 def export_cost_table(cost_table, cost_model, max_count: int) -> np.ndarray:
     """Dense per-token-count PIM time array for the jit scheduler.
 
     Batched: one ``lookup_vec`` / roofline evaluation over the whole count
-    range instead of ``max_count`` scalar lookups.
+    range instead of ``max_count`` scalar lookups.  With a table this is
+    exactly :meth:`repro.core.cost_table.CostTable.export` (the stable
+    versioned contract the equivalence suite pins); without one it is the
+    pure roofline export.
     """
+    if cost_table is not None:
+        return cost_table.export(max_count)
     out = np.empty(max_count + 1, dtype=np.float32)
     out[0] = 0.0
     counts = np.arange(1, max_count + 1, dtype=np.int64)
-    if cost_table is not None:
-        out[1:] = cost_table.lookup_vec(counts)
-    else:
-        out[1:] = cost_model.t_pim_gemv_roofline_vec(counts)
+    out[1:] = cost_model.t_pim_gemv_roofline_vec(counts)
     return out
+
+
+def _prefix_partition(
+    counts: jax.Array,  # (E,) int32 token count per local expert
+    pim_time_by_count: jax.Array,  # (maxc+1,) float32 seconds
+    p: dict,  # SieveParams fields as python floats OR traced 0-d arrays
+    mode: str,
+    min_split=None,  # optional lower clamp on g (feasibility floor)
+    max_split=None,  # optional upper clamp on g (head budget)
+    weight_of_group=None,  # (E,) 0/1: does this entry charge weight bytes?
+) -> dict:
+    """Shared prefix-family evaluation behind the jit entry points.
+
+    The cost-model scalars in ``p`` may be python floats (the static
+    :func:`sieve_partition_jax` path, where they hash into the jit key) or
+    traced 0-d float32 arrays unpacked from a :class:`SieveState` (the
+    serving path, where a cost-table refresh must not retrace).  The
+    arithmetic is float32 either way, so both paths pick the same split.
+
+    ``min_split``/``max_split`` clamp the evaluated prefix family to
+    ``[min_split, max_split]`` — the dual-path executor's execution-shape
+    feasibility window (tail slab depth below, head budget above).  When
+    the window is empty (budget below the feasibility floor) the budget
+    wins and the squeezed rows surface as drops in the caller.
+
+    ``weight_of_group`` (0/1 per entry) marks which entries charge their
+    expert's ``expert_param_bytes`` in the T_GPU off-chip term.  The
+    default charges every active entry — correct when entries are whole
+    experts.  The EP a2a segmented layout passes the first-segment-of-
+    each-expert indicator instead, so an expert whose segments all land
+    in the head is charged its (shared) weights once, not once per
+    source shard.
+    """
+    E = counts.shape[0]
+    counts = counts.astype(jnp.int32)
+    order = jnp.argsort(-counts, stable=True)  # popular first
+    sc = counts[order]
+    active = sc > 0
+    n_active = jnp.sum(active)
+
+    tile = jnp.asarray(p["tile_m"], jnp.int32)
+    padded = jnp.where(active, ((sc + tile - 1) // tile) * tile, 0)
+    # prefix over splits g = 0..E  (index i = "first i experts on GPU")
+    cum_tokens = jnp.concatenate([jnp.zeros(1, sc.dtype), jnp.cumsum(sc)])
+    cum_padded = jnp.concatenate([jnp.zeros(1, sc.dtype), jnp.cumsum(padded)])
+    if weight_of_group is None:
+        live = active.astype(jnp.int32)
+    else:
+        live = jnp.where(
+            active, weight_of_group[order].astype(jnp.int32), 0
+        )
+    cum_live = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(live)])
+
+    t_gpu_comp = (
+        p["flops_per_row"] * cum_padded.astype(jnp.float32) + p["gpu_base_flops"]
+    ) / p["peak_flops_eff"]
+    t_gpu_mem = (
+        p["expert_param_bytes"] * cum_live.astype(jnp.float32)
+        + p["act_bytes_per_token"] * cum_tokens.astype(jnp.float32)
+        + p["gpu_base_bytes"]
+    ) / p["hbm_bw"]
+    t_gpu = jnp.maximum(t_gpu_comp, t_gpu_mem)
+
+    maxc = pim_time_by_count.shape[0] - 1
+    per_expert_pim = pim_time_by_count[jnp.clip(sc, 0, maxc)]
+    per_expert_pim = jnp.where(active, per_expert_pim, 0.0)
+    cum_pim = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(per_expert_pim)])
+    t_pim = p["pim_attn_time"] + (cum_pim[-1] - cum_pim)
+
+    t_total = jnp.maximum(jnp.maximum(t_gpu, t_pim), p["t_comm"])
+    # splits beyond the active prefix are duplicates of g = n_active
+    g_range = jnp.arange(E + 1)
+    valid = g_range <= n_active
+    lo = jnp.zeros((), jnp.int32) if min_split is None else min_split
+    hi = n_active if max_split is None else jnp.minimum(n_active, max_split)
+    valid = valid & (g_range >= lo) & (g_range <= hi)
+    t_masked = jnp.where(valid, t_total, jnp.inf)
+    if mode == "greedy":
+        # first split whose successor does not strictly improve (paper
+        # §5.2), scanning only inside the feasible window
+        nonimp = (t_masked[1:] >= t_masked[:-1]) & valid[1:]
+        g_star = jnp.where(jnp.any(nonimp), jnp.argmax(nonimp), hi)
+    else:
+        g_star = jnp.argmin(t_masked)
+    # empty window (budget below the feasibility floor): the budget wins
+    g_star = jnp.where(jnp.any(valid), g_star, hi).astype(jnp.int32)
+
+    rank = jnp.argsort(order, stable=True)  # expert id -> popularity rank
+    gpu_mask = (rank < g_star) & (counts > 0)
+    return {
+        "gpu_mask": gpu_mask,
+        "order": order,
+        "rank": rank,
+        "split": g_star,
+        "t_total": t_total[g_star],
+        "t_gpu": t_gpu[g_star],
+        "t_pim": t_pim[g_star],
+        "t_comm": jnp.asarray(p["t_comm"], jnp.float32),
+        "n_active": n_active,
+    }
+
+
+def _params_dict(params: SieveParams) -> dict:
+    # pre-round to float32 so the static path is bit-identical to the
+    # dynamic (packed-array) path, which stores float32 scalars
+    return {f: np.float32(getattr(params, f)) for f in SieveParams.FIELDS}
+
+
+def _params_dict_dynamic(params_arr: jax.Array) -> dict:
+    arr = params_arr.astype(jnp.float32)
+    return {f: arr[i] for i, f in enumerate(SieveParams.FIELDS)}
 
 
 @partial(jax.jit, static_argnames=("params", "mode"))
@@ -85,60 +257,25 @@ def sieve_partition_jax(
     NumPy scheduler and this jit twin share the cumulative-sum
     formulation, so both cost one sort + O(E) scans.
     """
-    E = counts.shape[0]
-    counts = counts.astype(jnp.int32)
-    order = jnp.argsort(-counts, stable=True)  # popular first
-    sc = counts[order]
-    active = sc > 0
-    n_active = jnp.sum(active)
+    return _prefix_partition(counts, pim_time_by_count, _params_dict(params), mode)
 
-    tile = params.tile_m
-    padded = jnp.where(active, ((sc + tile - 1) // tile) * tile, 0)
-    # prefix over splits g = 0..E  (index i = "first i experts on GPU")
-    cum_tokens = jnp.concatenate([jnp.zeros(1, sc.dtype), jnp.cumsum(sc)])
-    cum_padded = jnp.concatenate([jnp.zeros(1, sc.dtype), jnp.cumsum(padded)])
-    cum_live = jnp.concatenate(
-        [jnp.zeros(1, jnp.int32), jnp.cumsum(active.astype(jnp.int32))]
+
+@partial(jax.jit, static_argnames=("mode",))
+def sieve_partition_dynamic(
+    counts: jax.Array,  # (E,) int32 token count per local expert
+    pim_time_by_count: jax.Array,  # (maxc+1,) float32 seconds
+    params_arr: jax.Array,  # (len(SieveParams.FIELDS),) float32 packed
+    mode: str = "argmin",
+) -> dict:
+    """:func:`sieve_partition_jax` with the cost scalars as a *traced* array.
+
+    This is the serving-engine form: ``params_arr`` (and the table) come
+    from a :class:`SieveState` refreshed on the EMA cadence, so new cost
+    observations change the split without recompiling the decode step.
+    """
+    return _prefix_partition(
+        counts, pim_time_by_count, _params_dict_dynamic(params_arr), mode
     )
-
-    t_gpu_comp = (
-        params.flops_per_row * cum_padded.astype(jnp.float32) + params.gpu_base_flops
-    ) / params.peak_flops_eff
-    t_gpu_mem = (
-        params.expert_param_bytes * cum_live.astype(jnp.float32)
-        + params.act_bytes_per_token * cum_tokens.astype(jnp.float32)
-        + params.gpu_base_bytes
-    ) / params.hbm_bw
-    t_gpu = jnp.maximum(t_gpu_comp, t_gpu_mem)
-
-    maxc = pim_time_by_count.shape[0] - 1
-    per_expert_pim = pim_time_by_count[jnp.clip(sc, 0, maxc)]
-    per_expert_pim = jnp.where(active, per_expert_pim, 0.0)
-    cum_pim = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(per_expert_pim)])
-    t_pim = params.pim_attn_time + (cum_pim[-1] - cum_pim)
-
-    t_total = jnp.maximum(jnp.maximum(t_gpu, t_pim), params.t_comm)
-    # splits beyond the active prefix are duplicates of g = n_active
-    valid = jnp.arange(E + 1) <= n_active
-    t_total = jnp.where(valid, t_total, jnp.inf)
-    if mode == "greedy":
-        # first split whose successor does not strictly improve (paper §5.2)
-        nonimp = (t_total[1:] >= t_total[:-1]) & valid[1:]
-        g_star = jnp.where(jnp.any(nonimp), jnp.argmax(nonimp), n_active)
-    else:
-        g_star = jnp.argmin(t_total)
-
-    rank = jnp.argsort(order, stable=True)  # expert id -> popularity rank
-    gpu_mask = (rank < g_star) & (counts > 0)
-    return {
-        "gpu_mask": gpu_mask,
-        "split": g_star,
-        "t_total": t_total[g_star],
-        "t_gpu": t_gpu[g_star],
-        "t_pim": t_pim[g_star],
-        "t_comm": jnp.asarray(params.t_comm, jnp.float32),
-        "n_active": n_active,
-    }
 
 
 @partial(jax.jit, static_argnames=("tail_tokens", "max_head"))
@@ -180,6 +317,74 @@ def dual_path_split(
         "tail_mask": tail,
         "order": order,
         "rank": rank,
+        "n_head": jnp.sum(head.astype(jnp.int32)),
+        "n_tail": jnp.sum(tail.astype(jnp.int32)),
+        "n_dropped": jnp.sum(overflow).astype(jnp.int32),
+    }
+
+
+@partial(jax.jit, static_argnames=("tail_tokens", "max_head", "mode"))
+def dual_path_split_cost(
+    rows: jax.Array,  # (E,) int32 buffered rows per local expert
+    pim_time_by_count: jax.Array,  # (maxc+1,) float32 seconds
+    params_arr: jax.Array,  # packed SieveParams (SieveState.params)
+    tail_tokens: int = 1,
+    max_head: int | None = None,
+    mode: str = "argmin",
+    weight_of_group: jax.Array | None = None,  # (E,) 0/1 weight-byte mask
+) -> dict:
+    """Cost-driven head/tail partition (``expert_exec="dual_path_cost"``).
+
+    Same output contract as :func:`dual_path_split`, but the prefix
+    boundary comes from the learned cost model (:func:`sieve_partition_jax`
+    arithmetic over the engine-exported table) instead of the fixed
+    ``rows > tail_tokens`` threshold.  The evaluated prefix family is
+    clamped to the execution-shape feasibility window:
+
+    * **floor** — every expert with more than ``tail_tokens`` rows must be
+      in the head (a tail expert only executes its first ``tail_tokens``
+      rows), so the cost model chooses how many *additional* few-token
+      experts ride the grouped-GEMM path instead of streaming GEMVs — the
+      per-step decision the paper's learned table exists for;
+    * **ceiling** — ``max_head`` (the grouped path's compaction budget).
+      When the budget squeezes a ``>tail_tokens``-row expert off the
+      grouped path its overflow rows are reported in ``n_dropped``,
+      exactly like :func:`dual_path_split`.  NOTE: ``max_head`` follows
+      :func:`dual_path_split`'s convention — ``None`` disables the budget
+      and ``0`` is a zero-size head.  This differs from
+      ``MoEConfig.dual_max_head``, where ``0`` means "no budget"; the
+      model layer (``models.moe``) translates between the two.
+
+    Cost scalars and table are *traced* inputs (a :class:`SieveState`), so
+    the serving engine's refresh cadence never recompiles the decode step.
+    """
+    E = rows.shape[0]
+    rows = rows.astype(jnp.int32)
+    n_over = jnp.sum(rows > tail_tokens).astype(jnp.int32)
+    cap = None if (max_head is None or max_head >= E) else jnp.asarray(
+        max_head, jnp.int32
+    )
+    part = _prefix_partition(
+        rows,
+        pim_time_by_count,
+        _params_dict_dynamic(params_arr),
+        mode,
+        min_split=n_over,
+        max_split=cap,
+        weight_of_group=weight_of_group,
+    )
+    head = part["gpu_mask"]
+    tail = (rows > 0) & ~head
+    overflow = jnp.where((rows > tail_tokens) & tail, rows - tail_tokens, 0)
+    return {
+        "head_mask": head,
+        "tail_mask": tail,
+        "order": part["order"],
+        "rank": part["rank"],
+        "split": part["split"],
+        "t_total": part["t_total"],
+        "t_gpu": part["t_gpu"],
+        "t_pim": part["t_pim"],
         "n_head": jnp.sum(head.astype(jnp.int32)),
         "n_tail": jnp.sum(tail.astype(jnp.int32)),
         "n_dropped": jnp.sum(overflow).astype(jnp.int32),

@@ -195,7 +195,8 @@ class LM:
     # Forward (training / prefill share the stack walk)
     # ==================================================================
 
-    def _walk_attn_stack(self, p, x, positions, mrope, collect_cache: bool):
+    def _walk_attn_stack(self, p, x, positions, mrope, collect_cache: bool,
+                         sieve=None):
         """dense/moe/vlm families."""
         arch, mi = self.arch, self.mi
         moe = arch.moe is not None
@@ -222,6 +223,7 @@ class LM:
             x, cache, aux = tf.attn_mlp_block_seq(
                 blk_p, x, positions, arch, mi, moe=moe,
                 mrope_positions=mrope, q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+                sieve=sieve,
             )
             return self._sp(x), (cache if collect_cache else None, aux)
 
@@ -353,7 +355,8 @@ class LM:
 
         if arch.family in ("dense", "moe", "vlm"):
             x, _, prefix_aux, aux_stack = self._walk_attn_stack(
-                p, x, positions, mrope, collect_cache=False
+                p, x, positions, mrope, collect_cache=False,
+                sieve=batch.get("sieve"),
             )
             aux = _aggregate_aux(arch, prefix_aux, aux_stack)
         elif arch.family == "hybrid":
@@ -520,7 +523,8 @@ class LM:
 
         if arch.family in ("dense", "moe", "vlm"):
             x, caches, prefix_aux, aux_stack = self._walk_attn_stack(
-                p, x, positions, mrope, collect_cache=True
+                p, x, positions, mrope, collect_cache=True,
+                sieve=batch.get("sieve"),
             )
             cache = {"blocks": caches["blocks"]}
             if "prefix" in caches:
@@ -603,6 +607,7 @@ class LM:
             moe = arch.moe is not None
             n_prefix = arch.moe.first_k_dense if moe else 0
             seq_par = self._use_seqpar_decode(cache)
+            sieve = batch.get("sieve")
             auxes = []
             new_prefix = None
             if n_prefix:
@@ -622,7 +627,7 @@ class LM:
                 blk_p, cache_l = inp
                 x, new_c, aux = tf.attn_mlp_block_decode(
                     blk_p, x, position, cache_l, arch, mi, moe=moe,
-                    mrope_positions=mrope, seq_par=seq_par,
+                    mrope_positions=mrope, seq_par=seq_par, sieve=sieve,
                 )
                 return x, (new_c, aux)
 

@@ -24,6 +24,7 @@ Design (DESIGN.md §5, §8.2):
 
 from __future__ import annotations
 
+import functools
 import os
 from typing import NamedTuple, Optional, Tuple
 
@@ -31,7 +32,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MoEConfig
-from repro.core.scheduler_jax import dual_path_split
+from repro.core.scheduler_jax import (
+    SieveState,
+    dual_path_split,
+    dual_path_split_cost,
+    make_sieve_state,
+)
 from .layers import _he
 
 from .shard_compat import shard_map_unchecked as _shard_map
@@ -223,6 +229,65 @@ def experts_ffn(params: dict, buf: jax.Array) -> jax.Array:
     return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
 
 
+# ---------------------------------------------------------------------------
+# Sieve cost-model state for the cost-driven split
+# ---------------------------------------------------------------------------
+
+# Default table depth: counts beyond it clamp to the last entry inside the
+# split, so the default only needs to cover decode/prefill-sized batches.
+_DEFAULT_SIEVE_MAX_COUNT = 2048
+
+
+@functools.lru_cache(maxsize=16)
+def _default_sieve_state(
+    d_model: int, d_expert: int, n_experts: int, top_k: int, n_shared: int,
+    max_count: int,
+) -> SieveState:
+    from repro.core.cost_model import CostModel, MoELayerSpec, b200_pim_system
+
+    cm = CostModel(
+        system=b200_pim_system(),
+        layer=MoELayerSpec(
+            d_model=d_model, d_ff=d_expert, n_experts=n_experts,
+            top_k=top_k, n_shared=n_shared,
+        ),
+    )
+    return make_sieve_state(None, cm, max_count)
+
+
+def default_sieve_state(
+    arch: ArchConfig, max_count: int = _DEFAULT_SIEVE_MAX_COUNT
+) -> SieveState:
+    """Roofline-only :class:`SieveState` for the arch's MoE layer dims.
+
+    The fallback when no engine-exported state is provided (training,
+    standalone tests, dry runs): the nominal PIM roofline of the default
+    paper system, with no measured observations.  The serving engine
+    replaces it with the live EMA table on its refresh cadence.
+    """
+    cfg = arch.moe
+    return _default_sieve_state(
+        arch.d_model, cfg.d_expert, cfg.n_experts, cfg.top_k, cfg.n_shared,
+        max_count,
+    )
+
+
+def resolve_sieve_state(
+    cfg: MoEConfig, d_model: int, sieve: Optional[SieveState]
+) -> Optional[SieveState]:
+    """The cost state actually used by the executor: the caller-provided
+    state under ``expert_exec="dual_path_cost"`` (defaulting to the
+    roofline state), ``None`` for the cost-blind modes."""
+    if cfg.expert_exec != "dual_path_cost":
+        return None
+    if sieve is not None:
+        return sieve
+    return _default_sieve_state(
+        d_model, cfg.d_expert, cfg.n_experts, cfg.top_k, cfg.n_shared,
+        _DEFAULT_SIEVE_MAX_COUNT,
+    )
+
+
 def _dual_backend() -> str:
     """Kernel backend for the dual path: Pallas on TPU, XLA ragged ops on
     CPU/GPU hosts (where interpret-mode Pallas would be pure overhead).
@@ -292,34 +357,62 @@ def _tail_path(slab, wg, wu, wd, e_of_g, valid, backend, gather_w: bool):
     return ty * valid[..., None].astype(ty.dtype)
 
 
+def _dual_split(
+    rows: jax.Array,
+    cfg: MoEConfig,
+    tau: int,
+    max_head: Optional[int],
+    sieve: Optional[SieveState],
+    weight_of_group: Optional[jax.Array] = None,
+) -> dict:
+    """Head/tail split for the dual executor: the fixed threshold rule
+    (``dual_path``) or the cost-driven rule (``dual_path_cost``) over the
+    provided :class:`SieveState`.  Both are traceable with no host sync."""
+    if cfg.expert_exec == "dual_path_cost":
+        if sieve is None:
+            raise ValueError(
+                "expert_exec='dual_path_cost' needs a SieveState; resolve "
+                "one via resolve_sieve_state()/default_sieve_state()"
+            )
+        return dual_path_split_cost(
+            rows, sieve.pim_time_by_count, sieve.params,
+            tail_tokens=tau, max_head=max_head,
+            weight_of_group=weight_of_group,
+        )
+    return dual_path_split(rows, tail_tokens=tau, max_head=max_head)
+
+
 def experts_ffn_dual(
     params: dict,
     buf: jax.Array,  # (E, C, d) capacity dispatch buffer
     rows: jax.Array,  # (E,) live rows per expert (routed count clipped at C)
     cfg: MoEConfig,
     backend: Optional[str] = None,
+    sieve: Optional[SieveState] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Runtime sieve-split dual-path expert execution.
 
-    Splits the experts on the in-graph prefix rule
-    (:func:`dual_path_split`): experts with more than
+    Splits the experts on the in-graph prefix rule: experts with more than
     ``cfg.dual_tail_tokens`` buffered rows form the *head* and run as three
     grouped matmuls over their capacity slabs (compacted to the
     ``cfg.dual_max_head`` most popular experts when a budget is set); the
     remaining *tail* experts stream their rows through the expert-GEMV
-    kernel.  Head and tail cover disjoint buffer rows, so the merge is one
-    add.  Returns ``(y_buf, n_exec_dropped)`` where the drop count is
-    nonzero only when a head budget squeezes a >tau-row expert off the
-    grouped path (0 with the default ``dual_max_head=0``).
+    kernel.  Under ``expert_exec="dual_path"`` the boundary is the fixed
+    threshold (:func:`dual_path_split`); under ``"dual_path_cost"`` it is
+    the cost-model argmin over the ``sieve`` state
+    (:func:`dual_path_split_cost`) — the same prefix family, so the
+    executor below is shared.  Head and tail cover disjoint buffer rows,
+    so the merge is one add.  Returns ``(y_buf, n_exec_dropped)`` where
+    the drop count is nonzero only when a head budget squeezes a
+    >tau-row expert off the grouped path (0 with the default
+    ``dual_max_head=0``).
     """
     if backend is None:
         backend = _dual_backend()
     E, C, d = buf.shape
     tau = int(min(max(cfg.dual_tail_tokens, 0), C))
     H = cfg.dual_max_head if 0 < cfg.dual_max_head < E else E
-    split = dual_path_split(
-        rows, tail_tokens=tau, max_head=(H if H < E else None)
-    )
+    split = _dual_split(rows, cfg, tau, (H if H < E else None), sieve)
     head_sizes_full = jnp.where(split["head_mask"], rows, 0).astype(jnp.int32)
 
     wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
@@ -364,37 +457,72 @@ def experts_ffn_dual_segmented(
     sizes: jax.Array,  # (E, S) live rows per (expert, segment)
     cfg: MoEConfig,
     backend: Optional[str] = None,
-) -> jax.Array:
+    sieve: Optional[SieveState] = None,
+) -> Tuple[jax.Array, jax.Array]:
     """Dual-path execution over the EP a2a layout.
 
     After the dispatch all_to_all each local expert's rows arrive as one
     capacity segment per source shard; every (expert, segment) pair is its
     own ragged group (a hot expert's 1-token segment from a quiet shard
     still takes the GEMV path).  Groups share their expert's weights via
-    the kernel's ``rhs_of_group`` table — no weight replication.  No head
-    budget here (compaction would have to span segments), so nothing is
-    ever dropped.
+    the kernel's ``rhs_of_group`` table — no weight replication.
+
+    ``cfg.dual_max_head`` is honored per segment: the budget H (an
+    expert-equivalent count, so H*S segments) compacts the grouped path to
+    the most popular (expert, source-shard) segments — gathered with their
+    ``rhs_of_group`` weight rows, no host sync — and rows squeezed past
+    both the budget and the tail slab are dropped and counted, the same
+    contract as :func:`experts_ffn_dual`.  Returns
+    ``(y_buf, n_exec_dropped)``.
     """
     if backend is None:
         backend = _dual_backend()
     E, S, C, d = buf.shape
     G = E * S
     tau = int(min(max(cfg.dual_tail_tokens, 0), C))
+    # head budget in segment units: H experts' worth of capacity slabs
+    Hg = cfg.dual_max_head * S if 0 < cfg.dual_max_head * S < G else G
     rows_g = sizes.reshape(G).astype(jnp.int32)
     e_of_g = jnp.repeat(jnp.arange(E, dtype=jnp.int32), S)
-    split = dual_path_split(rows_g, tail_tokens=tau, max_head=None)
-    head_sizes = jnp.where(split["head_mask"], rows_g, 0).astype(jnp.int32)
+    # an expert's weights are shared across its segments: only its most
+    # popular segment (the first to enter any prefix) charges the weight
+    # bytes in the cost-driven split's T_GPU term
+    first_seg = (
+        jnp.zeros((E, S), jnp.int32)
+        .at[jnp.arange(E), jnp.argmax(sizes, axis=1)]
+        .set(1)
+        .reshape(G)
+    )
+    split = _dual_split(
+        rows_g, cfg, tau, (Hg if Hg < G else None), sieve,
+        weight_of_group=first_seg,
+    )
+    head_sizes_full = jnp.where(split["head_mask"], rows_g, 0).astype(jnp.int32)
 
     wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
-    slab = buf.reshape(G, C, d)
+    slab_full = buf.reshape(G, C, d)
+    if Hg < G:
+        # compact: gather the Hg most popular segments' slabs; each keeps
+        # its expert's weight row through the rhs_of_group table
+        hid = split["order"][:Hg]
+        slab = slab_full[hid]
+        head_sizes = head_sizes_full[hid]
+        rhs = e_of_g[hid]
+    else:
+        slab, head_sizes, rhs = slab_full, head_sizes_full, e_of_g
+
     if backend == "pallas":
-        y = _swiglu_grouped_pallas(
-            slab, wg, wu, wd, head_sizes, rhs_of_group=e_of_g
+        y_head = _swiglu_grouped_pallas(
+            slab, wg, wu, wd, head_sizes, rhs_of_group=rhs
         )
     else:
-        y = _swiglu_grouped_xla(
-            slab, wg, wu, wd, head_sizes, rhs_of_group=e_of_g
+        y_head = _swiglu_grouped_xla(
+            slab, wg, wu, wd, head_sizes, rhs_of_group=rhs
         )
+    if Hg < G:
+        y = jnp.zeros((G, C, d), y_head.dtype).at[hid].set(y_head)
+    else:
+        y = y_head
 
     if tau > 0:
         live = jnp.arange(tau, dtype=jnp.int32)[None, :] < jnp.minimum(
@@ -402,14 +530,18 @@ def experts_ffn_dual_segmented(
         )[:, None]
         valid = split["tail_mask"][:, None] & live
         ty = _tail_path(
-            slab[:, :tau, :], wg, wu, wd, e_of_g, valid, backend,
+            slab_full[:, :tau, :], wg, wu, wd, e_of_g, valid, backend,
             gather_w=True,
         )
         y = y.at[:, :tau, :].add(ty.astype(y.dtype))
-    return y.reshape(E, S, C, d).astype(buf.dtype)
+    return (
+        y.reshape(E, S, C, d).astype(buf.dtype),
+        split["n_dropped"],
+    )
 
 
-_EXEC_MODES = ("dense", "dual_path")
+_EXEC_MODES = ("dense", "dual_path", "dual_path_cost")
+_DUAL_MODES = ("dual_path", "dual_path_cost")
 
 
 def _check_expert_exec(cfg: MoEConfig) -> None:
@@ -425,11 +557,13 @@ def experts_ffn_exec(
     buf: jax.Array,  # (E, C, d)
     rows: jax.Array,  # (E,) live rows per expert
     cfg: MoEConfig,
+    sieve: Optional[SieveState] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Dispatch on ``cfg.expert_exec``; returns (y_buf, n_exec_dropped)."""
     _check_expert_exec(cfg)
-    if cfg.expert_exec == "dual_path":
-        return experts_ffn_dual(params, buf, rows, cfg)
+    if cfg.expert_exec in _DUAL_MODES:
+        sieve = resolve_sieve_state(cfg, buf.shape[-1], sieve)
+        return experts_ffn_dual(params, buf, rows, cfg, sieve=sieve)
     return experts_ffn(params, buf), jnp.zeros((), jnp.int32)
 
 
@@ -445,7 +579,12 @@ class MoEOut(NamedTuple):
     n_dropped: jax.Array
 
 
-def moe_local(params: dict, x: jax.Array, arch: ArchConfig) -> MoEOut:
+def moe_local(
+    params: dict,
+    x: jax.Array,
+    arch: ArchConfig,
+    sieve: Optional[SieveState] = None,
+) -> MoEOut:
     """Single-device routed-experts path (reference; also the per-shard math
     when EP is disabled)."""
     cfg = arch.moe
@@ -454,12 +593,18 @@ def moe_local(params: dict, x: jax.Array, arch: ArchConfig) -> MoEOut:
     cap = capacity(T, cfg, cfg.n_experts)
     disp = dispatch(x, r, cfg.n_experts, cap)
     rows = jnp.minimum(r.counts, cap)
-    y_buf, exec_dropped = experts_ffn_exec(params, disp.buf, rows, cfg)
+    y_buf, exec_dropped = experts_ffn_exec(params, disp.buf, rows, cfg, sieve)
     y = combine(y_buf, disp.slot_of, r.weights, T)
     return MoEOut(y, r.aux_loss, r.counts, disp.n_dropped + exec_dropped)
 
 
-def _ep_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEOut:
+def _ep_body(
+    params: dict,
+    x: jax.Array,
+    arch: ArchConfig,
+    mi: MeshInfo,
+    sieve: Optional[SieveState] = None,
+) -> MoEOut:
     """Per-shard EP body (runs inside shard_map).
 
     x: (T_ds, d) — this *data shard's* tokens, replicated over the model
@@ -496,7 +641,9 @@ def _ep_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEO
     local_rows = jnp.minimum(
         jax.lax.dynamic_slice(r.counts, (shard * E_loc,), (E_loc,)), cap
     )
-    y_buf, exec_dropped = experts_ffn_exec(params, disp.buf, local_rows, cfg)
+    y_buf, exec_dropped = experts_ffn_exec(
+        params, disp.buf, local_rows, cfg, sieve
+    )
     y_partial = combine(y_buf, disp.slot_of, r.weights, T)
     y = jax.lax.psum(y_partial, axis)
 
@@ -512,7 +659,13 @@ def _ep_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEO
     return MoEOut(y, aux, counts, dropped)
 
 
-def _ep_a2a_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> MoEOut:
+def _ep_a2a_body(
+    params: dict,
+    x: jax.Array,
+    arch: ArchConfig,
+    mi: MeshInfo,
+    sieve: Optional[SieveState] = None,
+) -> MoEOut:
     """all-to-all-dispatch EP (§Perf B future-work lever, REPRO_EP_MODE=a2a).
 
     Tokens are sharded over (data x model) — each shard routes its own
@@ -539,7 +692,8 @@ def _ep_a2a_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> 
     buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1, tiled=False)
 
     _check_expert_exec(cfg)
-    if cfg.expert_exec == "dual_path":
+    exec_dropped = jnp.zeros((), jnp.int32)
+    if cfg.expert_exec in _DUAL_MODES:
         # every (local expert, source shard) capacity segment is its own
         # ragged group; segment sizes come from the shards' routed counts
         # (one tiny all_gather — the paper's routing-map AllGather ③).
@@ -549,7 +703,10 @@ def _ep_a2a_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> 
             counts_all, (0, shard * E_loc), (nm, E_loc)
         )
         sizes = jnp.minimum(local.T, cap)  # (E_loc, nm)
-        y_buf = experts_ffn_dual_segmented(params, buf, sizes, cfg)
+        sieve = resolve_sieve_state(cfg, d, sieve)
+        y_buf, exec_dropped = experts_ffn_dual_segmented(
+            params, buf, sizes, cfg, sieve=sieve
+        )
         y_buf = y_buf.reshape(E_loc, nm * cap, d)
     else:
         y_buf = experts_ffn(params, buf.reshape(E_loc, nm * cap, d))
@@ -562,7 +719,7 @@ def _ep_a2a_body(params: dict, x: jax.Array, arch: ArchConfig, mi: MeshInfo) -> 
     y = combine(y_buf, disp.slot_of, r.weights, T)
     counts = r.counts
     aux = r.aux_loss
-    dropped = disp.n_dropped
+    dropped = disp.n_dropped + exec_dropped
     axes = tuple(mi.data_axes) + (axis,)
     counts = jax.lax.psum(counts, axes)
     aux = jax.lax.pmean(aux, axes)
@@ -575,14 +732,21 @@ def moe_block(
     x: jax.Array,  # (B, S, d) activations
     arch: ArchConfig,
     mi: MeshInfo = LOCAL_MESH,
+    sieve: Optional[SieveState] = None,
 ) -> MoEOut:
     """Full MoE block: routed experts (+EP) and shared experts.
 
-    Shared experts run outside the shard_map as plain tensor-parallel dense
+    ``sieve`` is the engine-exported cost-model state consumed by
+    ``expert_exec="dual_path_cost"`` (ignored by the other modes; the
+    roofline default is used when it is needed but absent).  Shared
+    experts run outside the shard_map as plain tensor-parallel dense
     MLPs (every token visits them — the paper's early-weight-load case)."""
     cfg = arch.moe
     B, S, d = x.shape
     xt = x.reshape(B * S, d)
+    # resolve once, outside the shard_map, so the state enters the EP
+    # bodies through in_specs (replicated) rather than closure capture
+    sieve = resolve_sieve_state(cfg, d, sieve)
 
     if mi.mesh is not None and mi.ep_size > 1 and cfg.n_experts % mi.ep_size == 0:
         dp_size = 1
@@ -602,24 +766,31 @@ def moe_block(
             "w_down": P(mi.model_axis, None, None),
         }
         dp = mi.data_axes if mi.data_axes else None
-        if use_a2a:
-            token_spec = P(tuple(mi.data_axes) + (mi.model_axis,), None)
+        body = _ep_a2a_body if use_a2a else _ep_body
+        token_spec = (
+            P(tuple(mi.data_axes) + (mi.model_axis,), None)
+            if use_a2a
+            else P(dp, None)
+        )
+        out_specs = MoEOut(token_spec, P(), P(), P())
+        if sieve is not None:
             routed = _shard_map(
-                lambda p, t: _ep_a2a_body(p, t, arch, mi),
+                lambda p, t, s: body(p, t, arch, mi, sieve=s),
                 mesh=mi.mesh,
-                in_specs=(w_specs, token_spec),
-                out_specs=MoEOut(token_spec, P(), P(), P()),
-            )(routed_params, xt)
+                in_specs=(w_specs, token_spec, SieveState(P(), P())),
+                out_specs=out_specs,
+            )(routed_params, xt, sieve)
         else:
             routed = _shard_map(
-                lambda p, t: _ep_body(p, t, arch, mi),
+                lambda p, t: body(p, t, arch, mi),
                 mesh=mi.mesh,
-                in_specs=(w_specs, P(dp, None)),
-                out_specs=MoEOut(P(dp, None), P(), P(), P()),
+                in_specs=(w_specs, token_spec),
+                out_specs=out_specs,
             )(routed_params, xt)
     else:
         routed = moe_local(
-            {k: params[k] for k in ("w_router", "w_gate", "w_up", "w_down")}, xt, arch
+            {k: params[k] for k in ("w_router", "w_gate", "w_up", "w_down")},
+            xt, arch, sieve=sieve,
         )
 
     y = routed.y

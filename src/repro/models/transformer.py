@@ -74,6 +74,7 @@ def attn_mlp_block_seq(
     mrope_positions=None,
     q_chunk: int = 1024,
     kv_chunk: int = 1024,
+    sieve=None,  # SieveState for expert_exec="dual_path_cost"
 ):
     """Full-sequence block (training / prefill).  Returns (x, cache, aux)."""
     h = apply_norm(p["norm1"], x, arch.norm)
@@ -92,7 +93,7 @@ def attn_mlp_block_seq(
     x = x + a
     h = apply_norm(p["norm2"], x, arch.norm)
     if moe:
-        out: MoEOut = moe_block(p["moe"], h, arch, mi)
+        out: MoEOut = moe_block(p["moe"], h, arch, mi, sieve=sieve)
         x = x + out.y
         aux = BlockAux(out.aux_loss, out.counts, out.n_dropped)
     else:
@@ -111,6 +112,7 @@ def attn_mlp_block_decode(
     moe: bool,
     mrope_positions=None,
     seq_par: bool = False,
+    sieve=None,  # SieveState for expert_exec="dual_path_cost"
 ):
     h = apply_norm(p["norm1"], x, arch.norm)
     if arch.attn.kind == "mla":
@@ -133,7 +135,7 @@ def attn_mlp_block_decode(
     x = x + a
     h = apply_norm(p["norm2"], x, arch.norm)
     if moe:
-        out: MoEOut = moe_block(p["moe"], h, arch, mi)
+        out: MoEOut = moe_block(p["moe"], h, arch, mi, sieve=sieve)
         x = x + out.y
         aux = BlockAux(out.aux_loss, out.counts, out.n_dropped)
     else:

@@ -9,7 +9,13 @@ per engine step it
   3. feeds observed counts into the EMA cost table and runs the Sieve
      scheduler per MoE layer, recording the GPU/PIM partitions and their
      estimated times (on TPU these partitions select grouped-GEMM vs
-     streaming-GEMV kernels; the decision trail is exported for analysis).
+     streaming-GEMV kernels; the decision trail is exported for analysis);
+  4. under ``MoEConfig.expert_exec="dual_path_cost"``, exports the cost
+     table + cost model into a device-resident ``SieveState`` on the EMA
+     refresh cadence (``sieve_refresh_every`` steps, skipped when the
+     table version is unchanged) — the compiled prefill/decode steps read
+     it as a fixed-shape array input, so the in-graph split follows the
+     learned costs without ever recompiling.
 
 The engine is hardware-agnostic: on this CPU container it serves reduced
 models end-to-end (examples/serve_moe.py); on a TPU pod the same engine
@@ -30,6 +36,7 @@ from repro.configs.base import ArchConfig
 from repro.core.cost_model import CostModel, MoELayerSpec, SystemSpec, b200_pim_system
 from repro.core.cost_table import CostTable
 from repro.core.scheduler import schedule
+from repro.core.scheduler_jax import SieveState, make_sieve_state
 from repro.models.model import LM
 from repro.sim.dram import PimGemvModel
 from .batching import BatchingConfig, SlotScheduler
@@ -72,6 +79,7 @@ class ServingEngine:
         system: Optional[SystemSpec] = None,
         greedy: bool = True,
         seed: int = 0,
+        sieve_refresh_every: int = 16,
     ):
         self.lm = lm
         self.params = params
@@ -89,6 +97,15 @@ class ServingEngine:
         # ---- Sieve runtime state (MoE archs only) ----
         arch = lm.arch
         self.is_moe = arch.moe is not None
+        # cost-driven in-graph split: the compiled step consumes a
+        # device-resident SieveState refreshed on the EMA update cadence
+        self.uses_cost_split = (
+            self.is_moe and arch.moe.expert_exec == "dual_path_cost"
+        )
+        self.sieve_refresh_every = max(int(sieve_refresh_every), 1)
+        self.sieve_refreshes: List[int] = []  # step indices of re-exports
+        self._sieve_state: Optional[SieveState] = None
+        self._sieve_version = -1
         if self.is_moe:
             self.system = system or b200_pim_system()
             self.layer_spec = MoELayerSpec(
@@ -110,6 +127,45 @@ class ServingEngine:
             self.cost_table = CostTable(
                 fallback=fallback or self.cost_model.t_pim_gemv_roofline
             )
+            if self.uses_cost_split:
+                # per-expert counts are bounded by the step's token count
+                # (n_slots decode tokens / max_seq prefill tokens); the jit
+                # split clamps larger indices to the last table entry
+                self._sieve_max_count = min(
+                    4096, max(batching.n_slots, batching.max_seq, 64)
+                )
+                self._refresh_sieve_state(step=0)
+
+    # ------------------------------------------------------------------
+    def _refresh_sieve_state(self, step: int) -> None:
+        """Re-export (CostTable, CostModel) into the device-resident state.
+
+        Fixed shapes (table depth and packed-params length never change),
+        so the compiled prefill/decode steps see the same signature and a
+        refresh can never trigger a retrace — the split simply reads new
+        numbers.  Skipped when the table has not changed since the last
+        export.
+
+        The packed ``t_comm`` is evaluated at the decode-step nominal
+        (``n_slots * top_k`` routed tokens); on this single-device engine
+        (``ep_degree=1``) it is exactly 0 either way.  A multi-device
+        engine feeding long prefills should export a per-phase state
+        (ROADMAP open item) so the prefill split's comm floor is not
+        understated.
+        """
+        if self.cost_table.version == self._sieve_version:
+            return
+        self._sieve_state = jax.device_put(
+            make_sieve_state(
+                self.cost_table,
+                self.cost_model,
+                self._sieve_max_count,
+                total_routed_tokens=self.cfg.n_slots
+                * self.lm.arch.moe.top_k,
+            )
+        )
+        self._sieve_version = self.cost_table.version
+        self.sieve_refreshes.append(step)
 
     # ------------------------------------------------------------------
     def _prefill_chunk_impl(self, params, batch, cache, slot: int):
@@ -136,8 +192,19 @@ class ServingEngine:
 
     def _run_sieve(self, counts_per_layer: np.ndarray) -> None:
         """Host-side scheduler pass over this step's per-layer counts."""
+        kw = {}
+        if self.policy in ("dual_threshold", "dual_cost"):
+            # the host decision trail must evaluate the same feasibility
+            # window as the compiled step's in-graph split
+            moe = self.lm.arch.moe
+            kw = {
+                "tail_tokens": moe.dual_tail_tokens,
+                "max_head": moe.dual_max_head,
+            }
         for li, counts in enumerate(counts_per_layer):
-            part = schedule(self.policy, counts, self.cost_model, self.cost_table)
+            part = schedule(
+                self.policy, counts, self.cost_model, self.cost_table, **kw
+            )
             # observe "PIM" execution times for the chosen set (from the
             # DRAM-timing model; on real hardware these are measured)
             if self._pim is not None:
@@ -166,6 +233,8 @@ class ServingEngine:
         for req in self.sched.prefill_work():
             prompt = np.asarray(req.prompt, np.int32)[None, :]
             batch = {"tokens": jnp.asarray(prompt)}
+            if self.uses_cost_split:
+                batch["sieve"] = self._sieve_state
             if self.lm.arch.family == "vlm":
                 P = prompt.shape[1]
                 pos = jnp.broadcast_to(jnp.arange(P), (1, P))
@@ -198,6 +267,8 @@ class ServingEngine:
                 # the request's next-write cursor.
                 position[r.slot] = r.position - 1 if r.generated else r.position
             db = {"tokens": jnp.asarray(tokens), "position": jnp.asarray(position)}
+            if self.uses_cost_split:
+                db["sieve"] = self._sieve_state
             if self.lm.arch.family == "vlm":
                 mp = jnp.asarray(position)[None, :, None]
                 db["mrope_positions"] = jnp.concatenate([mp, mp, mp], axis=0)
@@ -211,6 +282,14 @@ class ServingEngine:
                 self.stats.routed_tokens += int(np.asarray(aux.counts).sum())
             if self.is_moe and aux.counts.shape[0] > 0:
                 self._run_sieve(np.asarray(aux.counts))
+
+        # cost-table refresh cadence: the in-graph split only ever changes
+        # at these boundaries (stale-table semantics between them)
+        if (
+            self.uses_cost_split
+            and (self.stats.steps + 1) % self.sieve_refresh_every == 0
+        ):
+            self._refresh_sieve_state(step=self.stats.steps + 1)
 
         done = self.sched.retire(time.perf_counter())
         self.stats.steps += 1

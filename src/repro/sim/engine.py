@@ -48,13 +48,27 @@ SCHEDULER_OVERHEAD_PER_EXPERT = {
     "noexp": 0.0,
     "allexp": 0.0,
     "gpu_only": 0.0,
+    # model-layer dual-path split rules (expert_exec="dual_path[/_cost]"):
+    # the threshold compare is one vectorized mask; the cost rule runs the
+    # same prefix scans as sieve
+    "dual_threshold": 0.02e-6,
+    "dual_cost": 0.08e-6,
 }
 SCHEDULER_OVERHEAD_FLOOR = 1e-6
 
 # Backwards-compatible view used by benchmarks (per-expert overheads).
 SCHEDULER_OVERHEAD = SCHEDULER_OVERHEAD_PER_EXPERT
 
-PIM_POLICIES = ("sieve", "sieve_argmin", "pimoe", "pimoe_dynamic", "noexp", "allexp")
+PIM_POLICIES = (
+    "sieve",
+    "sieve_argmin",
+    "pimoe",
+    "pimoe_dynamic",
+    "noexp",
+    "allexp",
+    "dual_threshold",
+    "dual_cost",
+)
 
 # Fig-8 node names always present in one half-batch layer DAG; optional
 # nodes (qkv_load / prefill_attn / shared_*) are keyed by the structure
@@ -196,9 +210,17 @@ class ServingSimulator:
         fused: bool = True,
         capacity_factor: float = 1.25,
         min_capacity: int = 8,
+        dual_tail_tokens: int = 1,
+        dual_max_head: int = 0,
     ):
         self.model = model
         self.system = system
+        # Model-layer dual-path knobs, honored by the "dual_threshold" /
+        # "dual_cost" policies so the simulated split matches the split
+        # MoEConfig.dual_tail_tokens / dual_max_head produce in the
+        # compiled step.
+        self.dual_tail_tokens = dual_tail_tokens
+        self.dual_max_head = dual_max_head
         # Capacity-dispatch mirror of models.moe.capacity: overflow tokens
         # in the sampled token→expert draws are *dropped* by the runtime,
         # and the estimate is surfaced per step (last_step_dropped /
@@ -336,6 +358,12 @@ class ServingSimulator:
                 self._calibrate_pimoe()
             part = pimoe_static_partition(
                 local_counts, self._pimoe_mask[gpu_idx], cm, cost_table
+            )
+        elif policy in ("dual_threshold", "dual_cost"):
+            part = schedule(
+                policy, local_counts, cm, cost_table,
+                tail_tokens=self.dual_tail_tokens,
+                max_head=self.dual_max_head,
             )
         else:
             part = schedule(policy, local_counts, cm, cost_table)
@@ -540,6 +568,7 @@ class ServingSimulator:
                 )
                 if cost_table is not None and policy in (
                     "sieve", "sieve_argmin", "pimoe", "pimoe_dynamic",
+                    "dual_threshold", "dual_cost",
                 ):
                     self._observe_pim_times(cost_table, part, local[g])
                 halves_g.append((flags, durs, part))

@@ -28,6 +28,7 @@ from repro.models.moe import (
     dispatch,
     experts_ffn,
     experts_ffn_dual,
+    experts_ffn_dual_segmented,
     init_moe,
     moe_local,
 )
@@ -170,6 +171,58 @@ class TestDenseDualEquivalence:
         assert bool(jnp.all(jnp.isfinite(out_dual.y)))
 
 
+class TestSegmentedHeadBudget:
+    """PR-3 gap: ``dual_max_head`` was honored in ``_ep_body`` but ignored
+    in the EP a2a segmented layout.  The budget now compacts per
+    (expert, source-shard) segment — ``rhs_of_group`` keeps weight sharing
+    — and squeezed rows count as drops."""
+
+    def _setup(self, max_head, E=4, S=2, C=4, d=16, f=8):
+        rng = np.random.default_rng(0)
+        cfg = dataclasses.replace(
+            tiny_arch().moe, dual_max_head=max_head, dual_tail_tokens=1
+        )
+        buf = jnp.asarray(rng.standard_normal((E, S, C, d)), jnp.float32)
+        sizes = jnp.asarray([[4, 3], [2, 1], [1, 0], [3, 2]], jnp.int32)
+        params = {
+            "w_gate": jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, jnp.float32),
+            "w_up": jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, jnp.float32),
+            "w_down": jnp.asarray(rng.standard_normal((E, f, d)) * 0.1, jnp.float32),
+        }
+        return params, buf, sizes, cfg
+
+    def test_small_budget_counts_squeezed_rows(self):
+        params, buf, sizes, cfg = self._setup(max_head=1)
+        y, nd = experts_ffn_dual_segmented(params, buf, sizes, cfg)
+        # Hg = 1 expert-equivalent * S=2 segments; >tau segments by size:
+        # [4, 3, 3, 2, 2]; head keeps (4, 3), squeezing (3, 2, 2) down to
+        # their first tau=1 rows -> (3-1) + (2-1) + (2-1) = 4 rows dropped
+        assert int(nd) == 4
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_no_budget_drops_nothing_and_budget_is_partial(self):
+        params, buf, sizes, cfg = self._setup(max_head=1)
+        cfg0 = dataclasses.replace(cfg, dual_max_head=0)
+        y0, nd0 = experts_ffn_dual_segmented(params, buf, sizes, cfg0)
+        assert int(nd0) == 0
+        # large-enough budget: bit-identical to the uncompacted path
+        cfg_big = dataclasses.replace(cfg, dual_max_head=4)
+        y_big, nd_big = experts_ffn_dual_segmented(params, buf, sizes, cfg_big)
+        assert int(nd_big) == 0
+        np.testing.assert_array_equal(np.asarray(y_big), np.asarray(y0))
+
+    def test_budget_exact_when_hot_segments_fit(self):
+        """A budget that covers every >tau segment changes nothing."""
+        params, buf, sizes, cfg = self._setup(max_head=3)  # Hg=6 >= 5 hot
+        y, nd = experts_ffn_dual_segmented(params, buf, sizes, cfg)
+        cfg0 = dataclasses.replace(cfg, dual_max_head=0)
+        y0, _ = experts_ffn_dual_segmented(params, buf, sizes, cfg0)
+        assert int(nd) == 0
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(y0), rtol=1e-6, atol=1e-6
+        )
+
+
 class TestExecModeValidation:
     def test_unknown_mode_raises(self):
         """Stale/typo'd expert_exec values (e.g. the pre-rename "dual")
@@ -188,7 +241,7 @@ class TestExecModeValidation:
         that triggered the bug."""
         monkeypatch.setenv("REPRO_DUAL_BACKEND", "pallas")
         arch = get_arch("qwen3-moe-30b-a3b")
-        assert arch.moe.expert_exec == "dual_path"
+        assert arch.moe.expert_exec == "dual_path_cost"
         arch = dataclasses.replace(
             arch,
             d_model=256,
@@ -292,3 +345,41 @@ def test_ep_a2a_dual_matches_local_dense():
     """a2a-dispatch EP with the segmented dual path (rhs_of_group groups)
     == local dense oracle."""
     _run_subprocess(_EP_SCRIPT, "EP-DUAL-OK", REPRO_EP_MODE="a2a")
+
+
+_EP_A2A_BUDGET_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["REPRO_EP_MODE"] = "a2a"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_arch
+from repro.models.moe import init_moe, moe_block, MeshInfo
+from repro.launch.mesh import make_mesh, use_mesh
+
+arch0 = get_arch("qwen3-moe-30b-a3b").reduced()
+mesh = make_mesh((2, 4), ("data", "model"))
+mi = MeshInfo(mesh=mesh, data_axes=("data",), model_axis="model")
+dropped = {}
+for max_head in (0, 1):
+    arch = dataclasses.replace(arch0, moe=dataclasses.replace(
+        arch0.moe, capacity_factor=1.0, min_capacity=1,
+        expert_exec="dual_path", dual_max_head=max_head))
+    p = init_moe(jax.random.PRNGKey(0), arch, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8, arch.d_model))
+    with use_mesh(mesh):
+        out = jax.jit(lambda p, x: moe_block(p, x, arch, mi))(p, x)
+    assert bool(jnp.all(jnp.isfinite(out.y)))
+    dropped[max_head] = int(out.n_dropped)
+# the budget squeezes rows the unbudgeted path kept (capacity drops alone
+# are the max_head=0 figure)
+assert dropped[1] > dropped[0], dropped
+print("EP-A2A-BUDGET-OK", dropped)
+"""
+
+
+def test_ep_a2a_head_budget_drops_at_small_capacity():
+    """Regression (PR-3 gap): the a2a segmented layout honors
+    ``dual_max_head`` — squeezed rows surface as drops, outputs stay
+    finite."""
+    _run_subprocess(_EP_A2A_BUDGET_SCRIPT, "EP-A2A-BUDGET-OK")
