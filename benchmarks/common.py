@@ -18,14 +18,23 @@ def time_fn(fn: Callable, warmup: int = 2, iters: int = 10) -> float:
 
 
 class Rows:
-    """Collects ``name,us_per_call,derived`` CSV rows."""
+    """Collects ``(name, us_per_call, derived)`` benchmark rows; the CSV
+    form is derived at emit time so the JSON artifact keeps full
+    precision (and comma-bearing fields can never corrupt it)."""
 
     def __init__(self):
-        self.rows: List[str] = []
+        self.rows: List[tuple] = []
 
     def add(self, name: str, us_per_call: float, derived: str = ""):
-        self.rows.append(f"{name},{us_per_call:.3f},{derived}")
+        self.rows.append((name, float(us_per_call), derived))
 
     def emit(self):
-        for r in self.rows:
-            print(r)
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.3f},{derived}")
+
+    def to_records(self) -> List[dict]:
+        """Rows as JSON-serializable dicts (for benchmark artifacts)."""
+        return [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in self.rows
+        ]

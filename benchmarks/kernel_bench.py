@@ -3,9 +3,18 @@
 Wall times here are CPU numbers (the container has no TPU); they validate
 that the jit'd paths run and give the derived MXU-padding-waste metric that
 motivates the Sieve dual path.  TPU projections live in §Roofline.
+
+Runs standalone with a CLI (``--quick`` is the CI perf-smoke mode: kernel
+rows only, fewer iters, JSON artifact to ``benchmarks/out``) or through
+``benchmarks.run`` alongside the paper figures.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
 
 import numpy as np
 import jax
@@ -14,7 +23,12 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.kernels import ops, ref
 from repro.models import LM
-from .common import Rows, time_fn
+
+try:
+    from .common import Rows, time_fn
+except ImportError:  # invoked as a script: python benchmarks/kernel_bench.py
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import Rows, time_fn
 
 
 def kernels() -> Rows:
@@ -76,6 +90,67 @@ def kernels() -> Rows:
     return rows
 
 
+def fused_swiglu() -> Rows:
+    """Fused single-pass SwiGLU kernels vs the three-call formulations
+    (interpret mode, compacted hot-expert head slab + streaming tail)."""
+    rows = Rows()
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+
+    # grouped head path: H hot experts with near-full capacity slabs
+    H, C, K, F = 8, 64, 128, 128
+    slab = jax.random.normal(ks[0], (H, C, K), jnp.float32)
+    wg = jax.random.normal(ks[1], (H, K, F), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[2], (H, K, F), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[3], (H, F, K), jnp.float32) * 0.1
+    sizes = jnp.asarray(
+        np.random.default_rng(0).integers(C // 2, C + 1, size=H), jnp.int32
+    )
+    us_fused = time_fn(
+        lambda: ops.swiglu_gmm_capacity(
+            slab, wg, wu, wd, sizes, bm=16, interpret=True
+        ).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    rows.add("kernel/swiglu_fused_interp", us_fused, f"H={H};C={C}")
+
+    def three_call():
+        gate = ops.gmm_capacity(slab, wg, sizes, bm=16, interpret=True)
+        up = ops.gmm_capacity(slab, wu, sizes, bm=16, interpret=True)
+        h = jax.nn.silu(gate) * up
+        ops.gmm_capacity(h, wd, sizes, bm=16, interpret=True).block_until_ready()
+
+    us_three = time_fn(three_call, warmup=1, iters=3)
+    rows.add(
+        "kernel/swiglu_threecall_interp", us_three,
+        f"fused_speedup={us_three / us_fused:.2f}",
+    )
+
+    # streaming tail: one fused pass vs three expert_gemv streams
+    S = 16
+    toks = jax.random.normal(ks[4], (S, K), jnp.float32)
+    eids = jnp.asarray(np.random.default_rng(1).integers(0, H, size=S), jnp.int32)
+    us_gemv_fused = time_fn(
+        lambda: ops.swiglu_gemv(
+            toks, wg, wu, wd, eids, None, bk=128, bf=128, interpret=True
+        ).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    rows.add("kernel/swiglu_gemv_fused_interp", us_gemv_fused, f"S={S}")
+
+    def three_gemv():
+        gate = ops.expert_gemv(toks, wg, eids, None, bk=128, bn=128, interpret=True)
+        up = ops.expert_gemv(toks, wu, eids, None, bk=128, bn=128, interpret=True)
+        h = jax.nn.silu(gate) * up
+        ops.expert_gemv(h, wd, eids, None, bk=128, bn=128, interpret=True).block_until_ready()
+
+    us_gemv_three = time_fn(three_gemv, warmup=1, iters=3)
+    rows.add(
+        "kernel/swiglu_gemv_threecall_interp", us_gemv_three,
+        f"fused_speedup={us_gemv_three / us_gemv_fused:.2f}",
+    )
+    return rows
+
+
 def model_steps() -> Rows:
     """Reduced-arch step wall times (train + decode) on CPU."""
     rows = Rows()
@@ -101,4 +176,37 @@ def model_steps() -> Rows:
     return rows
 
 
-ALL = [kernels, model_steps]
+ALL = [kernels, fused_swiglu, model_steps]
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="CI perf-smoke mode: kernel rows only (skips model steps)",
+    )
+    ap.add_argument(
+        "--out", default=os.path.join("benchmarks", "out", "kernel_bench.json")
+    )
+    args = ap.parse_args(argv)
+
+    fns = [kernels, fused_swiglu] if args.quick else list(ALL)
+    print("name,us_per_call,derived")
+    records = []
+    for fn in fns:
+        rows = fn()
+        rows.emit()
+        records.extend(rows.to_records())
+    report = {"quick": args.quick, "rows": records}
+
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}", file=sys.stderr)
+    return report
+
+
+if __name__ == "__main__":
+    main()

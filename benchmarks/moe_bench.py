@@ -19,21 +19,48 @@ to the threshold path's numbers and ``cost_vs_threshold`` is the direct
 threshold/cost wall-time ratio, so a regression in the in-graph argmin
 split shows up as its own gated number (``gate_speedup_cost``).
 
+The one-hot cells at the largest batch additionally time the **fused
+single-pass SwiGLU** grouped kernel against the three-``pallas_call``
+formulation it replaced, both in interpret mode over the compacted
+hot-expert head slab (the high-bimodality head path the fusion targets):
+``fused_head_ms`` / ``threecall_head_ms`` / ``fused_speedup``, gated as
+``gate_speedup_fused`` (>= 1.3x floor).
+
+The uniform cells also time the **dispatch stage in isolation**
+(``dispatch_ms`` vs ``dispatch_argsort_ms``): the sort-free
+counting-scatter dispatch against the stable-argsort oracle it replaced,
+so the rewrite is measured on its own rather than hidden inside ratios
+that pay it on both sides.
+
+**Decode-step wall-clock cells** (``decode_step/*``) run a tiny
+qwen3-moe-30b proxy end to end through ``ServingEngine.step`` — admission,
+donated-cache decode, sieve bookkeeping — per ``expert_exec`` mode, so
+engine-level regressions (e.g. losing KV-cache buffer donation) show up
+as measured step time, not just per-kernel microbenchmarks.  The
+machine-independent ``decode_step_ratio`` (dense/dual step time) is
+baseline-gated.
+
 Methodology: routing is synthetic (fixed expert_idx draws per regime, so
 both paths execute identical assignments), paths are jit-compiled and
 timed with ``block_until_ready`` (best of ``iters``, robust against
-shared-CPU scheduling noise); on CPU hosts the dual path runs its XLA
+shared-CPU scheduling noise); per-cell compile time (first call, which
+the timed iters exclude by warmup) is recorded as separate
+``*_compile_ms`` fields so compile-time regressions can be flagged
+independently of exec time.  On CPU hosts the dual path runs its XLA
 ragged backend — the same algorithm the Pallas kernels implement on TPU
-(kernel-vs-oracle equivalence is pinned by tests/test_kernels.py and
-tests/test_moe_dual.py).  Exec-time drops from the head-compaction budget
+(kernel-vs-oracle equivalence is pinned by tests/test_kernels.py,
+tests/test_fused_swiglu.py and tests/test_moe_dual.py); the fused cells
+force interpret-mode Pallas on both sides so the 1-vs-3 kernel structure
+is what is measured.  Exec-time drops from the head-compaction budget
 are recorded per cell (0 = bit-exact vs dense).
 
-CI runs ``--quick --check`` and fails when either dual path's
-high-bimodality speedup (threshold ``gate_speedup`` or cost-driven
-``gate_speedup_cost``) falls below 1.5x or regresses >2x against the
-committed baseline ``benchmarks/BENCH_moe.json``.  The baseline is
-quick-mode (so its gate cell matches CI's); regenerate after an
-intentional change:
+CI runs ``--quick --check`` and fails when the high-bimodality speedups
+(threshold ``gate_speedup``, cost-driven ``gate_speedup_cost``, fused
+``gate_speedup_fused``) fall below their floors (1.5x / 1.5x / 1.3x) or
+regress >2x against the committed baseline ``benchmarks/BENCH_moe.json``,
+and when ``decode_step_ratio`` regresses >2x against the baseline's.  The
+baseline is quick-mode (so its gate cells match CI's); regenerate after
+an intentional change:
 
     PYTHONPATH=src python benchmarks/moe_bench.py --quick --update-baseline
 """
@@ -69,6 +96,19 @@ GATE_REGIME, GATE_MIN_SPEEDUP = "onehot", 1.5
 GATE_MIN_SPEEDUP_COST = 1.5
 # the gate cell must carry the cost_vs_threshold numbers it gates on
 assert GATE_REGIME in COST_REGIMES, (GATE_REGIME, COST_REGIMES)
+
+# fused single-pass SwiGLU vs three-call, interpret-mode Pallas over the
+# compacted hot-expert head slab; only the high-bimodality regime at the
+# largest batch (interpret mode is slow — one cell is the gate)
+FUSED_REGIME = "onehot"
+FUSED_HEAD = HEAD_BUDGET["onehot"]  # compaction width of the timed slab
+FUSED_BM = 32  # head-slab m-block (small C·rows tiles, keeps padding low)
+GATE_MIN_SPEEDUP_FUSED = 1.3
+
+# decode-step proxy: a tiny qwen3-moe-30b-family model served end to end
+# through ServingEngine.step (2 layers, E=64 top-4 experts, 8 slots)
+DECODE_SLOTS = 8
+DECODE_PROMPT = 8
 
 
 def _arch(expert_exec: str, dual_max_head: int = 0):
@@ -126,6 +166,41 @@ def _dispatch_once(params, arch, x, eidx, w):
     return disp, r, rows
 
 
+def _make_dispatch_pair(arch, T):
+    """jit'd counting-scatter vs stable-argsort dispatch (the isolated
+    stage, so the rewrite is measured on its own, not hidden inside
+    ratios whose numerator and denominator both pay it).  Times
+    ``dispatch_counting`` explicitly — past the crossover ``dispatch``
+    itself falls back to the sort, and a cell timing the fallback
+    against itself would be meaningless."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.moe import (
+        RouterOut,
+        capacity,
+        dispatch_argsort,
+        dispatch_counting,
+    )
+
+    cfg = arch.moe
+    cap = capacity(T, cfg, cfg.n_experts)
+
+    def _route(x, eidx, w):
+        counts = (
+            jnp.zeros((cfg.n_experts,), jnp.int32).at[eidx.reshape(-1)].add(1)
+        )
+        return RouterOut(eidx, w, jnp.zeros((), jnp.float32), counts)
+
+    def counting(x, eidx, w):
+        return dispatch_counting(x, _route(x, eidx, w), cfg.n_experts, cap)
+
+    def argsort(x, eidx, w):
+        return dispatch_argsort(x, _route(x, eidx, w), cfg.n_experts, cap)
+
+    return jax.jit(counting), jax.jit(argsort)
+
+
 def _make_exec(params, arch):
     """jit'd expert-execution stage (the dense-vs-dual comparison target:
     dispatch and combine are identical in both modes)."""
@@ -155,15 +230,60 @@ def _make_path(params, arch):
     return jax.jit(f)
 
 
-def _time(fn, args, iters: int) -> float:
-    fn(*args)[0].block_until_ready()  # compile + warm
+def _time(fn, args, iters: int):
+    """(best exec seconds, first-call seconds).  The first call pays
+    compile + one exec; timed iters exclude it (warmup), so it is
+    recorded separately as the cell's compile-time figure."""
+    import jax
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_s = time.perf_counter() - t0
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn(*args)[0].block_until_ready()
+        jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     # best-of: robust against shared-CPU scheduling noise
-    return float(np.min(ts))
+    return float(np.min(ts)), float(compile_s)
+
+
+def _make_fused_pair(params):
+    """Fused single-pass vs three-call grouped SwiGLU, interpret-mode
+    Pallas, over the FUSED_HEAD most popular experts' compacted capacity
+    slabs (gathered with their weights — the dual executor's head
+    compaction).  Returns jit'd (fused, three-call) callables over
+    (buf, rows)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+
+    def _compact(buf, rows):
+        hid = jnp.argsort(-rows, stable=True)[:FUSED_HEAD]
+        return buf[hid], rows[hid].astype(jnp.int32), hid
+
+    def fused(buf, rows):
+        slab, sizes, hid = _compact(buf, rows)
+        return ops.swiglu_gmm_capacity(
+            slab, wg[hid], wu[hid], wd[hid], sizes, bm=FUSED_BM,
+            interpret=True,
+        )
+
+    def three(buf, rows):
+        slab, sizes, hid = _compact(buf, rows)
+        gate = ops.gmm_capacity(
+            slab, wg[hid], sizes, bm=FUSED_BM, interpret=True
+        )
+        up = ops.gmm_capacity(
+            slab, wu[hid], sizes, bm=FUSED_BM, interpret=True
+        )
+        h = jax.nn.silu(gate) * up
+        return ops.gmm_capacity(h, wd[hid], sizes, bm=FUSED_BM, interpret=True)
+
+    return jax.jit(fused), jax.jit(three)
 
 
 def run_bench(batch_sizes, iters: int, seed: int = 0) -> dict:
@@ -201,10 +321,10 @@ def run_bench(batch_sizes, iters: int, seed: int = 0) -> dict:
             buf = disp.buf.block_until_ready()
             # the comparison target: expert execution over one shared
             # dispatch buffer (dispatch/combine are identical either way)
-            t_dense = _time(dense_exec, (buf, rows), iters)
-            t_dual = _time(dual_exec, (buf, rows), iters)
-            t_dense_e2e = _time(dense_e2e, (x, eidx, w), iters)
-            t_dual_e2e = _time(dual_e2e, (x, eidx, w), iters)
+            t_dense, c_dense = _time(dense_exec, (buf, rows), iters)
+            t_dual, c_dual = _time(dual_exec, (buf, rows), iters)
+            t_dense_e2e, c_dense_e2e = _time(dense_e2e, (x, eidx, w), iters)
+            t_dual_e2e, c_dual_e2e = _time(dual_e2e, (x, eidx, w), iters)
             _, nd_dense = dense_e2e(x, eidx, w)
             _, nd_dual = dual_e2e(x, eidx, w)
             cells[f"{regime}/T{T}"] = {
@@ -214,16 +334,134 @@ def run_bench(batch_sizes, iters: int, seed: int = 0) -> dict:
                 "dense_e2e_ms": round(t_dense_e2e * 1e3, 3),
                 "dual_e2e_ms": round(t_dual_e2e * 1e3, 3),
                 "e2e_speedup": round(t_dense_e2e / t_dual_e2e, 2),
+                "dense_compile_ms": round(c_dense * 1e3, 1),
+                "dual_compile_ms": round(c_dual * 1e3, 1),
+                "dense_e2e_compile_ms": round(c_dense_e2e * 1e3, 1),
+                "dual_e2e_compile_ms": round(c_dual_e2e * 1e3, 1),
                 "capacity_dropped": int(nd_dense),
                 "dual_extra_dropped": int(nd_dual) - int(nd_dense),
             }
+            if regime == "uniform":
+                # dispatch stage in isolation (routing-independent cost:
+                # one regime is enough): sort-free counting scatter vs
+                # the stable-argsort oracle it replaced
+                from repro.models.moe import _COUNTING_DISPATCH_MAX_ELEMS
+
+                disp_new, disp_old = _make_dispatch_pair(arch_dense, T)
+                t_dnew, _ = _time(disp_new, (x, eidx, w), iters)
+                t_dold, _ = _time(disp_old, (x, eidx, w), iters)
+                picks_counting = (
+                    T * TOP_K * (N_EXPERTS + 1) <= _COUNTING_DISPATCH_MAX_ELEMS
+                )
+                cells[f"{regime}/T{T}"].update({
+                    "dispatch_ms": round(t_dnew * 1e3, 3),
+                    "dispatch_argsort_ms": round(t_dold * 1e3, 3),
+                    "dispatch_speedup": round(t_dold / t_dnew, 2),
+                    "dispatch_picks": (
+                        "counting" if picks_counting else "argsort"
+                    ),
+                })
             if time_cost:
-                t_cost = _time(cost_exec, (buf, rows), iters)
+                t_cost, c_cost = _time(cost_exec, (buf, rows), iters)
                 cells[f"{regime}/T{T}"].update({
                     "cost_exec_ms": round(t_cost * 1e3, 3),
                     "cost_speedup": round(t_dense / t_cost, 2),
                     "cost_vs_threshold": round(t_dual / t_cost, 2),
+                    "cost_compile_ms": round(c_cost * 1e3, 1),
                 })
+            if regime == FUSED_REGIME and T == max(batch_sizes):
+                # fused single-pass SwiGLU vs the three-call path it
+                # replaced, interpret-mode Pallas over the compacted
+                # hot-expert head slab (few interpret iters — the cells
+                # are slow and best-of is stable there)
+                fused_fn, three_fn = _make_fused_pair(params)
+                f_iters = max(2, min(iters, 3))
+                t_fused, c_fused = _time(fused_fn, (buf, rows), f_iters)
+                t_three, c_three = _time(three_fn, (buf, rows), f_iters)
+                cells[f"{regime}/T{T}"].update({
+                    "fused_head_ms": round(t_fused * 1e3, 3),
+                    "threecall_head_ms": round(t_three * 1e3, 3),
+                    "fused_speedup": round(t_three / t_fused, 2),
+                    "fused_compile_ms": round(c_fused * 1e3, 1),
+                    "threecall_compile_ms": round(c_three * 1e3, 1),
+                })
+    return cells
+
+
+def _decode_arch(expert_exec: str):
+    """Tiny qwen3-moe-30b proxy for the end-to-end decode-step cells:
+    same family/attention/norm stack, MoE shrunk so a CPU step stays in
+    the tens of ms while expert execution still dominates."""
+    import dataclasses as dc
+
+    from repro.configs import get_arch
+
+    arch = get_arch("qwen3-moe-30b-a3b")
+    return dc.replace(
+        arch,
+        n_layers=2,
+        d_model=128,
+        vocab_size=512,
+        attn=dc.replace(arch.attn, n_heads=4, n_kv_heads=2, d_head=32),
+        moe=dc.replace(
+            arch.moe,
+            n_experts=64,
+            top_k=4,
+            d_expert=64,
+            expert_exec=expert_exec,
+            dual_tail_tokens=1,
+            dual_max_head=0,
+        ),
+    )
+
+
+def run_decode_bench(iters: int, seed: int = 0) -> dict:
+    """Decode-step wall-clock through ``ServingEngine.step`` per
+    ``expert_exec`` mode: the first step (prefills + compiles) is the
+    recorded compile figure; timed steps are pure batched decode over the
+    donated KV cache, including the engine's host-side sieve pass."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import LM
+    from repro.serving import BatchingConfig, Request, ServingEngine
+
+    cells = {}
+    for mode in ("dense", "dual_path", "dual_path_cost"):
+        arch = _decode_arch(mode)
+        lm = LM(arch, dtype=jnp.float32)
+        p = lm.init(jax.random.PRNGKey(seed))
+        eng = ServingEngine(
+            lm, p, BatchingConfig(n_slots=DECODE_SLOTS, max_seq=64)
+        )
+        rng = np.random.default_rng(seed)
+        for _ in range(DECODE_SLOTS):
+            eng.submit(Request(
+                prompt=list(rng.integers(0, 500, size=DECODE_PROMPT)),
+                max_new_tokens=iters + 8,
+            ))
+        t0 = time.perf_counter()
+        eng.step()  # admits + prefills every slot, compiles prefill
+        first = time.perf_counter() - t0
+        eng.step()  # first batched decode: compiles the decode step
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            eng.step()  # pure decode
+            ts.append(time.perf_counter() - t0)
+        # every timed step decoded the full batch (nothing retired early)
+        assert eng.stats.decode_tokens >= (iters + 1) * DECODE_SLOTS
+        cells[f"decode_step/{mode}"] = {
+            "step_ms": round(float(np.min(ts)) * 1e3, 3),
+            "step_ms_median": round(float(np.median(ts)) * 1e3, 3),
+            "first_step_ms": round(first * 1e3, 1),
+            "decode_tokens_per_step": DECODE_SLOTS,
+        }
+    cells["decode_step/dense"]["note"] = (
+        "proxy arch: 2 layers d_model=128, E=64 top-4 d_expert=64, "
+        f"{DECODE_SLOTS} slots; step = ServingEngine.step incl. host "
+        "sieve pass over donated KV cache"
+    )
     return cells
 
 
@@ -247,6 +485,13 @@ def main(argv=None) -> dict:
 
     batch_sizes, iters = ([256, 2048], 7) if args.quick else ([256, 1024, 4096], 11)
     cells = run_bench(batch_sizes, iters, seed=args.seed)
+    decode_iters = 5 if args.quick else 9
+    cells.update(run_decode_bench(decode_iters, seed=args.seed))
+    decode_ratio = round(
+        cells["decode_step/dense"]["step_ms"]
+        / cells["decode_step/dual_path"]["step_ms"],
+        3,
+    )
 
     gate_cell = f"{GATE_REGIME}/T{max(batch_sizes)}"
     report = {
@@ -261,17 +506,25 @@ def main(argv=None) -> dict:
             "quick": args.quick,
             "gate_cell": gate_cell,
             "cost_regimes": list(COST_REGIMES),
+            "fused_head": FUSED_HEAD,
+            "decode_slots": DECODE_SLOTS,
             "methodology": (
                 "synthetic fixed routing per regime; exec_speedup times the "
                 "jit-compiled expert-execution stage over one shared "
                 "dispatch buffer (e2e adds dispatch+combine); best of "
-                f"{iters} timed iters after warmup; XLA ragged backend on "
-                "non-TPU hosts (kernel equivalence pinned by tests)"
+                f"{iters} timed iters after warmup, per-cell compile time "
+                "recorded separately as *_compile_ms; XLA ragged backend on "
+                "non-TPU hosts (kernel equivalence pinned by tests); "
+                "fused_head cells force interpret-mode Pallas on both sides "
+                "over the compacted hot-expert head slab; decode_step cells "
+                "run ServingEngine.step on a tiny qwen3-moe proxy"
             ),
         },
         "cells": cells,
         "gate_speedup": cells[gate_cell]["exec_speedup"],
         "gate_speedup_cost": cells[gate_cell]["cost_speedup"],
+        "gate_speedup_fused": cells[gate_cell]["fused_speedup"],
+        "decode_step_ratio": decode_ratio,
     }
     print(json.dumps(report, indent=1))
 
@@ -287,6 +540,7 @@ def main(argv=None) -> dict:
         failures = []
         got = report["gate_speedup"]
         got_cost = report["gate_speedup_cost"]
+        got_fused = report["gate_speedup_fused"]
         if got < GATE_MIN_SPEEDUP:
             failures.append(
                 f"{gate_cell}: dual-path speedup {got:.2f}x < "
@@ -296,6 +550,11 @@ def main(argv=None) -> dict:
             failures.append(
                 f"{gate_cell}: dual_path_cost speedup {got_cost:.2f}x < "
                 f"{GATE_MIN_SPEEDUP_COST}x floor"
+            )
+        if got_fused < GATE_MIN_SPEEDUP_FUSED:
+            failures.append(
+                f"{gate_cell}: fused SwiGLU speedup {got_fused:.2f}x < "
+                f"{GATE_MIN_SPEEDUP_FUSED}x floor over the three-call path"
             )
         if os.path.exists(BASELINE_PATH):
             with open(BASELINE_PATH) as f:
@@ -312,6 +571,32 @@ def main(argv=None) -> dict:
                     f"{gate_cell}: cost path {got_cost:.2f}x < baseline "
                     f"{want_cost:.2f}x / 2"
                 )
+            want_fused = base.get("gate_speedup_fused")
+            if want_fused and got_fused < want_fused / 2.0:
+                failures.append(
+                    f"{gate_cell}: fused path {got_fused:.2f}x < baseline "
+                    f"{want_fused:.2f}x / 2"
+                )
+            want_decode = base.get("decode_step_ratio")
+            got_decode = report["decode_step_ratio"]
+            if want_decode and got_decode < want_decode / 2.0:
+                failures.append(
+                    "decode_step: dense/dual step-time ratio "
+                    f"{got_decode:.2f} < baseline {want_decode:.2f} / 2"
+                )
+            # compile-time drift is machine-dependent: warn, don't gate
+            base_cells = base.get("cells", {})
+            for name, cell in report["cells"].items():
+                for field, val in cell.items():
+                    if not field.endswith("_compile_ms"):
+                        continue
+                    ref = base_cells.get(name, {}).get(field)
+                    if ref and val > 3.0 * ref:
+                        print(
+                            f"COMPILE-TIME WARNING: {name}.{field} "
+                            f"{val:.0f}ms > 3x baseline {ref:.0f}ms",
+                            file=sys.stderr,
+                        )
         else:
             print("no committed baseline; floor check only", file=sys.stderr)
         if failures:

@@ -1,4 +1,6 @@
 # Pallas TPU kernels for the compute hot-spots of the Sieve runtime:
+#   fused_swiglu     — single-pass SwiGLU: grouped head + streaming tail,
+#                      gate/up/down in one kernel (the default dual path)
 #   grouped_gemm     — MXU path for popular experts (paper §6.3)
 #   expert_gemv      — streaming GEMV path for the 1-token tail (paper §6.2)
 #   decode_attention — the memory-bound decode attention (paper §2.2)

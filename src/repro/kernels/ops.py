@@ -16,6 +16,8 @@ import jax.numpy as jnp
 
 from .decode_attention import decode_attention as _decode_attention
 from .expert_gemv import expert_gemv as _expert_gemv
+from .fused_swiglu import fused_swiglu_gemv as _fused_swiglu_gemv
+from .fused_swiglu import fused_swiglu_gmm as _fused_swiglu_gmm
 from .grouped_gemm import grouped_gemm as _grouped_gemm
 
 
@@ -65,6 +67,30 @@ def _fit_block(b: int, dim: int) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _capacity_tiles(buf: jax.Array, bm: int):
+    """Shared capacity-layout prologue for the grouped kernels: clamp the
+    m-block to the (padded) capacity, pad C to a multiple of it, flatten
+    to group-major rows, and build the tile→group scalar-prefetch tables.
+    Returns ``(lhs, group_of_tile, row_in_group, bm, Cp)`` — one
+    implementation so the fused and unfused head paths can never
+    desynchronize on the layout contract."""
+    G, C, K = buf.shape
+    bm = _clamp_bm(bm, C)
+    Cp = _round_up(C, bm)
+    if Cp != C:
+        buf = jnp.pad(buf, ((0, 0), (0, Cp - C), (0, 0)))
+    lhs = buf.reshape(G * Cp, K)
+    tiles_per_group = Cp // bm
+    m_tiles = G * tiles_per_group
+    group_of_tile = (
+        jnp.arange(m_tiles, dtype=jnp.int32) // tiles_per_group
+    )
+    row_in_group = (
+        jnp.arange(m_tiles, dtype=jnp.int32) % tiles_per_group
+    ) * bm
+    return lhs, group_of_tile, row_in_group, bm, Cp
+
+
 @functools.partial(jax.jit, static_argnames=("group_padded", "bm", "bk", "bn", "interpret"))
 def gmm_capacity(
     buf: jax.Array,  # (G, C, K) capacity-layout dispatch buffer
@@ -89,20 +115,8 @@ def gmm_capacity(
         interpret = _interpret_default()
     G, C, K = buf.shape
     N = rhs.shape[2]
-    bm = _clamp_bm(bm, C)
     bk, bn = _fit_block(bk, K), _fit_block(bn, N)
-    Cp = _round_up(C, bm)
-    if Cp != C:
-        buf = jnp.pad(buf, ((0, 0), (0, Cp - C), (0, 0)))
-    lhs = buf.reshape(G * Cp, K)
-    tiles_per_group = Cp // bm
-    m_tiles = G * tiles_per_group
-    group_of_tile = (
-        jnp.arange(m_tiles, dtype=jnp.int32) // tiles_per_group
-    )
-    row_in_group = (
-        jnp.arange(m_tiles, dtype=jnp.int32) % tiles_per_group
-    ) * bm
+    lhs, group_of_tile, row_in_group, bm, Cp = _capacity_tiles(buf, bm)
     out = _grouped_gemm(
         lhs, rhs, group_sizes.astype(jnp.int32), group_of_tile, row_in_group,
         rhs_of_group,
@@ -157,6 +171,49 @@ def gmm_ragged(
 
 
 # ---------------------------------------------------------------------------
+# Fused SwiGLU grouped GEMM (single-pass head path)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "interpret"))
+def swiglu_gmm_capacity(
+    buf: jax.Array,  # (G, C, K) capacity-layout dispatch buffer
+    wg: jax.Array,  # (E, K, F)
+    wu: jax.Array,  # (E, K, F)
+    wd: jax.Array,  # (E, F, N)
+    group_sizes: jax.Array,  # (G,) real rows per group
+    rhs_of_group: jax.Array | None = None,  # (G,) weight row per group
+    bm: int = 128,
+    bk: int = 512,
+    bf: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-pass SwiGLU over the (G, C, K) capacity buffer -> (G, C, N).
+
+    Fuses the three ``gmm_capacity`` calls of the head path into one
+    kernel: the slab is streamed from HBM once per f-tile (F/bf passes —
+    exactly once when the expert dim fits one ``bf`` block — vs 2·F/bn
+    slab passes plus a full HBM round trip of the (G, C, F) intermediate
+    for the three-call path) and the ``silu(gate) * up`` intermediate
+    lives only in VMEM.  Same layout contract as :func:`gmm_capacity`
+    (C padded to a multiple of bm, dead tiles skip the MXU work,
+    ``rhs_of_group`` shares weights between groups).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    G, C, K = buf.shape
+    N = wd.shape[2]
+    bk, bf = _fit_block(bk, K), _fit_block(bf, wg.shape[2])
+    lhs, group_of_tile, row_in_group, bm, Cp = _capacity_tiles(buf, bm)
+    out = _fused_swiglu_gmm(
+        lhs, wg, wu, wd, group_sizes.astype(jnp.int32), group_of_tile,
+        row_in_group, rhs_of_group,
+        bm=bm, bk=bk, bf=bf, interpret=interpret,
+    )
+    return out.reshape(G, Cp, N)[:, :C, :]
+
+
+# ---------------------------------------------------------------------------
 # Expert GEMV (the TPU "PIM path")
 # ---------------------------------------------------------------------------
 
@@ -181,6 +238,34 @@ def expert_gemv(
     return _expert_gemv(
         tokens, weights, expert_ids.astype(jnp.int32), valid.astype(jnp.int32),
         bk=bk, bn=bn, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bf", "interpret"))
+def swiglu_gemv(
+    tokens: jax.Array,  # (S, K)
+    wg: jax.Array,  # (E, K, F)
+    wu: jax.Array,  # (E, K, F)
+    wd: jax.Array,  # (E, F, N)
+    expert_ids: jax.Array,  # (S,) int32
+    valid: jax.Array | None = None,  # (S,) bool/int
+    bk: int = 512,
+    bf: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused tail path: per-row SwiGLU with the expert's weight matrices
+    streamed once each (three :func:`expert_gemv` streams -> one)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    S = tokens.shape[0]
+    bk = _fit_block(bk, tokens.shape[1])
+    bf = _fit_block(bf, wg.shape[2])
+    if valid is None:
+        valid = jnp.ones((S,), jnp.int32)
+    return _fused_swiglu_gemv(
+        tokens, wg, wu, wd, expert_ids.astype(jnp.int32),
+        valid.astype(jnp.int32),
+        bk=bk, bf=bf, interpret=interpret,
     )
 
 

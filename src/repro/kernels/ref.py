@@ -34,6 +34,44 @@ def expert_gemv_ref(
     return (y * (valid > 0)[:, None]).astype(tokens.dtype)
 
 
+def fused_swiglu_gmm_ref(
+    buf: jax.Array,  # (G, C, K) capacity-layout dispatch buffer
+    wg: jax.Array,  # (E, K, F)
+    wu: jax.Array,  # (E, K, F)
+    wd: jax.Array,  # (E, F, N)
+    group_sizes: jax.Array,  # (G,) real rows per group
+    rhs_of_group: jax.Array | None = None,  # (G,) weight row per group
+) -> jax.Array:
+    """Dense SwiGLU over the capacity slab; padding rows -> 0."""
+    if rhs_of_group is not None:
+        wg, wu, wd = wg[rhs_of_group], wu[rhs_of_group], wd[rhs_of_group]
+    x = buf.astype(jnp.float32)
+    gate = jnp.einsum("gck,gkf->gcf", x, wg.astype(jnp.float32))
+    up = jnp.einsum("gck,gkf->gcf", x, wu.astype(jnp.float32))
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("gcf,gfn->gcn", h, wd.astype(jnp.float32))
+    live = (
+        jnp.arange(buf.shape[1])[None, :] < group_sizes[:, None]
+    )
+    return (y * live[..., None]).astype(buf.dtype)
+
+
+def fused_swiglu_gemv_ref(
+    tokens: jax.Array,  # (S, K)
+    wg: jax.Array,  # (E, K, F)
+    wu: jax.Array,  # (E, K, F)
+    wd: jax.Array,  # (E, F, N)
+    expert_ids: jax.Array,  # (S,)
+    valid: jax.Array,  # (S,)
+) -> jax.Array:
+    x = tokens.astype(jnp.float32)
+    gate = jnp.einsum("sk,skf->sf", x, wg[expert_ids].astype(jnp.float32))
+    up = jnp.einsum("sk,skf->sf", x, wu[expert_ids].astype(jnp.float32))
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("sf,sfn->sn", h, wd[expert_ids].astype(jnp.float32))
+    return (y * (valid > 0)[:, None]).astype(tokens.dtype)
+
+
 def decode_attention_ref(
     q: jax.Array,  # (B, H, dh)
     cache_k: jax.Array,  # (B, T, Kv, dh)

@@ -151,6 +151,18 @@ def capacity(T: int, cfg: MoEConfig, n_experts: int) -> int:
     return max(c, min(T, cfg.min_capacity), 1)
 
 
+# Counting-scatter dispatch does Theta(Tk * nE) work/memory for its
+# running-counter cumsum; the stable argsort it replaces is
+# O(Tk log Tk).  The crossover measured on the bench arch (E=128, k=8)
+# sits around Tk*(nE+1) ~ 4M elements (a ~16 MB int32 intermediate):
+# below it — every decode/serving-sized batch — the counters win (the
+# moe_bench `dispatch_ms` cells track this); above it — prefill-scale
+# batches — the sort stays faster, so dispatch falls back to it.  Both
+# formulations are bit-identical, so the switch is purely a cost choice
+# made at trace time (shapes are static under jit).
+_COUNTING_DISPATCH_MAX_ELEMS = 4_000_000
+
+
 def dispatch(
     x: jax.Array,  # (T, d)
     r: RouterOut,
@@ -159,13 +171,89 @@ def dispatch(
     expert_offset: int = 0,
     n_local: Optional[int] = None,
 ) -> Dispatched:
-    """Scatter tokens into an (n_local, cap, d) buffer.
+    """Scatter tokens into an (n_local, cap, d) buffer — sort-free on the
+    decode hot path.
+
+    An assignment's capacity slot is its *rank* among same-expert
+    assignments in token order.  The ranks come from a counting scatter —
+    running per-expert counters over the flattened (T*k) assignment
+    stream (a cumulative sum of the expert one-hots) — instead of the
+    stable ``argsort`` the original dispatch used, removing the
+    O(Tk log Tk) sort from every MoE layer of every decode step.  Token
+    order is what the stable sort preserved within each expert, so the
+    ranks (and with them ``buf``, ``slot_of`` and ``n_dropped``) are
+    bit-identical to the argsort formulation (pinned by
+    tests/test_fused_swiglu.py against :func:`dispatch_argsort`, which
+    also remains the executor for prefill-scale batches where the
+    counting matrix would outgrow the sort — see
+    ``_COUNTING_DISPATCH_MAX_ELEMS``).
 
     With ``expert_offset``/``n_local`` set, only assignments targeting the
     local expert shard [offset, offset + n_local) are dispatched (the
     expert-parallel case); others are masked out (their slot_of is -1 and
     they contribute nothing — a remote shard handles them).
     """
+    T = x.shape[0]
+    k = r.expert_idx.shape[1]
+    nE = n_experts if n_local is None else n_local
+    if T * k * (nE + 1) > _COUNTING_DISPATCH_MAX_ELEMS:
+        return dispatch_argsort(
+            x, r, n_experts, cap, expert_offset=expert_offset, n_local=n_local
+        )
+    return dispatch_counting(
+        x, r, n_experts, cap, expert_offset=expert_offset, n_local=n_local
+    )
+
+
+def dispatch_counting(
+    x: jax.Array,  # (T, d)
+    r: RouterOut,
+    n_experts: int,
+    cap: int,
+    expert_offset: int = 0,
+    n_local: Optional[int] = None,
+) -> Dispatched:
+    """The counting-scatter formulation itself (no size fallback) — what
+    :func:`dispatch` runs below the crossover; exposed so benchmarks and
+    tests can measure/pin it at any size."""
+    T, d = x.shape
+    k = r.expert_idx.shape[1]
+    Tk = T * k
+    nE = n_experts if n_local is None else n_local
+    e_flat = r.expert_idx.reshape(-1) - expert_offset
+    valid = (e_flat >= 0) & (e_flat < nE)
+    e_key = jnp.where(valid, e_flat, nE).astype(jnp.int32)
+    # counting scatter: pos[i] = #{j < i : e_key[j] == e_key[i]} — the
+    # running per-expert counter read just before assignment i bumps it
+    onehot = e_key[:, None] == jnp.arange(nE + 1, dtype=jnp.int32)[None, :]
+    running = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    pos = jnp.take_along_axis(running, e_key[:, None], axis=1)[:, 0]
+    keep = (pos < cap) & valid
+    slot = jnp.where(keep, e_key * cap + pos, nE * cap)
+    token_of = jnp.arange(Tk, dtype=jnp.int32) // k
+    vals = x[token_of] * keep[:, None].astype(x.dtype)
+    buf = (
+        jnp.zeros((nE * cap + 1, d), x.dtype)
+        .at[slot].set(vals)[: nE * cap]
+        .reshape(nE, cap, d)
+    )
+    slot_of = jnp.where(keep, slot, -1).reshape(T, k)
+    n_dropped = jnp.sum(
+        (~keep) & valid
+    ).astype(jnp.int32)  # overflow only (not remote assignments)
+    return Dispatched(buf, slot_of, n_dropped)
+
+
+def dispatch_argsort(
+    x: jax.Array,  # (T, d)
+    r: RouterOut,
+    n_experts: int,
+    cap: int,
+    expert_offset: int = 0,
+    n_local: Optional[int] = None,
+) -> Dispatched:
+    """Stable-argsort dispatch (the original formulation) — kept as the
+    reference oracle for the sort-free :func:`dispatch`."""
     T, d = x.shape
     k = r.expert_idx.shape[1]
     Tk = T * k
@@ -299,11 +387,34 @@ def _dual_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _swiglu_grouped_pallas(slab, wg, wu, wd, sizes, rhs_of_group=None):
-    """Head path: gate/up/down as three grouped matmuls over the capacity
-    slab; tiles of dead rows skip their MXU work inside the kernel."""
+def _fused_swiglu_default() -> bool:
+    """The head/tail Pallas paths run the single-pass fused SwiGLU kernels
+    by default; ``REPRO_FUSED_SWIGLU=0`` falls back to the three-call
+    (gate/up/down as separate ``pallas_call``s) formulation — kept for
+    A/B benchmarking (``moe_bench``'s fused cells) and as the fused
+    kernels' equivalence oracle."""
+    env = os.environ.get("REPRO_FUSED_SWIGLU")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return True
+
+
+def _swiglu_grouped_pallas(slab, wg, wu, wd, sizes, rhs_of_group=None,
+                           fused: Optional[bool] = None):
+    """Head path: one single-pass fused SwiGLU grouped matmul over the
+    capacity slab — the slab is read from HBM once and the SiLU
+    intermediate never leaves VMEM; tiles of dead rows skip their MXU
+    work inside the kernel.  ``fused=False`` runs the three-call
+    formulation (two slab reads + an HBM round trip of the (G, C, f)
+    intermediate)."""
     from repro.kernels import ops
 
+    if fused is None:
+        fused = _fused_swiglu_default()
+    if fused:
+        return ops.swiglu_gmm_capacity(
+            slab, wg, wu, wd, sizes, rhs_of_group=rhs_of_group
+        )
     gate = ops.gmm_capacity(slab, wg, sizes, rhs_of_group=rhs_of_group)
     up = ops.gmm_capacity(slab, wu, sizes, rhs_of_group=rhs_of_group)
     h = jax.nn.silu(gate) * up
@@ -324,10 +435,19 @@ def _swiglu_grouped_xla(slab, wg, wu, wd, sizes, rhs_of_group=None):
     return y * live[..., None].astype(y.dtype)
 
 
-def _swiglu_gemv_pallas(toks, wg, wu, wd, eids, valid):
-    """Tail path: each row streams its expert's weights (the PIM proxy)."""
+def _swiglu_gemv_pallas(toks, wg, wu, wd, eids, valid,
+                        fused: Optional[bool] = None):
+    """Tail path: each row streams its expert's weights (the PIM proxy).
+
+    Fused by default: one kernel streams ``wg``/``wu``/``wd`` once per
+    row with the activation in-register (three GEMV streams -> one);
+    ``fused=False`` keeps the three-call stream for A/B comparison."""
     from repro.kernels import ops
 
+    if fused is None:
+        fused = _fused_swiglu_default()
+    if fused:
+        return ops.swiglu_gemv(toks, wg, wu, wd, eids, valid)
     gate = ops.expert_gemv(toks, wg, eids, valid)
     up = ops.expert_gemv(toks, wu, eids, valid)
     h = jax.nn.silu(gate) * up

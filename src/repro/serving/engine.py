@@ -91,8 +91,16 @@ class ServingEngine:
         self.stats = EngineStats()
 
         self.cache = lm.init_cache(batching.n_slots, batching.max_seq)
-        self._decode = jax.jit(lm.decode_step)
-        self._prefill_chunk = jax.jit(self._prefill_chunk_impl, static_argnums=(3,))
+        # The KV cache is donated on both compiled steps (argnum 2): the
+        # engine rebinds ``self.cache`` to the returned cache every call,
+        # so the stale buffers would otherwise survive as full-cache
+        # copies — at decode that is a whole-cache memcpy per step.  With
+        # donation XLA aliases cache-in to cache-out and the update is
+        # in-place (pinned by tests/test_serving.py::TestBufferDonation).
+        self._decode = jax.jit(lm.decode_step, donate_argnums=(2,))
+        self._prefill_chunk = jax.jit(
+            self._prefill_chunk_impl, static_argnums=(3,), donate_argnums=(2,)
+        )
 
         # ---- Sieve runtime state (MoE archs only) ----
         arch = lm.arch
@@ -155,6 +163,7 @@ class ServingEngine:
         """
         if self.cost_table.version == self._sieve_version:
             return
+        stale = self._sieve_state
         self._sieve_state = jax.device_put(
             make_sieve_state(
                 self.cost_table,
@@ -166,6 +175,14 @@ class ServingEngine:
         )
         self._sieve_version = self.cost_table.version
         self.sieve_refreshes.append(step)
+        # donate the stale state: its device buffers can never be read
+        # again (the engine always passes the current state), so free
+        # them eagerly instead of waiting for GC — long-lived engines
+        # otherwise hold two table exports alive per refresh.
+        if stale is not None:
+            for leaf in jax.tree.leaves(stale):
+                if isinstance(leaf, jax.Array) and not leaf.is_deleted():
+                    leaf.delete()
 
     # ------------------------------------------------------------------
     def _prefill_chunk_impl(self, params, batch, cache, slot: int):

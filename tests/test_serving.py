@@ -124,6 +124,61 @@ class TestEngine:
         prefilled = [r for r in eng.sched.active if r.prefill_done > 0]
         assert len(prefilled) == 1
 
+    def test_buffer_donation_decode_reuses_kv_cache(self):
+        """The decode step donates the KV cache (argnum 2): the stale
+        cache buffers must be freed and the new cache must reuse the
+        donated memory in place — no full-cache copy per decode step."""
+        eng = make_engine()
+        for r in reqs(4):
+            eng.submit(r)
+        eng.step()  # prefill + first decode
+        old_leaves = jax.tree.leaves(eng.cache)
+        old_ptrs = {leaf.unsafe_buffer_pointer() for leaf in old_leaves}
+        eng.step()  # pure decode
+        assert all(leaf.is_deleted() for leaf in old_leaves)
+        new_ptrs = {
+            leaf.unsafe_buffer_pointer()
+            for leaf in jax.tree.leaves(eng.cache)
+        }
+        # in-place update: the new cache lives in the donated buffers
+        assert old_ptrs & new_ptrs, (old_ptrs, new_ptrs)
+
+    def test_buffer_donation_prefill_frees_stale_cache(self):
+        eng = make_engine()
+        old_leaves = jax.tree.leaves(eng.cache)
+        eng.submit(reqs(1)[0])
+        eng.step()  # prefill donates the cache it consumed
+        assert all(leaf.is_deleted() for leaf in old_leaves)
+
+    def test_donation_preserves_generations(self):
+        """Donation must not change results: interleaved prefills and
+        decodes over donated caches reproduce the no-donation outputs
+        (cross-checked against standalone decode in
+        test_engine_output_matches_standalone_decode)."""
+        outs = []
+        for _ in range(2):
+            eng = make_engine()
+            for r in reqs(5, seed=3):
+                eng.submit(r)
+            done = eng.run_until_done()
+            outs.append(
+                [tuple(r.generated) for r in sorted(done, key=lambda q: q.req_id)]
+            )
+        assert outs[0] == outs[1]
+
+    def test_sieve_refresh_donates_stale_state(self):
+        """_refresh_sieve_state frees the previous SieveState's device
+        buffers (the engine can never read them again)."""
+        eng = make_engine()  # qwen3 arch ships dual_path_cost
+        assert eng.uses_cost_split
+        stale = eng._sieve_state
+        eng.cost_table.update(3, 1e-4)  # bump the table version
+        eng._refresh_sieve_state(step=1)
+        assert eng._sieve_state is not stale
+        assert all(
+            leaf.is_deleted() for leaf in jax.tree.leaves(stale)
+        )
+
     def test_throughput_accounting(self):
         eng = make_engine()
         for r in reqs(2, new=3):
