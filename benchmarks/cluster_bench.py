@@ -31,7 +31,39 @@ from repro.cluster import (
 )
 from repro.sim import SIM_MODELS
 
+try:
+    from .common import add_trace_arg
+except ImportError:  # invoked as a script: python benchmarks/cluster_bench.py
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import add_trace_arg
+
 POLICIES = ("sieve", "gpu_only", "pimoe")
+
+
+def run_traced_point(model, rate, horizon, lengths, seed, trace_out,
+                     n_replicas=2, router="jsq", policy="sieve") -> str:
+    """Re-run one representative cluster point with telemetry enabled and
+    export its Perfetto trace: per-replica step spans in *simulated* time
+    plus queue-depth / batch-occupancy / SLO counter tracks, one process
+    lane per replica.  A dedicated run (not part of the sweep) so the
+    timeline holds exactly one cluster's events."""
+    from repro.telemetry import Telemetry, write_trace
+
+    tel = Telemetry(enabled=True, capacity=1 << 17)
+    cs = ClusterSimulator(
+        SIM_MODELS[model], b200_pim_system(), policy=policy,
+        n_replicas=n_replicas, router_policy=router, seed=seed,
+        telemetry=tel,
+    )
+    arr = PoissonProcess(rate=rate * n_replicas, lengths=lengths, seed=seed + 7)
+    cs.run(arr, horizon)
+    path = write_trace(tel, trace_out)
+    print(
+        f"# trace: {path} ({tel.n_events} events, "
+        f"{policy}/{router} x{n_replicas} @ {rate:.0f} rps/replica)",
+        file=sys.stderr,
+    )
+    return path
 
 
 def run_point(cs, policy, router, n_replicas, rate, horizon, lengths, slo, seed):
@@ -69,6 +101,7 @@ def main(argv=None) -> dict:
     )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=os.path.join("benchmarks", "out", "cluster_bench.json"))
+    add_trace_arg(ap)
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -143,6 +176,13 @@ def main(argv=None) -> dict:
                 knees_full.setdefault(policy, {})[f"{router}-x{n_rep}"] = (
                     max(full) if full else 0.0
                 )
+
+    if args.trace_out:
+        run_traced_point(
+            args.model, rates[len(rates) // 2], horizon, lengths,
+            args.seed, args.trace_out,
+            n_replicas=replicas[0], router=routers[-1],
+        )
 
     # headline: best knee per policy across routers/replica counts
     headline = {p: max(v.values()) for p, v in knees.items()}

@@ -1,7 +1,15 @@
-"""Benchmark helpers: timing + CSV row emission."""
+"""Benchmark helpers: timing + CSV row emission + trace capture.
 
+Every bench that calls :func:`add_trace_arg` grows a ``--trace-out PATH``
+flag: when set, :func:`trace_session` hands the bench an *enabled*
+:class:`repro.telemetry.Telemetry` and writes the recorded spans out as a
+Perfetto/Chrome trace JSON on exit (load it at https://ui.perfetto.dev,
+or summarize with ``scripts/make_trace_report.py``)."""
+
+import argparse
+import contextlib
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 
 def time_fn(fn: Callable, warmup: int = 2, iters: int = 10) -> float:
@@ -15,6 +23,36 @@ def time_fn(fn: Callable, warmup: int = 2, iters: int = 10) -> float:
         ts.append((time.perf_counter() - t0) * 1e6)
     ts.sort()
     return ts[len(ts) // 2]
+
+
+def add_trace_arg(ap: argparse.ArgumentParser) -> None:
+    """Attach the shared ``--trace-out`` flag to a bench's arg parser."""
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        metavar="PATH",
+        help="write a Perfetto trace JSON of the bench run to PATH",
+    )
+
+
+@contextlib.contextmanager
+def trace_session(trace_out: Optional[str], span_name: str = "bench"):
+    """Yield a Telemetry instance for the bench run.
+
+    With ``trace_out=None`` this is free: yields the process-default
+    instance (disabled unless REPRO_TELEMETRY is set) and writes nothing.
+    With a path, yields a fresh enabled instance, wraps the whole bench in
+    one ``span_name`` span, and writes the trace on exit."""
+    from repro.telemetry import Telemetry, default, write_trace
+
+    if trace_out is None:
+        yield default()
+        return
+    tel = Telemetry(enabled=True)
+    with tel.span(span_name):
+        yield tel
+    path = write_trace(tel, trace_out)
+    print(f"# trace: {path} ({tel.n_events} events)")
 
 
 class Rows:

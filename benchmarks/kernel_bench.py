@@ -25,10 +25,10 @@ from repro.kernels import ops, ref
 from repro.models import LM
 
 try:
-    from .common import Rows, time_fn
+    from .common import Rows, add_trace_arg, time_fn, trace_session
 except ImportError:  # invoked as a script: python benchmarks/kernel_bench.py
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-    from common import Rows, time_fn
+    from common import Rows, add_trace_arg, time_fn, trace_session
 
 
 def kernels() -> Rows:
@@ -188,15 +188,18 @@ def main(argv=None) -> dict:
     ap.add_argument(
         "--out", default=os.path.join("benchmarks", "out", "kernel_bench.json")
     )
+    add_trace_arg(ap)
     args = ap.parse_args(argv)
 
     fns = [kernels, fused_swiglu] if args.quick else list(ALL)
     print("name,us_per_call,derived")
     records = []
-    for fn in fns:
-        rows = fn()
-        rows.emit()
-        records.extend(rows.to_records())
+    with trace_session(args.trace_out, "kernel_bench") as tel:
+        for fn in fns:
+            with tel.span(f"bench/{fn.__name__}"):
+                rows = fn()
+            rows.emit()
+            records.extend(rows.to_records())
     report = {"quick": args.quick, "rows": records}
 
     out_dir = os.path.dirname(args.out)

@@ -32,6 +32,12 @@ from repro.core.scheduler import (
     sieve_schedule_reference,
 )
 
+try:
+    from .common import add_trace_arg, trace_session
+except ImportError:  # invoked as a script: python benchmarks/sched_bench.py
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import add_trace_arg, trace_session
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_PATH = os.path.join(REPO, "benchmarks", "BENCH_sched.json")
 
@@ -111,13 +117,17 @@ def main(argv=None) -> dict:
     ap.add_argument(
         "--out", default=os.path.join("benchmarks", "out", "sched_bench.json")
     )
+    add_trace_arg(ap)
     args = ap.parse_args(argv)
 
     n_vectors, iters = (50, 8) if args.quick else (200, 25)
     horizon = 0.5 if args.quick else 1.5
 
-    sched = bench_schedulers(n_vectors, iters, seed=args.seed)
-    sweep_s = bench_cluster_sweep(horizon, seed=args.seed)
+    with trace_session(args.trace_out, "sched_bench") as tel:
+        with tel.span("bench/schedulers"):
+            sched = bench_schedulers(n_vectors, iters, seed=args.seed)
+        with tel.span("bench/cluster_sweep"):
+            sweep_s = bench_cluster_sweep(horizon, seed=args.seed)
 
     report = {
         "config": {

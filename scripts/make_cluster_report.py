@@ -21,6 +21,14 @@ def main() -> None:
         argv.remove("--full")
     else:
         argv = ["--quick"] + argv
+        # quick (CI) mode also exports a sample Perfetto timeline of one
+        # cluster point (per-replica step spans + SLO counter tracks) as
+        # an inspectable artifact
+        if "--trace-out" not in argv:
+            argv += [
+                "--trace-out",
+                os.path.join("benchmarks", "out", "cluster_trace.json"),
+            ]
     report = bench_main(argv)
     best = report["max_rate_under_slo_best"]
     sieve, rest = best.get("sieve", 0.0), {

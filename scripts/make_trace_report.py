@@ -1,0 +1,125 @@
+"""Summarize a Perfetto/Chrome trace JSON into a per-span-name table.
+
+Renders the trace artifacts the benches and the serving engine emit
+(``--trace-out`` / ``repro.telemetry.write_trace``) into a terminal
+table: count, p50/p90/p99 and total duration per span name, plus the
+last value per counter track — the quick look before opening the full
+timeline in https://ui.perfetto.dev.
+
+    PYTHONPATH=src python scripts/make_trace_report.py benchmarks/out/cluster_trace.json
+    PYTHONPATH=src python scripts/make_trace_report.py trace.json --sort total --top 20
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def percentile(xs, q):
+    """Nearest-rank percentile of a sorted list (no numpy needed)."""
+    if not xs:
+        return float("nan")
+    i = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[i]
+
+
+def summarize(trace: dict) -> dict:
+    """{span name: stats} + {counter name: last value} from trace JSON."""
+    spans = defaultdict(list)  # name -> [dur_us, ...]
+    counters = {}  # name -> (last ts, last value)
+    for ev in trace.get("traceEvents", []):
+        ph = ev.get("ph")
+        if ph == "X":
+            spans[ev["name"]].append(float(ev.get("dur", 0.0)))
+        elif ph == "C":
+            args = ev.get("args", {})
+            if "value" in args:
+                ts = float(ev.get("ts", 0.0))
+                prev = counters.get(ev["name"])
+                if prev is None or ts >= prev[0]:
+                    counters[ev["name"]] = (ts, float(args["value"]))
+    stats = {}
+    for name, durs in spans.items():
+        durs.sort()
+        stats[name] = {
+            "count": len(durs),
+            "p50_us": percentile(durs, 50),
+            "p90_us": percentile(durs, 90),
+            "p99_us": percentile(durs, 99),
+            "max_us": durs[-1],
+            "total_us": sum(durs),
+        }
+    return {
+        "spans": stats,
+        "counters": {k: v for k, (_, v) in sorted(counters.items())},
+    }
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:9.3f}s "
+    if us >= 1e3:
+        return f"{us / 1e3:9.3f}ms"
+    return f"{us:9.1f}us"
+
+
+def render(summary: dict, sort: str, top: int) -> str:
+    lines = []
+    key = {"p50": "p50_us", "p99": "p99_us", "count": "count",
+           "total": "total_us"}[sort]
+    rows = sorted(
+        summary["spans"].items(), key=lambda kv: kv[1][key], reverse=True
+    )[:top]
+    if rows:
+        name_w = max(len("span"), max(len(n) for n, _ in rows))
+        lines.append(
+            f"{'span':<{name_w}}  {'count':>7}  {'p50':>11} {'p90':>11} "
+            f"{'p99':>11} {'max':>11} {'total':>11}"
+        )
+        for name, s in rows:
+            lines.append(
+                f"{name:<{name_w}}  {s['count']:>7}  "
+                f"{_fmt_us(s['p50_us'])} {_fmt_us(s['p90_us'])} "
+                f"{_fmt_us(s['p99_us'])} {_fmt_us(s['max_us'])} "
+                f"{_fmt_us(s['total_us'])}"
+            )
+    else:
+        lines.append("(no complete-span events in trace)")
+    if summary["counters"]:
+        lines.append("")
+        lines.append("counter tracks (last value):")
+        for name, val in summary["counters"].items():
+            lines.append(f"  {name}: {val:g}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Perfetto/Chrome trace JSON path")
+    ap.add_argument(
+        "--sort", default="p99", choices=("p50", "p99", "count", "total"),
+        help="span-table sort key (default: p99)",
+    )
+    ap.add_argument("--top", type=int, default=40, help="max span rows")
+    ap.add_argument(
+        "--json", action="store_true",
+        help="emit the summary as JSON instead of a table",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        trace = json.load(f)
+    summary = summarize(trace)
+    if args.json:
+        print(json.dumps(summary, indent=1))
+    else:
+        n_over = trace.get("otherData", {}).get("n_overflowed", 0)
+        print(f"# {args.trace}: {len(trace.get('traceEvents', []))} events"
+              + (f", {n_over} lost to ring wraparound" if n_over else ""))
+        print(render(summary, args.sort, args.top))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

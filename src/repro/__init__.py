@@ -12,6 +12,7 @@ jax, which the pure-numpy simulator layers don't need):
 * ``repro.models``  — jax/pallas model implementations
 * ``repro.serving`` — live continuous-batching engine
 * ``repro.kernels`` — Pallas TPU kernels
+* ``repro.telemetry`` — spans/metrics, Perfetto traces, measured cost loop
 """
 
 import importlib
@@ -29,6 +30,7 @@ _SUBPACKAGES = (
     "roofline",
     "serving",
     "sim",
+    "telemetry",
     "train",
 )
 

@@ -24,6 +24,8 @@ from repro.core.cost_model import SystemSpec
 from repro.core.scheduler import POLICIES
 from repro.sim.engine import BatchState, ServingSimulator
 from repro.sim.models import SimModelConfig
+from repro.telemetry import Telemetry
+from repro.telemetry import default as default_telemetry
 from .arrivals import RequestSpec
 
 
@@ -96,6 +98,7 @@ class Replica:
         policy: str,
         cfg: Optional[ReplicaConfig] = None,
         seed: int = 0,
+        telemetry: Optional[Telemetry] = None,
     ):
         if policy not in POLICIES:
             raise ValueError(
@@ -104,6 +107,11 @@ class Replica:
         self.replica_id = replica_id
         self.policy = policy
         self.cfg = cfg or ReplicaConfig()
+        # replica events land on their own track stamped with *simulated*
+        # time, so a whole cluster run renders as one Perfetto timeline
+        # (one process lane per replica)
+        self.tel = telemetry if telemetry is not None else default_telemetry()
+        self.track = f"replica-{replica_id}"
         self.sim = ServingSimulator(
             model, system, seed=seed + replica_id,
             dual_tail_tokens=self.cfg.dual_tail_tokens,
@@ -294,6 +302,22 @@ class Replica:
         self.n_steps += n_jump
         self.dropped_tokens += n_jump * step_dropped
         self.routed_tokens += n_jump * step_routed
+        if self.tel.enabled:
+            # one span per (possibly jump-collapsed) step event, plus load
+            # counter samples at the step boundary — all simulated time
+            name = "replica/step" if n_jump == 1 else "replica/step_jump"
+            self.tel.span_at(
+                name, now, span, track=self.track, value=float(n_jump)
+            )
+            self.tel.point(
+                "replica/queue_depth", len(self.queue),
+                t_s=now, track=self.track,
+            )
+            self.tel.point(
+                "replica/batch_occupancy",
+                len(decoding) / max(self.cfg.n_slots, 1),
+                t_s=now, track=self.track,
+            )
         return span
 
     def finish_step(self, now: float) -> List[ClusterRequest]:
@@ -302,6 +326,7 @@ class Replica:
         decoding, prefill_work, n_jump = self._step_plan
         self._step_plan, self.busy_until = None, None
 
+        tel = self.tel if self.tel.enabled else None
         for r, n in prefill_work:
             r.prefill_done += n
             if r.prefill_done >= r.spec.prompt_len:
@@ -311,6 +336,11 @@ class Replica:
                 _remove_identity(self._prefilling, r)
                 self._decoding.append(r)
                 self._pos_sum += r.prefill_done + 1
+                if tel is not None:
+                    tel.point(
+                        "slo/ttft", now - r.spec.arrival_time,
+                        t_s=now, track=self.track,
+                    )
         for r in decoding:
             r.generated += n_jump
         self._pos_sum += n_jump * len(decoding)
@@ -337,5 +367,20 @@ class Replica:
                 _remove_identity(self._decoding, r)
                 self._pos_sum -= r.prefill_done + r.generated
                 self.completed.append(r)
+                if tel is not None:
+                    # SLO time series at retirement (same definitions as
+                    # cluster.metrics: TPOT over the decode phase, E2E
+                    # from arrival)
+                    if r.spec.output_len > 1:
+                        tel.point(
+                            "slo/tpot",
+                            (now - r.first_token_time)
+                            / (r.spec.output_len - 1),
+                            t_s=now, track=self.track,
+                        )
+                    tel.point(
+                        "slo/e2e", now - r.spec.arrival_time,
+                        t_s=now, track=self.track,
+                    )
             self._active_cache = None
         return done

@@ -57,9 +57,16 @@ class ClusterSimulator:
         router_policy: str = "round_robin",
         replica_cfg: Optional[ReplicaConfig] = None,
         seed: int = 0,
+        telemetry=None,
     ):
+        # one Telemetry instance spans all replicas: each replica records
+        # onto its own ``replica-{i}`` track in simulated time, so a run
+        # exports as a single Perfetto timeline across the cluster
         self.replicas = [
-            Replica(i, model, system, policy, cfg=replica_cfg, seed=seed)
+            Replica(
+                i, model, system, policy,
+                cfg=replica_cfg, seed=seed, telemetry=telemetry,
+            )
             for i in range(n_replicas)
         ]
         self.router = Router(router_policy, self.replicas)

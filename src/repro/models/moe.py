@@ -477,6 +477,54 @@ def _tail_path(slab, wg, wu, wd, e_of_g, valid, backend, gather_w: bool):
     return ty * valid[..., None].astype(ty.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Named stage boundaries (telemetry probe hooks)
+# ---------------------------------------------------------------------------
+#
+# The dual-path decode step fuses its stages inside one compiled function,
+# so per-stage wall times cannot be read from the hot path directly.  These
+# public stage entry points expose the exact stage code — same backend
+# selection, same kernels — so ``repro.telemetry.probes.StageProbes`` can
+# execute each stage standalone ("timed decode-step cells") on the engine's
+# EMA refresh cadence and record *measured* stage durations as spans.
+
+
+def tail_stage(toks, wg, wu, wd, eids, valid, backend: Optional[str] = None):
+    """Tail-path stage boundary: per-row streaming expert SwiGLU.
+
+    ``toks`` is (S, d); each row streams its expert's three weight
+    matrices once (the PIM-GEMV proxy).  Pallas fused-GEMV kernel on TPU,
+    per-row gathered einsum twin elsewhere — the same selection
+    :func:`experts_ffn_dual` makes for its tail.
+    """
+    if backend is None:
+        backend = _dual_backend()
+    if backend == "pallas":
+        return _swiglu_gemv_pallas(toks, wg, wu, wd, eids, valid)
+    we_g, we_u, we_d = wg[eids], wu[eids], wd[eids]
+    g = jnp.einsum("td,tdf->tf", toks, we_g)
+    u = jnp.einsum("td,tdf->tf", toks, we_u)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tf,tfd->td", h, we_d)
+    if valid is not None:
+        y = y * valid.astype(y.dtype)[:, None]
+    return y
+
+
+def head_stage(slab, wg, wu, wd, sizes, backend: Optional[str] = None):
+    """Head-path stage boundary: grouped SwiGLU over capacity slabs.
+
+    ``slab`` is (G, C, d) with ``sizes`` live rows per group — the
+    compacted hot-expert slab the grouped path executes.  Fused Pallas
+    kernel on TPU, XLA einsum twin elsewhere.
+    """
+    if backend is None:
+        backend = _dual_backend()
+    if backend == "pallas":
+        return _swiglu_grouped_pallas(slab, wg, wu, wd, sizes)
+    return _swiglu_grouped_xla(slab, wg, wu, wd, sizes)
+
+
 def _dual_split(
     rows: jax.Array,
     cfg: MoEConfig,

@@ -39,8 +39,20 @@ from repro.core.scheduler import schedule
 from repro.core.scheduler_jax import SieveState, make_sieve_state
 from repro.models.model import LM
 from repro.sim.dram import PimGemvModel
+from repro.telemetry import StageProbes, Telemetry, TimingFeed
+from repro.telemetry import default as default_telemetry
 from .batching import BatchingConfig, SlotScheduler
 from .request import Request
+
+# cost-table feeding modes: "model" synthesizes PIM observations from the
+# DRAM-timing proxy (PimGemvModel); "measured" drives the table from
+# span-measured tail-stage probe durations (TimingFeed) on the refresh
+# cadence — no DRAM-proxy lookups anywhere on the refresh path.
+COST_SOURCES = ("model", "measured")
+
+# cap on stage probes per refresh boundary (distinct tail counts measured);
+# keeps the off-critical-path probe cost bounded per cadence
+_MAX_TAIL_PROBES = 8
 
 
 @dataclass
@@ -62,11 +74,11 @@ class EngineStats:
 
     @property
     def drop_rate(self) -> float:
-        return (
-            self.dropped_tokens / self.routed_tokens
-            if self.routed_tokens
-            else 0.0
-        )
+        # defined as 0.0 before any token has been routed — an engine that
+        # never generated a token must not divide by zero
+        if self.routed_tokens <= 0:
+            return 0.0
+        return self.dropped_tokens / self.routed_tokens
 
 
 class ServingEngine:
@@ -80,7 +92,13 @@ class ServingEngine:
         greedy: bool = True,
         seed: int = 0,
         sieve_refresh_every: int = 16,
+        telemetry: Optional[Telemetry] = None,
+        cost_source: str = "model",
     ):
+        if cost_source not in COST_SOURCES:
+            raise ValueError(
+                f"cost_source must be one of {COST_SOURCES}, got {cost_source!r}"
+            )
         self.lm = lm
         self.params = params
         self.cfg = batching
@@ -89,6 +107,10 @@ class ServingEngine:
         self.greedy = greedy
         self.rng = np.random.default_rng(seed)
         self.stats = EngineStats()
+        self.cost_source = cost_source
+        # telemetry: explicit instance wins; otherwise the process default
+        # (enabled iff REPRO_TELEMETRY is set — a shared no-op otherwise)
+        self.tel = telemetry if telemetry is not None else default_telemetry()
 
         self.cache = lm.init_cache(batching.n_slots, batching.max_seq)
         # The KV cache is donated on both compiled steps (argnum 2): the
@@ -114,6 +136,22 @@ class ServingEngine:
         self.sieve_refreshes: List[int] = []  # step indices of re-exports
         self._sieve_state: Optional[SieveState] = None
         self._sieve_version = -1
+        if cost_source == "measured" and not self.is_moe:
+            raise ValueError(
+                "cost_source='measured' feeds the MoE cost table; "
+                f"arch {arch.name!r} has no MoE layers"
+            )
+        # measured cost loop (built in the MoE branch below)
+        self._probes: Optional[StageProbes] = None
+        self._timing_feed: Optional[TimingFeed] = None
+        self._pending_tail_counts: set = set()
+        self._last_head_counts: List[int] = []
+        self._last_decode_batch = 0
+        self._last_kv_depth = 1
+        self._jit_cache_seen = 0  # jit entries already counted as misses
+        # per-layer metric names, built once (f-strings per step add up on
+        # a ~5ms decode step)
+        self._layer_metric_names: List[tuple] = []
         if self.is_moe:
             self.system = system or b200_pim_system()
             self.layer_spec = MoELayerSpec(
@@ -135,6 +173,26 @@ class ServingEngine:
             self.cost_table = CostTable(
                 fallback=fallback or self.cost_model.t_pim_gemv_roofline
             )
+            if cost_source == "measured":
+                # the span buffer is the measurement record: if the caller
+                # left telemetry disabled, the measured loop still needs a
+                # live instance of its own (private — nothing else reads it)
+                if not self.tel.enabled:
+                    self.tel = Telemetry(enabled=True)
+                attn = arch.attn
+                attn_dims = (
+                    (attn.n_heads, attn.n_kv_heads, attn.d_head)
+                    if attn.kind == "gqa"
+                    else None
+                )
+                self._probes = StageProbes(
+                    arch.d_model,
+                    arch.moe.d_expert,
+                    self.tel,
+                    attn_dims=attn_dims,
+                    seed=seed,
+                )
+                self._timing_feed = TimingFeed(self.cost_table, self.tel)
             if self.uses_cost_split:
                 # per-expert counts are bounded by the step's token count
                 # (n_slots decode tokens / max_seq prefill tokens); the jit
@@ -218,19 +276,49 @@ class ServingEngine:
                 "tail_tokens": moe.dual_tail_tokens,
                 "max_head": moe.dual_max_head,
             }
+        measured = self.cost_source == "measured"
+        tel = self.tel
         for li, counts in enumerate(counts_per_layer):
             part = schedule(
                 self.policy, counts, self.cost_model, self.cost_table, **kw
             )
-            # observe "PIM" execution times for the chosen set (from the
-            # DRAM-timing model; on real hardware these are measured)
-            if self._pim is not None:
+            if measured:
+                # queue the tail set's token counts for the refresh-cadence
+                # probe pass — the DRAM proxy is never consulted here
+                for e in part.pim_experts:
+                    n = int(counts[e])
+                    if n > 0:
+                        self._pending_tail_counts.add(n)
+                self._last_head_counts = [
+                    int(counts[e]) for e in part.gpu_experts if counts[e] > 0
+                ]
+            elif self._pim is not None:
+                # observe "PIM" execution times for the chosen set (from
+                # the DRAM-timing model — the synthetic-oracle fallback)
                 for e in part.pim_experts:
                     n = int(counts[e])
                     if n > 0:
                         self.cost_table.update(
                             n, self._pim.expert_time(self.layer_spec, n)
                         )
+            if tel.enabled:
+                while len(self._layer_metric_names) <= li:
+                    j = len(self._layer_metric_names)
+                    self._layer_metric_names.append(
+                        (f"expert_tokens/layer{j}", f"head_mass/layer{j}")
+                    )
+                hist_name, mass_name = self._layer_metric_names[li]
+                routed = counts[counts > 0]
+                total = int(routed.sum())
+                tel.observe(hist_name, routed)
+                if total > 0:
+                    # bimodality gauge: fraction of routed mass on the
+                    # chosen head (grouped-GEMM) set at this step's split
+                    gpu = np.asarray(part.gpu_experts, dtype=np.int64)
+                    head_mass = (
+                        float(counts[gpu].sum()) / total if gpu.size else 0.0
+                    )
+                    tel.gauge(mass_name, head_mass)
             self.stats.partitions.append(
                 {
                     "step": self.stats.steps,
@@ -241,10 +329,42 @@ class ServingEngine:
                 }
             )
 
+    def _run_probes(self) -> None:
+        """Refresh-cadence stage probes: measure the queued tail counts
+        (the CostTable cells the split decides on) plus one head / dispatch
+        / attention cell shaped like the last decode batch.  Off the
+        critical path by construction — runs only at refresh boundaries."""
+        moe = self.lm.arch.moe
+        tails = sorted(self._pending_tail_counts)
+        self._pending_tail_counts.clear()
+        if len(tails) > _MAX_TAIL_PROBES:
+            # sample evenly across the sorted counts so the probe budget
+            # still covers the whole observed range
+            idx = np.unique(
+                np.linspace(0, len(tails) - 1, _MAX_TAIL_PROBES)
+                .round()
+                .astype(int)
+            )
+            tails = [tails[i] for i in idx]
+        for n in tails:
+            self._probes.tail(n)
+        if self._last_head_counts:
+            self._probes.head(self._last_head_counts)
+            self._last_head_counts = []
+        if self._last_decode_batch:
+            self._probes.dispatch(
+                self._last_decode_batch, moe.n_experts, moe.top_k
+            )
+            self._probes.attention(self._last_decode_batch, self._last_kv_depth)
+
     def step(self) -> List[Request]:
         """One engine step: admit -> prefill work -> decode -> retire."""
         t0 = time.perf_counter()
-        self.sched.admit()
+        tel = self.tel
+        step_span = tel.span("engine/step", value=float(self.stats.steps))
+        step_span.__enter__()
+        with tel.span("engine/admit"):
+            self.sched.admit()
 
         # ---- prefill ----
         for req in self.sched.prefill_work():
@@ -256,15 +376,17 @@ class ServingEngine:
                 P = prompt.shape[1]
                 pos = jnp.broadcast_to(jnp.arange(P), (1, P))
                 batch["mrope_positions"] = jnp.stack([pos, pos, pos])
-            logits, self.cache, p_aux = self._prefill_chunk(
-                self.params, batch, self.cache, req.slot
-            )
+            with tel.span("engine/prefill", value=float(len(req.prompt))):
+                logits, self.cache, p_aux = self._prefill_chunk(
+                    self.params, batch, self.cache, req.slot
+                )
+                logits = np.asarray(logits)
             if self.is_moe:
                 self.stats.dropped_tokens += int(p_aux.dropped)
                 self.stats.routed_tokens += int(np.asarray(p_aux.counts).sum())
             req.prefill_done = len(req.prompt)
             self.stats.prefill_tokens += len(req.prompt)
-            tok = self._sample(np.asarray(logits)[:, -1])
+            tok = self._sample(logits[:, -1])
             req.generated.append(int(tok[0]))
             if req.first_token_time is None:
                 req.first_token_time = time.perf_counter()
@@ -289,28 +411,57 @@ class ServingEngine:
             if self.lm.arch.family == "vlm":
                 mp = jnp.asarray(position)[None, :, None]
                 db["mrope_positions"] = jnp.concatenate([mp, mp, mp], axis=0)
-            logits, self.cache, aux = self._decode(self.params, db, self.cache)
-            toks = self._sample(np.asarray(logits)[:, 0])
+            with tel.span("engine/decode", value=float(len(batch_reqs))):
+                logits, self.cache, aux = self._decode(self.params, db, self.cache)
+                logits = np.asarray(logits)
+            toks = self._sample(logits[:, 0])
             for r in batch_reqs:
                 r.generated.append(int(toks[r.slot]))
                 self.stats.decode_tokens += 1
             if self.is_moe:
                 self.stats.dropped_tokens += int(aux.dropped)
                 self.stats.routed_tokens += int(np.asarray(aux.counts).sum())
+            self._last_decode_batch = len(batch_reqs)
+            self._last_kv_depth = int(position.max()) + 1
             if self.is_moe and aux.counts.shape[0] > 0:
-                self._run_sieve(np.asarray(aux.counts))
+                with tel.span("engine/sieve_host"):
+                    self._run_sieve(np.asarray(aux.counts))
 
-        # cost-table refresh cadence: the in-graph split only ever changes
-        # at these boundaries (stale-table semantics between them)
-        if (
-            self.uses_cost_split
-            and (self.stats.steps + 1) % self.sieve_refresh_every == 0
-        ):
-            self._refresh_sieve_state(step=self.stats.steps + 1)
+        # measured cost loop + cost-table refresh cadence: the in-graph
+        # split only ever changes at these boundaries (stale-table
+        # semantics between them)
+        boundary = (self.stats.steps + 1) % self.sieve_refresh_every == 0
+        if boundary and self._probes is not None:
+            with tel.span("engine/probe"):
+                self._run_probes()
+                self._timing_feed.poll()
+        if boundary and self.uses_cost_split:
+            with tel.span("engine/sieve_refresh"):
+                self._refresh_sieve_state(step=self.stats.steps + 1)
 
         done = self.sched.retire(time.perf_counter())
         self.stats.steps += 1
         self.stats.wall_time += time.perf_counter() - t0
+        if tel.enabled:
+            # KV occupancy: fraction of the slot pool's cells holding live
+            # KV entries (sum of per-request write cursors / total cells)
+            occ = sum(r.position for r in self.sched.active) / float(
+                self.cfg.n_slots * self.cfg.max_seq
+            )
+            tel.gauge("engine/kv_occupancy", occ)
+            tel.gauge(
+                "engine/batch_occupancy",
+                len(batch_reqs) / max(self.cfg.n_slots, 1),
+            )
+            tel.gauge("engine/drop_rate", self.stats.drop_rate)
+            # jit-cache growth since last step = compile misses this step
+            n_entries = self._decode._cache_size() + self._prefill_chunk._cache_size()
+            if n_entries > self._jit_cache_seen:
+                tel.counter(
+                    "engine/jit_cache_miss", n_entries - self._jit_cache_seen
+                )
+                self._jit_cache_seen = n_entries
+        step_span.__exit__(None, None, None)
         return done
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:

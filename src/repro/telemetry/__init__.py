@@ -1,0 +1,17 @@
+"""Runtime telemetry: spans, metrics, traces, and the measured cost loop.
+
+* :class:`Telemetry` — ring-buffered spans + counters/gauges/histograms;
+  allocation-free no-op when disabled (the default posture).
+* :func:`write_trace` / :func:`trace_events` — Chrome trace-event /
+  Perfetto JSON export (loads in https://ui.perfetto.dev).
+* :meth:`Telemetry.snapshot` — Prometheus-style text snapshot.
+* :class:`TimingFeed` — aggregates measured stage spans into the EMA
+  :class:`repro.core.cost_table.CostTable` (``cost_source="measured"``).
+* :class:`StageProbes` — timed decode-stage cells (dispatch / head GMM /
+  tail GEMV / attention) run off the critical path.
+"""
+
+from .core import NULL_SPAN, Telemetry, default  # noqa: F401
+from .export import trace_events, write_trace  # noqa: F401
+from .probes import StageProbes  # noqa: F401
+from .timing_feed import TimingFeed  # noqa: F401

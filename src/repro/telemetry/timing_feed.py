@@ -1,0 +1,67 @@
+"""TimingFeed: span-measured stage durations -> the EMA cost table.
+
+Closes the cost loop (ROADMAP carry-over from PR 4/5): instead of the
+DRAM-model proxy (``repro.sim.dram.PimGemvModel``) synthesizing "observed"
+PIM times, the serving engine *measures* its tail-stage executions via
+telemetry spans (``stage/tail_gemv`` probes carrying the token count as
+span value) and this feed aggregates them into
+:meth:`repro.core.cost_table.CostTable.update_batch` on the engine's EMA
+refresh cadence.  The next ``SieveState`` export then drives the in-graph
+``dual_path_cost`` split from *measured* timings — the model-proxy path
+stays available as the oracle/fallback (``cost_source="model"``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from .core import Telemetry
+
+TAIL_SPAN = "stage/tail_gemv"
+
+
+class TimingFeed:
+    """Aggregates measured stage spans into a :class:`CostTable`.
+
+    Polls the telemetry ring with a monotone cursor; each :meth:`poll`
+    groups the new ``span_name`` spans by their token-count value, means
+    the durations per count (several probes of one count within a window
+    collapse into one EMA step, mirroring the engine's deduped
+    observations), and absorbs the batch with ``update_batch``.  Events
+    lost to ring wraparound between polls are simply skipped — the EMA is
+    robust to missing windows.
+    """
+
+    def __init__(
+        self,
+        table,
+        telemetry: Telemetry,
+        span_name: str = TAIL_SPAN,
+    ):
+        self.table = table
+        self.tel = telemetry
+        self.span_name = span_name
+        self._cursor = 0
+        self.n_polls = 0
+        self.n_fed = 0  # distinct (count -> time) entries absorbed
+
+    def poll(self) -> Dict[int, float]:
+        """Absorb new measured spans; returns {count: mean seconds} fed."""
+        events, self._cursor = self.tel.events_since(self._cursor)
+        by_count: Dict[int, list] = {}
+        for e in events:
+            if e["kind"] != "span" or e["name"] != self.span_name:
+                continue
+            v = e["value"]
+            if math.isnan(v) or v < 1:
+                continue
+            by_count.setdefault(int(v), []).append(e["dur_ns"] * 1e-9)
+        if not by_count:
+            return {}
+        counts = sorted(by_count)
+        times = [sum(by_count[c]) / len(by_count[c]) for c in counts]
+        self.table.update_batch(counts, times, assume_unique=True)
+        self.n_polls += 1
+        self.n_fed += len(counts)
+        return dict(zip(counts, times))

@@ -49,6 +49,18 @@ class TestSlotScheduler:
         assert len(s.admit()) == 1
 
 
+class TestEngineStats:
+    def test_drop_rate_zero_before_any_routed_token(self):
+        """An engine that never routed a token must report 0.0, not divide
+        by zero (regression: drop_rate on a fresh/dense-model engine)."""
+        from repro.serving.engine import EngineStats
+
+        assert EngineStats().drop_rate == 0.0
+        assert EngineStats(dropped_tokens=3).drop_rate == 0.0
+        s = EngineStats(dropped_tokens=1, routed_tokens=4)
+        assert s.drop_rate == 0.25
+
+
 class TestEngine:
     def test_all_requests_complete(self):
         eng = make_engine()
