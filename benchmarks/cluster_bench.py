@@ -86,6 +86,127 @@ def run_point(cs, policy, router, n_replicas, rate, horizon, lengths, slo, seed)
     return rep
 
 
+def run_chaos_suite(args) -> dict:
+    """``--chaos`` mode: run the named fault scenario(s) end-to-end and
+    report time-to-detect / time-to-recover / goodput dip per scenario.
+    With ``--check`` the recovery invariants are gated (nonzero exit on
+    violation) — this is the CI chaos-smoke entry point:
+
+    * every cluster scenario: no admitted request lost
+      (completed + dropped == submitted), the fault is detected within
+      ``0.15 x horizon``, and post-clear goodput recovers to >= 90% of the
+      fault-free baseline on the identical arrival sequence;
+    * every engine scenario: the measured engine clamps to the GPU-only
+      split within one refresh cadence of the fault, does so with zero
+      decode jit-cache misses (no recompile), and restores the measured
+      split after the fault clears.
+    """
+    from repro.faults import (
+        CLUSTER_SCENARIOS,
+        ENGINE_SCENARIOS,
+        SCENARIOS,
+        run_cluster_chaos,
+        run_engine_chaos,
+    )
+    from repro.telemetry import Telemetry, write_trace
+
+    scenarios = list(SCENARIOS) if args.chaos == "all" else [args.chaos]
+    horizon = args.horizon or (4.0 if args.quick else 8.0)
+    n_steps = 40 if args.quick else 80
+    refresh = 4
+    t0 = time.perf_counter()
+    by_scenario = {}
+    failures = []
+    traced = False
+    for sc in scenarios:
+        if sc in CLUSTER_SCENARIOS:
+            tel = None
+            if args.trace_out and not traced:
+                tel = Telemetry(enabled=True, capacity=1 << 17)
+            r = run_cluster_chaos(
+                sc, model=args.model, horizon=horizon, seed=args.seed,
+                slo=SLO(ttft=args.slo_ttft, tpot=args.slo_tpot),
+                telemetry=tel,
+            )
+            if tel is not None:
+                path = write_trace(tel, args.trace_out)
+                print(
+                    f"# chaos trace: {path} ({tel.n_events} events, {sc})",
+                    file=sys.stderr,
+                )
+                traced = True
+            print(
+                f"{sc:20s} ttd={r['time_to_detect']} ttc={r['time_to_clear']} "
+                f"dip={r['goodput_dip']} recovery={r['recovery_ratio']} "
+                f"lost={r['n_lost']} dropped={r['n_dropped']}",
+                file=sys.stderr,
+            )
+            if r["n_lost"] != 0:
+                failures.append(f"{sc}: {r['n_lost']} requests lost")
+            if r["time_to_detect"] is None or r["time_to_detect"] > 0.15 * horizon:
+                failures.append(
+                    f"{sc}: detection too slow ({r['time_to_detect']})"
+                )
+            if r["recovery_ratio"] is not None and r["recovery_ratio"] < 0.9:
+                failures.append(
+                    f"{sc}: post-clear goodput {r['recovery_ratio']:.2f} "
+                    f"< 0.9x baseline"
+                )
+        else:
+            assert sc in ENGINE_SCENARIOS
+            r = run_engine_chaos(
+                sc, n_steps=n_steps, seed=args.seed, refresh=refresh
+            )
+            r.pop("tokens", None)  # bulky; pinned by tests, not the report
+            print(
+                f"{sc:20s} fault_t={r['fault_t']:.0f} "
+                f"gpu_only_step={r['gpu_only_step']} "
+                f"recover_step={r['recover_step']} "
+                f"cache_misses={r['cache_misses_after_fault']} "
+                f"restored={r['restored']}",
+                file=sys.stderr,
+            )
+            if r["gpu_only_step"] is None or (
+                r["gpu_only_step"] - r["fault_t"] > refresh
+            ):
+                failures.append(
+                    f"{sc}: GPU-only fallback late ({r['gpu_only_step']})"
+                )
+            if r["cache_misses_after_fault"] != 0:
+                failures.append(
+                    f"{sc}: {r['cache_misses_after_fault']} decode recompiles "
+                    f"during fallback"
+                )
+            if not r["restored"]:
+                failures.append(f"{sc}: measured split not restored")
+        by_scenario[sc] = r
+
+    report = {
+        "mode": "chaos",
+        "model": args.model,
+        "horizon": horizon,
+        "engine_steps": n_steps,
+        "seed": args.seed,
+        "wall_time_s": time.perf_counter() - t0,
+        "scenarios": by_scenario,
+        "failures": failures,
+    }
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out} ({report['wall_time_s']:.1f}s)", file=sys.stderr)
+    if failures:
+        for msg in failures:
+            print(f"CHAOS FAIL: {msg}", file=sys.stderr)
+        if args.check:
+            sys.exit(1)
+    else:
+        print("chaos: all recovery invariants hold", file=sys.stderr)
+    return report
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="qwen3-30b", choices=sorted(SIM_MODELS))
@@ -100,9 +221,27 @@ def main(argv=None) -> dict:
         help="per-replica arrival rates (req/s); scaled by replica count",
     )
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=os.path.join("benchmarks", "out", "cluster_bench.json"))
+    ap.add_argument(
+        "--chaos", default=None, metavar="SCENARIO",
+        help="run the chaos suite instead of the rate sweep: a scenario "
+        "name (pim-brownout, replica-crash, link-flap, straggler, "
+        "probe-poison, pim-brownout-engine) or 'all'",
+    )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="with --chaos: exit nonzero if any recovery invariant fails",
+    )
+    ap.add_argument("--out", default=None)
     add_trace_arg(ap)
     args = ap.parse_args(argv)
+
+    if args.out is None:
+        args.out = os.path.join(
+            "benchmarks", "out",
+            "chaos.json" if args.chaos else "cluster_bench.json",
+        )
+    if args.chaos:
+        return run_chaos_suite(args)
 
     if args.quick:
         horizon = args.horizon or 3.0
@@ -156,10 +295,16 @@ def main(argv=None) -> dict:
                         )
                         continue
                     by_rate[rate] = rep
+
+                    def _fmt(x, scale, unit):
+                        # percentiles are explicit None when the sample
+                        # set is empty (e.g. every completion single-token)
+                        return "n/a" if x is None else f"{x * scale:.3f}{unit}"
+
                     print(
                         f"{policy:9s} {router:12s} x{n_rep} rate={rate:7.1f} "
-                        f"ttft_p99={rep['ttft']['p99']:.3f}s "
-                        f"tpot_p99={rep['tpot']['p99'] * 1e3:.1f}ms "
+                        f"ttft_p99={_fmt(rep['ttft']['p99'], 1, 's')} "
+                        f"tpot_p99={_fmt(rep['tpot']['p99'], 1e3, 'ms')} "
                         f"goodput={rep.get('goodput_rps', 0.0):.1f}rps",
                         file=sys.stderr,
                     )
@@ -170,7 +315,9 @@ def main(argv=None) -> dict:
                 # shows up in TTFT)
                 full = [
                     r for r, rep in by_rate.items()
-                    if rep["tpot"]["p99"] <= slo.tpot
+                    if rep["tpot"]["p99"] is not None
+                    and rep["ttft"]["p99"] is not None
+                    and rep["tpot"]["p99"] <= slo.tpot
                     and rep["ttft"]["p99"] <= slo.ttft
                 ]
                 knees_full.setdefault(policy, {})[f"{router}-x{n_rep}"] = (

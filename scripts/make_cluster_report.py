@@ -30,6 +30,26 @@ def main() -> None:
                 os.path.join("benchmarks", "out", "cluster_trace.json"),
             ]
     report = bench_main(argv)
+    # Degenerate-point rendering: a sweep point where every request was
+    # dropped/shed still serializes (explicit None percentiles + the
+    # dropped_all flag) — surface those points instead of crashing on them.
+    degenerate = [
+        f"{r['policy']}/{r['router']}-x{r['n_replicas']}@{r['arrival_rate']:.0f}"
+        for r in report["results"]
+        if r.get("dropped_all")
+    ]
+    n_dropped = sum(r.get("n_dropped", 0) for r in report["results"])
+    if degenerate:
+        print(
+            f"note: {len(degenerate)} sweep point(s) dropped every request: "
+            + ", ".join(degenerate),
+            file=sys.stderr,
+        )
+    elif n_dropped:
+        print(
+            f"note: {n_dropped} request(s) dropped across the sweep",
+            file=sys.stderr,
+        )
     best = report["max_rate_under_slo_best"]
     sieve, rest = best.get("sieve", 0.0), {
         k: v for k, v in best.items() if k != "sieve"

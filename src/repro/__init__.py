@@ -24,6 +24,7 @@ _SUBPACKAGES = (
     "configs",
     "core",
     "data",
+    "faults",
     "kernels",
     "launch",
     "models",

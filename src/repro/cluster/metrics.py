@@ -35,9 +35,14 @@ class SLO:
     e2e: Optional[float] = None
 
 
-def percentiles(xs: Sequence[float], qs=(50, 90, 99)) -> Dict[str, float]:
+def percentiles(
+    xs: Sequence[float], qs=(50, 90, 99)
+) -> Dict[str, Optional[float]]:
+    """Percentile dict; empty input yields explicit ``None`` per quantile
+    (never bare ``nan`` — a chaos run where everything was dropped must
+    produce a renderable, JSON-clean report)."""
     if len(xs) == 0:
-        return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": None for q in qs}
     arr = np.asarray(xs, dtype=float)
     return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
 
@@ -78,16 +83,30 @@ def summarize(
     slo: Optional[SLO] = None,
     replicas: Optional[List[Replica]] = None,
     end_time: Optional[float] = None,
+    dropped: Optional[List[ClusterRequest]] = None,
 ) -> Dict:
-    """Aggregate a finished cluster run into the standard report dict."""
-    out: Dict = {"n_completed": len(completed), "horizon": horizon}
-    if not completed:
-        return out
+    """Aggregate a finished cluster run into the standard report dict.
+
+    Total under degenerate inputs: a zero-completion run (every request
+    dropped or shed under chaos) still produces every block — percentile
+    dicts hold explicit ``None``, rates are explicit ``0.0``, and
+    ``dropped_all`` flags the condition — never a bare ``nan`` or a
+    divide-by-zero.
+    """
+    dropped = dropped or []
+    out: Dict = {
+        "n_completed": len(completed),
+        "n_dropped": len(dropped),
+        "dropped_all": bool(dropped) and not completed,
+        "horizon": horizon,
+    }
 
     ttfts = [request_ttft(r) for r in completed]
     tpots = [t for t in (request_tpot(r) for r in completed) if t is not None]
     e2es = [request_e2e(r) for r in completed]
-    qdelays = [request_queue_delay(r) for r in completed]
+    qdelays = [
+        request_queue_delay(r) for r in completed if r.admit_time is not None
+    ]
 
     out["ttft"] = percentiles(ttfts)
     out["tpot"] = percentiles(tpots)
@@ -96,11 +115,13 @@ def summarize(
     # Throughput over the *served* span (arrivals + drain): under overload
     # every request still completes eventually, so dividing by the arrival
     # horizon would just echo the offered rate, not measured capacity.
-    span = end_time or max(r.finish_time for r in completed)
+    span = max((r.finish_time for r in completed), default=0.0)
+    if end_time:
+        span = max(span, end_time)
     span = max(span, horizon)
-    out["throughput_rps"] = len(completed) / span
+    out["throughput_rps"] = len(completed) / span if span > 0 else 0.0
     out["output_tokens_per_s"] = (
-        sum(r.spec.output_len for r in completed) / span
+        sum(r.spec.output_len for r in completed) / span if span > 0 else 0.0
     )
 
     if slo is not None:
@@ -108,8 +129,10 @@ def summarize(
         # relative to the offered-traffic window (backlog completions blow
         # TTFT and fall out of `good` on their own)
         good = [r for r in completed if meets_slo(r, slo)]
-        out["goodput_rps"] = len(good) / horizon
-        out["slo_attainment"] = len(good) / len(completed)
+        out["goodput_rps"] = len(good) / horizon if horizon > 0 else 0.0
+        out["slo_attainment"] = (
+            len(good) / len(completed) if completed else 0.0
+        )
 
     if replicas is not None:
         out["replica_util"] = {
@@ -141,6 +164,8 @@ def max_rate_under_slo(
     ok = [
         rate
         for rate, res in results_by_rate.items()
-        if metric in res and res[metric][q] <= target
+        if metric in res
+        and res[metric][q] is not None  # zero-completion runs never qualify
+        and res[metric][q] <= target
     ]
     return max(ok) if ok else 0.0

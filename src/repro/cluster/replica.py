@@ -42,6 +42,9 @@ class ClusterRequest:
 
     prefill_done: int = 0
     generated: int = 0
+    # times this request was re-dispatched after a replica crash (its KV
+    # and generated tokens are lost with the replica, so progress resets)
+    retries: int = 0
 
     @property
     def done(self) -> bool:
@@ -143,6 +146,12 @@ class Replica:
         self.routed_tokens = 0.0
         self._step_cache: Dict[Tuple[int, int, int], Tuple[float, float, float]] = {}
 
+        # ---- fault-injection state (repro.faults) ----
+        self.failed = False  # crashed: no steps run until recover()
+        self.straggle = 1.0  # multiplier on every step duration
+        self.last_step_dur = 0.0  # single-step duration of the last step
+        self.n_crashes = 0
+
     # ---- load signals used by the router --------------------------------
     @property
     def active(self) -> List[ClusterRequest]:
@@ -172,7 +181,84 @@ class Replica:
 
     @property
     def has_work(self) -> bool:
+        if self.failed:
+            return False  # a crashed replica runs nothing until recovery
         return bool(self.queue) or bool(self.active)
+
+    # ---- fault injection (repro.faults) ---------------------------------
+    def set_pim_degrade(self, factor: float) -> None:
+        """Brown out (or restore) this replica's PIM stack.  The memoized
+        step-duration cache is keyed on batch shape only, so it must be
+        dropped — cached durations embody the previous health state."""
+        if factor == self.sim.pim_degrade:
+            return
+        self.sim.set_pim_degrade(factor)
+        self._step_cache.clear()
+
+    def set_link_degrade(self, factor: float) -> None:
+        """Degrade (or restore) this replica's interconnect links."""
+        if factor == self.sim.link_degrade:
+            return
+        self.sim.set_link_degrade(factor)
+        self._step_cache.clear()
+
+    def set_straggle(self, factor: float) -> None:
+        """Uniformly stretch step durations (host-side interference /
+        thermal throttling).  Applied outside the step-duration cache, so
+        flipping it never poisons cached healthy timings."""
+        if factor <= 0:
+            raise ValueError(f"straggle factor must be > 0, got {factor}")
+        self.straggle = float(factor)
+
+    def fail(self, now: float) -> List[ClusterRequest]:
+        """Crash: abort the in-flight step, lose all KV/progress, and hand
+        every resident request back for re-dispatch.
+
+        Returned requests have their progress reset (prefill, generated
+        tokens, and admit/first-token stamps — the KV cache died with the
+        replica); the caller (cluster simulator) re-enqueues them through
+        the router with bounded retries.
+        """
+        if self.busy_until is not None:
+            # the aborted remainder never ran — refund it from busy_time
+            self.busy_time -= self.busy_until - now
+            self.busy_until = None
+            self._step_plan = None
+        orphans = list(self.active) + list(self.queue)
+        for r in orphans:
+            r.prefill_done = 0
+            r.generated = 0
+            r.admit_time = None
+            r.first_token_time = None
+            r.replica_id = None
+        self.queue = []
+        self.slots = [None] * self.cfg.n_slots
+        self._active_cache = None
+        self._prefilling = []
+        self._decoding = []
+        self._pos_sum = 0
+        self.failed = True
+        self.n_crashes += 1
+        if self.tel.enabled:
+            self.tel.point("replica/failed", 1.0, t_s=now, track=self.track)
+        return orphans
+
+    def take_queue(self) -> List[ClusterRequest]:
+        """Drain queued requests (used at crash-*detection* time: requests
+        routed to a dead replica during the detection window are rescued
+        and re-dispatched; their progress is zero so nothing resets)."""
+        orphans, self.queue = self.queue, []
+        for r in orphans:
+            r.replica_id = None
+        return orphans
+
+    def recover(self, now: float) -> None:
+        """Clear the crashed flag; the replica rejoins with empty slots
+        and its warmed cost table / step cache intact (a restart on the
+        same hardware)."""
+        self.failed = False
+        if self.tel.enabled:
+            self.tel.point("replica/failed", 0.0, t_s=now, track=self.track)
 
     # ---- lifecycle ------------------------------------------------------
     def reset_requests(self) -> None:
@@ -191,6 +277,13 @@ class Replica:
         self.n_steps = 0
         self.dropped_tokens = 0.0
         self.routed_tokens = 0.0
+        # fault state is per-run: a fresh run starts healthy
+        self.failed = False
+        self.straggle = 1.0
+        self.last_step_dur = 0.0
+        self.n_crashes = 0
+        self.set_pim_degrade(1.0)
+        self.set_link_degrade(1.0)
 
     def submit(self, req: ClusterRequest, now: float) -> None:
         req.dispatch_time = now
@@ -280,6 +373,9 @@ class Replica:
             prefill_tokens=sum(n for _, n in prefill_work),
         )
         dur, step_dropped, step_routed = self._step_time(state)
+        if self.straggle != 1.0:
+            dur = dur * self.straggle
+        self.last_step_dur = dur
         n_jump = 1
         if not prefill_work and decoding and self.cfg.max_step_jump != 1:
             j = min(r.spec.output_len - r.generated for r in decoding)

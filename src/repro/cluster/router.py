@@ -1,8 +1,8 @@
-"""Multi-replica dispatch policies.
+"""Multi-replica dispatch policies + health-aware admission control.
 
 The router is the cluster's only global decision point: every arriving
-request is assigned to exactly one replica at arrival time (no migration).
-Policies:
+request is assigned to exactly one replica at arrival time (no
+migration).  Policies:
 
 * ``round_robin`` — load-oblivious baseline;
 * ``jsq`` — join-shortest-queue by outstanding request count, the classic
@@ -11,11 +11,20 @@ Policies:
   tokens; a better signal than request count when request lengths are
   heavy-tailed (a single 8k-prompt request occupies as much KV as dozens
   of short ones).
+
+Health integration (repro.faults): replicas the health layer has flagged
+FAILED are **excluded** (never chosen); DEGRADED replicas are
+**deprioritized** (chosen only when every healthy replica is excluded).
+With ``shed_delay`` set, the router sheds an arriving request instead of
+dispatching it when the chosen replica's estimated queueing delay —
+outstanding requests x its observed mean step duration — exceeds the
+bound: SLO-aware admission control, so a capacity loss degrades into
+explicit drops instead of unbounded queueing that blows every SLO.
 """
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Set
 
 from .replica import ClusterRequest, Replica
 
@@ -23,28 +32,87 @@ ROUTER_POLICIES = ("round_robin", "jsq", "least_kv")
 
 
 class Router:
-    def __init__(self, policy: str, replicas: List[Replica]):
+    def __init__(
+        self,
+        policy: str,
+        replicas: List[Replica],
+        shed_delay: Optional[float] = None,
+    ):
         if policy not in ROUTER_POLICIES:
             raise ValueError(
                 f"unknown router policy {policy!r}; expected one of {ROUTER_POLICIES}"
             )
         self.policy = policy
         self.replicas = replicas
+        self.shed_delay = shed_delay
         self._rr_next = 0
         self.dispatched = 0
+        self.n_shed = 0
+        # replica ids the health layer has taken out of rotation
+        self.excluded: Set[int] = set()
+        # replica ids to avoid while any non-deprioritized choice exists
+        self.deprioritized: Set[int] = set()
 
-    def choose(self) -> Replica:
+    # ---- health hooks ---------------------------------------------------
+    def exclude(self, replica_id: int) -> None:
+        self.excluded.add(replica_id)
+
+    def include(self, replica_id: int) -> None:
+        self.excluded.discard(replica_id)
+        self.deprioritized.discard(replica_id)
+
+    def deprioritize(self, replica_id: int) -> None:
+        self.deprioritized.add(replica_id)
+
+    def reset_health(self) -> None:
+        self.excluded.clear()
+        self.deprioritized.clear()
+        self.n_shed = 0
+
+    # ---- choice ---------------------------------------------------------
+    def _pick(self, pool: List[Replica]) -> Replica:
         if self.policy == "round_robin":
-            r = self.replicas[self._rr_next % len(self.replicas)]
+            r = pool[self._rr_next % len(pool)]
             self._rr_next += 1
             return r
         if self.policy == "jsq":
-            return min(self.replicas, key=lambda r: (r.queue_len, r.replica_id))
+            return min(pool, key=lambda r: (r.queue_len, r.replica_id))
         # least_kv
-        return min(self.replicas, key=lambda r: (r.kv_load, r.replica_id))
+        return min(pool, key=lambda r: (r.kv_load, r.replica_id))
 
-    def dispatch(self, req: ClusterRequest, now: float) -> Replica:
+    def choose(self) -> Optional[Replica]:
+        """The dispatch target, or None when every replica is excluded."""
+        pool = [
+            r for r in self.replicas if r.replica_id not in self.excluded
+        ]
+        if not pool:
+            return None
+        preferred = [
+            r for r in pool if r.replica_id not in self.deprioritized
+        ]
+        return self._pick(preferred if preferred else pool)
+
+    def _estimated_delay(self, r: Replica) -> float:
+        """Coarse queueing-delay estimate: outstanding requests times the
+        replica's observed mean step duration.  Deliberately simple — the
+        admission decision needs an order of magnitude, not a forecast."""
+        if r.n_steps == 0:
+            return 0.0  # no observations yet: admit optimistically
+        return r.queue_len * (r.busy_time / r.n_steps)
+
+    def dispatch(self, req: ClusterRequest, now: float) -> Optional[Replica]:
+        """Route one request; returns the target replica, or None when the
+        request was shed (admission control) or no replica is available."""
         r = self.choose()
+        if r is None:
+            self.n_shed += 1
+            return None
+        if (
+            self.shed_delay is not None
+            and self._estimated_delay(r) > self.shed_delay
+        ):
+            self.n_shed += 1
+            return None
         r.submit(req, now)
         self.dispatched += 1
         return r

@@ -1,22 +1,52 @@
 """Discrete-event cluster simulator: arrivals → router → replicas.
 
-The event loop advances a global clock over two event kinds: request
-arrivals (from the open-loop process) and replica step completions.  A
-replica runs engine steps back-to-back while it has work; each step's
-duration comes from the per-step cost model given the batch it actually
-contains at step start — the standard trace-driven serving-simulator
-structure (NeuPIMs lineage).
+The event loop advances a global clock over three event kinds: request
+arrivals (from the open-loop process), replica step completions, and —
+when a :class:`repro.faults.FaultInjector` is attached — scripted fault
+actions plus their (delayed) detections.  A replica runs engine steps
+back-to-back while it has work; each step's duration comes from the
+per-step cost model given the batch it actually contains at step start —
+the standard trace-driven serving-simulator structure (NeuPIMs lineage).
 
-After the last arrival the cluster drains, so every submitted request
-completes (request conservation is asserted and tested).
+Fault semantics (repro.faults):
+
+* **replica crash** — the replica aborts its in-flight step and loses all
+  KV/progress immediately; the control plane only notices after
+  ``detect_latency`` (a heartbeat-timeout model), at which point the
+  router excludes the replica and every orphaned request (in-flight at
+  the crash, or routed to the corpse during the detection window) is
+  re-dispatched with its progress reset, up to ``max_retries`` times;
+  beyond that it is counted dropped.  On the fault's clear the replica
+  rejoins the rotation.
+* **pim brownout / link degrade / straggle** — the replica keeps serving,
+  slower; the :class:`HealthMonitor` watches per-replica step durations
+  (EMA + spike detection) and flags sustained inflation DEGRADED, which
+  deprioritizes the replica in the router until the duration signal
+  recovers.
+* **load shedding** — with ``shed_delay`` set the router refuses arrivals
+  whose estimated queueing delay exceeds the bound (see
+  :class:`Router`); shed requests are counted dropped.
+
+Request conservation generalizes under faults: every submitted request is
+either completed or explicitly dropped (shed or retries exhausted) —
+asserted after every run and pinned by the chaos tests.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.cost_model import SystemSpec
+from repro.faults.health import DEGRADED, HealthMonitor, Transition
+from repro.faults.inject import FaultInjector
+from repro.faults.plan import (
+    LINK_DEGRADE,
+    PIM_BROWNOUT,
+    REPLICA_CRASH,
+    STRAGGLE,
+    FaultEvent,
+)
 from repro.sim.engine import BatchState
 from repro.sim.models import SimModelConfig
 from .arrivals import ArrivalProcess, RequestSpec
@@ -34,6 +64,17 @@ class ClusterResult:
     end_time: float  # when the last request finished (drain included)
     replicas: List[Replica]
     n_submitted: int
+    # requests that did not complete: shed by admission control or
+    # re-dispatched past the retry budget after crashes
+    dropped: List[ClusterRequest] = field(default_factory=list)
+    # applied fault actions (t, phase, kind, target, magnitude) and the
+    # health transitions observed — the chaos determinism tests compare
+    # these across same-seed runs
+    fault_log: List[Tuple[float, str, str, int, float]] = field(
+        default_factory=list
+    )
+    transitions: List[Transition] = field(default_factory=list)
+    n_shed: int = 0
 
     def report(self, slo: Optional[SLO] = None) -> Dict:
         return summarize(
@@ -42,11 +83,19 @@ class ClusterResult:
             slo=slo,
             replicas=self.replicas,
             end_time=self.end_time,
+            dropped=self.dropped,
         )
 
 
 class ClusterSimulator:
-    """N identical replicas behind one router, fed by an arrival process."""
+    """N identical replicas behind one router, fed by an arrival process.
+
+    ``detect_latency`` models the heartbeat timeout between a replica
+    crash and the control plane acting on it; ``max_retries`` bounds
+    crash re-dispatches per request; ``shed_delay`` enables admission
+    control (see :class:`Router`); ``health`` supplies a configured
+    :class:`HealthMonitor` (a default is built when faults are injected).
+    """
 
     def __init__(
         self,
@@ -58,6 +107,10 @@ class ClusterSimulator:
         replica_cfg: Optional[ReplicaConfig] = None,
         seed: int = 0,
         telemetry=None,
+        detect_latency: float = 0.05,
+        max_retries: int = 3,
+        shed_delay: Optional[float] = None,
+        health: Optional[HealthMonitor] = None,
     ):
         # one Telemetry instance spans all replicas: each replica records
         # onto its own ``replica-{i}`` track in simulated time, so a run
@@ -69,26 +122,92 @@ class ClusterSimulator:
             )
             for i in range(n_replicas)
         ]
-        self.router = Router(router_policy, self.replicas)
+        self.tel = telemetry
+        self.detect_latency = detect_latency
+        self.max_retries = max_retries
+        self.shed_delay = shed_delay
+        self.health = health or HealthMonitor(
+            threshold=2.5, alpha=0.2, warmup=3, confirm=2, recover=2,
+            telemetry=telemetry,
+        )
+        self.router = Router(router_policy, self.replicas, shed_delay=shed_delay)
 
     def set_router(self, router_policy: str) -> None:
         """Swap the routing policy while keeping the replicas (and their
         warmed cost tables + step-duration caches).  Sweeps over routers
         reuse one cluster instead of re-paying warmup per router."""
-        self.router = Router(router_policy, self.replicas)
+        self.router = Router(
+            router_policy, self.replicas, shed_delay=self.shed_delay
+        )
 
     def run(
-        self, arrivals: ArrivalProcess, horizon: float, max_steps: int = 2_000_000
+        self,
+        arrivals: ArrivalProcess,
+        horizon: float,
+        max_steps: int = 2_000_000,
+        injector: Optional[FaultInjector] = None,
     ) -> ClusterResult:
         specs: List[RequestSpec] = arrivals.generate(horizon)
-        return self.run_requests(specs, horizon, max_steps=max_steps)
+        return self.run_requests(
+            specs, horizon, max_steps=max_steps, injector=injector
+        )
+
+    # ---- fault application ----------------------------------------------
+    def _apply_fault(
+        self,
+        phase: str,
+        ev: FaultEvent,
+        now: float,
+        detections: List[Tuple[float, int]],
+    ) -> None:
+        rep = self.replicas[ev.target % len(self.replicas)]
+        starting = phase == "start"
+        if ev.kind == REPLICA_CRASH:
+            if starting:
+                orphans = rep.fail(now)
+                # in-flight work is lost *now*; the control plane acts at
+                # detection time (heartbeat timeout)
+                detections.append((now + self.detect_latency, rep.replica_id))
+                self._orphans.extend(orphans)
+            else:
+                rep.recover(now)
+                self.router.include(rep.replica_id)
+                self.health.mark_recovered(
+                    f"replica-{rep.replica_id}", t=now, reason="crash cleared"
+                )
+        elif ev.kind == PIM_BROWNOUT:
+            rep.set_pim_degrade(ev.magnitude if starting else 1.0)
+        elif ev.kind == LINK_DEGRADE:
+            rep.set_link_degrade(ev.magnitude if starting else 1.0)
+        elif ev.kind == STRAGGLE:
+            rep.set_straggle(ev.magnitude if starting else 1.0)
+
+    def _redispatch(
+        self,
+        orphans: List[ClusterRequest],
+        now: float,
+        dropped: List[ClusterRequest],
+    ) -> None:
+        """Bounded-retry re-dispatch of crash orphans."""
+        for req in orphans:
+            req.retries += 1
+            if req.retries > self.max_retries:
+                dropped.append(req)
+                continue
+            if self.router.dispatch(req, now) is None:
+                dropped.append(req)  # shed or no replica available
 
     def run_requests(
-        self, specs: List[RequestSpec], horizon: float, max_steps: int = 2_000_000
+        self,
+        specs: List[RequestSpec],
+        horizon: float,
+        max_steps: int = 2_000_000,
+        injector: Optional[FaultInjector] = None,
     ) -> ClusterResult:
         specs = sorted(specs, key=lambda s: s.arrival_time)
         for rep in self.replicas:  # allow back-to-back runs on one cluster
             rep.reset_requests()
+        self.router.reset_health()
         if specs:
             # Batched cost-table warmup on a representative batch state
             # (full decode slots at the trace's mean KV depth + one prefill
@@ -110,30 +229,87 @@ class ClusterSimulator:
         i = 0
         now = 0.0
         steps = 0
+        dropped: List[ClusterRequest] = []
+        # crash orphans awaiting their detection-time re-dispatch
+        self._orphans: List[ClusterRequest] = []
+        detections: List[Tuple[float, int]] = []  # (t_detect, replica_id)
+        mon = self.health
         while True:
-            # next event: earliest of (next arrival, any step completion)
+            # next event: earliest of (arrival, step completion, fault
+            # action, pending crash detection)
             t_next = specs[i].arrival_time if i < len(specs) else None
             for rep in self.replicas:
                 if rep.busy_until is not None and (
                     t_next is None or rep.busy_until < t_next
                 ):
                     t_next = rep.busy_until
+            if injector is not None:
+                t_f = injector.next_time()
+                if t_f is not None and (t_next is None or t_f < t_next):
+                    t_next = t_f
+            for t_d, _ in detections:
+                if t_next is None or t_d < t_next:
+                    t_next = t_d
             if t_next is None:
-                break  # no arrivals left, nothing in flight -> drained
+                break  # nothing pending anywhere -> drained
             now = t_next
 
+            if injector is not None:
+                for phase, ev in injector.pop_due(now):
+                    self._apply_fault(phase, ev, now, detections)
+            if detections:
+                due = [d for d in detections if d[0] <= now + _EPS]
+                if due:
+                    detections = [d for d in detections if d[0] > now + _EPS]
+                    for _, rid in due:
+                        rep = self.replicas[rid]
+                        if rep.failed:
+                            self.router.exclude(rid)
+                            mon.mark_failed(
+                                f"replica-{rid}", t=now,
+                                reason="heartbeat timeout",
+                            )
+                            # rescue requests routed to the corpse during
+                            # the detection window
+                            self._orphans.extend(rep.take_queue())
+                        # replay everything orphaned (even when the crash
+                        # cleared before the control plane noticed — the
+                        # in-flight work it killed is still gone)
+                        orphans, self._orphans = self._orphans, []
+                        self._redispatch(orphans, now, dropped)
+
             while i < len(specs) and specs[i].arrival_time <= now + _EPS:
-                self.router.dispatch(ClusterRequest(spec=specs[i]), now)
+                if self.router.dispatch(ClusterRequest(spec=specs[i]), now) is None:
+                    dropped.append(ClusterRequest(spec=specs[i]))
                 i += 1
             for rep in self.replicas:
                 if rep.busy_until is not None and rep.busy_until <= now + _EPS:
                     rep.finish_step(now)
+                    # per-replica step-duration health signal (EMA + spike
+                    # detection); sustained inflation -> DEGRADED ->
+                    # deprioritized until the signal clears
+                    rid = rep.replica_id
+                    status = mon.observe(
+                        f"replica-{rid}", rep.last_step_dur, t=now
+                    )
+                    if status == DEGRADED:
+                        self.router.deprioritize(rid)
+                    elif rid in self.router.deprioritized and rid not in self.router.excluded:
+                        self.router.include(rid)
             t_arr = (
                 specs[i].arrival_time if i < len(specs) else float("inf")
             )
+            t_stop = t_arr
+            if injector is not None and injector.next_time() is not None:
+                # a step may not stretch past the next fault action: the
+                # fault must be able to interrupt it (crash) or change the
+                # duration of subsequent steps (degrade)
+                t_stop = min(t_stop, injector.next_time())
+            for t_d, _ in detections:
+                t_stop = min(t_stop, t_d)
             for rep in self.replicas:
                 if rep.busy_until is None and rep.has_work:
-                    rep.start_step(now, t_arr)
+                    rep.start_step(now, t_stop)
                     steps += 1
             if steps > max_steps:
                 raise RuntimeError(
@@ -141,9 +317,10 @@ class ClusterSimulator:
                 )
 
         completed = [r for rep in self.replicas for r in rep.completed]
-        assert len(completed) == len(specs), (
+        n_accounted = len(completed) + len(dropped)
+        assert n_accounted == len(specs), (
             f"request conservation violated: {len(specs)} submitted, "
-            f"{len(completed)} completed"
+            f"{len(completed)} completed + {len(dropped)} dropped"
         )
         end_time = max((r.finish_time for r in completed), default=0.0)
         return ClusterResult(
@@ -152,4 +329,8 @@ class ClusterSimulator:
             end_time=end_time,
             replicas=self.replicas,
             n_submitted=len(specs),
+            dropped=dropped,
+            fault_log=injector.timeline_log() if injector is not None else [],
+            transitions=list(mon.transitions),
+            n_shed=self.router.n_shed,
         )

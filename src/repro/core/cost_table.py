@@ -50,6 +50,10 @@ class CostTable:
         self._big: Dict[int, float] = {}  # keys >= _DENSE_CAP
         self.n_updates = 0
         self.n_fallback_lookups = 0
+        # Non-finite observations (nan/inf) are silently skipped rather
+        # than raised: they come from broken probes at runtime, and a
+        # poisoned sample must never abort serving or poison the EMA.
+        self.n_rejected = 0
         # Monotone content version: bumps on every mutation (update /
         # update_batch / load_state_dict), so exporters can skip re-export
         # when nothing changed since the last refresh.
@@ -155,7 +159,16 @@ class CostTable:
             self._dense, self._dense_ok = dense, ok
 
     def update(self, n_tokens: int, observed_time: float) -> float:
-        """EMA update; returns the new table value."""
+        """EMA update; returns the new table value.
+
+        Negative finite times are a caller bug (raise); non-finite times
+        are runtime measurement garbage (skip, count in ``n_rejected``,
+        return the current value unchanged).
+        """
+        if not np.isfinite(observed_time):
+            self.n_rejected += 1
+            prev = self._get(int(n_tokens))
+            return prev if prev is not None else self._fallback(int(n_tokens))
         if observed_time < 0:
             raise ValueError("observed_time must be non-negative")
         key = int(n_tokens)
@@ -191,6 +204,13 @@ class CostTable:
         t = np.asarray(times, dtype=np.float64)
         if c.shape != t.shape:
             raise ValueError("counts and times must have matching shapes")
+        finite = np.isfinite(t)
+        if not finite.all():
+            # drop nan/inf samples (broken probes must not poison the EMA
+            # — note ``t < 0`` is False for nan, so without this check a
+            # nan would sail through the negative guard below)
+            self.n_rejected += int((~finite).sum())
+            c, t = c[finite], t[finite]
         if c.size and (t < 0).any():
             raise ValueError("observed_time must be non-negative")
         if (

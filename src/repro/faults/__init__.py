@@ -1,0 +1,55 @@
+"""Deterministic fault injection + graceful degradation for the Sieve
+runtime.
+
+Sieve's premise is that runtime conditions drift; this package covers the
+tail of that drift — *failure* — with three pieces threaded through the
+sim, serving, and cluster layers:
+
+* **Injection** (:mod:`plan`, :mod:`inject`): a seeded, scripted
+  :class:`FaultPlan` (same seed -> bit-identical fault timeline) whose
+  :class:`FaultInjector` can brown out a replica's PIM stack, flap its
+  interconnect links, make it straggle or crash, and corrupt measured
+  stage-probe timings.
+* **Detection** (:mod:`health`): :class:`HealthMonitor` — per-target EMA
+  drift + spike detection (the shared generalization of the train-side
+  :class:`StragglerMonitor`) plus a staleness watchdog on
+  ``CostTable.version``.
+* **Degradation & recovery** (:mod:`chaos` + the engine/cluster hooks):
+  unhealthy PIM clamps the sieve split to GPU-only without recompiling,
+  the measured cost feed is quarantined back to the model proxy, the
+  cluster router stops routing to failed replicas and re-enqueues their
+  in-flight requests with bounded retries, and the chaos harness
+  (``cluster_bench --chaos``) reports time-to-detect / time-to-recover /
+  goodput dip under a no-lost-request invariant.
+"""
+
+from .health import (  # noqa: F401
+    DEGRADED,
+    FAILED,
+    HEALTHY,
+    HealthMonitor,
+    StragglerMonitor,
+    Transition,
+)
+from .inject import FaultInjector  # noqa: F401
+from .plan import (  # noqa: F401
+    FAULT_KINDS,
+    LINK_DEGRADE,
+    PIM_BROWNOUT,
+    PROBE_POISON,
+    REPLICA_CRASH,
+    STRAGGLE,
+    FaultEvent,
+    FaultPlan,
+    make_plan,
+)
+from .chaos import (  # noqa: F401
+    CLUSTER_SCENARIOS,
+    ENGINE_SCENARIOS,
+    SCENARIOS,
+    EngineChaos,
+    run_chaos,
+    run_cluster_chaos,
+    run_engine_chaos,
+    windowed_goodput,
+)

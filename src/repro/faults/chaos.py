@@ -1,0 +1,444 @@
+"""Chaos harness: scripted fault scenarios run end-to-end with
+detection/recovery metrics.
+
+Two families of scenario share one plan/injector substrate
+(:mod:`repro.faults.plan`):
+
+* **cluster scenarios** (``pim-brownout``, ``replica-crash``,
+  ``link-flap``, ``straggler``) run the discrete-event cluster simulator
+  twice on the *identical* arrival sequence — once fault-free, once with
+  the injector attached — and compare: time-to-detect/-clear from the
+  health transitions, the goodput dip during the fault window, the
+  post-recovery goodput ratio, and the no-lost-request invariant
+  (completed + dropped == submitted).
+* **engine scenarios** (``probe-poison``, ``pim-brownout-engine``) drive
+  a real measured ``dual_path_cost`` :class:`repro.serving.ServingEngine`
+  while a :class:`StageProbes.corrupt` hook inflates or poisons the
+  stage-probe timings at scripted step indices, and record the health →
+  quarantine → GPU-only-fallback → recovery trajectory plus the jit
+  cache size (the fallback must not recompile the decode step).
+
+Everything is seeded: ``run_chaos(scenario, seed=s)`` twice returns the
+same report, which the determinism tests pin.
+
+Import discipline: this module is re-exported from ``repro.faults``,
+which the serving engine and cluster simulator import — so the heavy
+consumers (``repro.cluster``, ``repro.serving``, ``repro.sim``) are
+imported lazily inside the runner functions, never at module top level.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .inject import FaultInjector
+from .plan import FaultPlan, PIM_BROWNOUT, PROBE_POISON, make_plan
+
+CLUSTER_SCENARIOS = ("pim-brownout", "replica-crash", "link-flap", "straggler")
+ENGINE_SCENARIOS = ("probe-poison", "pim-brownout-engine")
+SCENARIOS = CLUSTER_SCENARIOS + ENGINE_SCENARIOS
+
+
+# ---------------------------------------------------------------------------
+# Goodput windows
+# ---------------------------------------------------------------------------
+
+
+def windowed_goodput(
+    completed,
+    horizon: float,
+    slo=None,
+    n_windows: int = 10,
+) -> List[float]:
+    """SLO-compliant completions per second, bucketed by finish time into
+    ``n_windows`` equal windows over ``[0, horizon)``.  Completions after
+    the horizon (drain) land in the last window.  With ``slo=None`` every
+    completion counts (plain throughput)."""
+    from repro.cluster.metrics import meets_slo
+
+    if horizon <= 0 or n_windows <= 0:
+        return []
+    w = horizon / n_windows
+    counts = [0] * n_windows
+    for r in completed:
+        if slo is not None and not meets_slo(r, slo):
+            continue
+        idx = min(int(r.finish_time / w), n_windows - 1)
+        counts[idx] += 1
+    return [c / w for c in counts]
+
+
+def _goodput_after(completed, t0: float, horizon: float, slo) -> float:
+    """SLO-compliant completions among requests *arriving* in
+    ``[t0, horizon)``, per second of that window.  Keyed on arrival (not
+    finish) so identical arrival sequences compare like-for-like."""
+    from repro.cluster.metrics import meets_slo
+
+    dt = horizon - t0
+    if dt <= 0:
+        return 0.0
+    n = sum(
+        1
+        for r in completed
+        if r.spec.arrival_time >= t0 and (slo is None or meets_slo(r, slo))
+    )
+    return n / dt
+
+
+# ---------------------------------------------------------------------------
+# Cluster chaos
+# ---------------------------------------------------------------------------
+
+
+def run_cluster_chaos(
+    scenario: str,
+    model: str = "qwen3-30b",
+    n_replicas: int = 2,
+    horizon: float = 8.0,
+    rate_per_replica: float = 25.0,
+    seed: int = 0,
+    router_policy: str = "jsq",
+    policy: str = "sieve",
+    slo=None,
+    shed_delay: Optional[float] = None,
+    magnitude: Optional[float] = None,
+    detect_latency: float = 0.05,
+    max_retries: int = 3,
+    telemetry=None,
+    n_windows: int = 10,
+) -> Dict:
+    """Run ``scenario`` against a replica cluster and report recovery.
+
+    Baseline and chaos runs use separate clusters (fresh health state,
+    fresh cost tables) but the *same* generated arrival list, so every
+    delta in the report is attributable to the fault plan.  The chaos
+    telemetry (when given) records only the faulted run.
+    """
+    from repro.cluster import (
+        SLO,
+        ClusterSimulator,
+        LengthModel,
+        PoissonProcess,
+    )
+    from repro.core import b200_pim_system
+    from repro.sim import SIM_MODELS
+
+    if scenario not in CLUSTER_SCENARIOS:
+        raise ValueError(
+            f"unknown cluster scenario {scenario!r}; expected one of "
+            f"{CLUSTER_SCENARIOS}"
+        )
+    if slo is None:
+        slo = SLO(ttft=2.0, tpot=0.02)
+
+    specs = PoissonProcess(
+        rate=rate_per_replica * n_replicas,
+        lengths=LengthModel(kind="lognormal", prompt_mean=512, output_mean=64),
+        seed=seed + 7,
+    ).generate(horizon)
+
+    def build(tel):
+        return ClusterSimulator(
+            SIM_MODELS[model],
+            b200_pim_system(),
+            policy=policy,
+            n_replicas=n_replicas,
+            router_policy=router_policy,
+            seed=seed,
+            telemetry=tel,
+            detect_latency=detect_latency,
+            max_retries=max_retries,
+            shed_delay=shed_delay,
+        )
+
+    base = build(None).run_requests(list(specs), horizon)
+
+    plan = make_plan(
+        scenario, horizon, n_replicas=n_replicas, seed=seed,
+        magnitude=magnitude,
+    )
+    chaos_cluster = build(telemetry)
+    chaos = chaos_cluster.run_requests(
+        list(specs), horizon, injector=FaultInjector(plan)
+    )
+
+    fault_t = min(ev.t for ev in plan.events)
+    clear_t = max(ev.t_clear for ev in plan.events)
+    target = plan.events[0].target % n_replicas
+    mon = chaos_cluster.health
+    ttd = mon.time_to_detect(f"replica-{target}", fault_t)
+    ttc = mon.time_to_clear(f"replica-{target}", clear_t)
+
+    gw_base = windowed_goodput(base.completed, horizon, slo, n_windows)
+    gw_chaos = windowed_goodput(chaos.completed, horizon, slo, n_windows)
+    w = horizon / n_windows
+    dip = None
+    for k in range(n_windows):
+        lo, hi = k * w, (k + 1) * w
+        if hi <= fault_t or lo >= clear_t or gw_base[k] <= 0:
+            continue
+        r = gw_chaos[k] / gw_base[k]
+        dip = r if dip is None else min(dip, r)
+
+    # post-recovery comparison over requests arriving after the clear
+    # (small margin lets re-included replicas drain their backlog)
+    t0 = min(clear_t + 0.05 * horizon, horizon)
+    g_after_base = _goodput_after(base.completed, t0, horizon, slo)
+    g_after_chaos = _goodput_after(chaos.completed, t0, horizon, slo)
+    recovery_ratio = (
+        g_after_chaos / g_after_base if g_after_base > 0 else None
+    )
+
+    n_lost = chaos.n_submitted - len(chaos.completed) - len(chaos.dropped)
+    return {
+        "scenario": scenario,
+        "seed": seed,
+        "model": model,
+        "horizon": horizon,
+        "n_replicas": n_replicas,
+        "rate_per_replica": rate_per_replica,
+        "plan": [
+            [ev.t, ev.kind, ev.target, ev.magnitude, ev.duration]
+            for ev in plan.events
+        ],
+        "fault_t": fault_t,
+        "clear_t": clear_t,
+        "time_to_detect": ttd,
+        "time_to_clear": ttc,
+        "goodput_windows_baseline": gw_base,
+        "goodput_windows_chaos": gw_chaos,
+        "goodput_dip": dip,
+        "recovery_ratio": recovery_ratio,
+        "n_submitted": chaos.n_submitted,
+        "n_completed": len(chaos.completed),
+        "n_dropped": len(chaos.dropped),
+        "n_shed": chaos.n_shed,
+        "n_lost": n_lost,
+        "baseline": base.report(slo),
+        "chaos": chaos.report(slo),
+        "fault_log": [list(a) for a in chaos.fault_log],
+        "transitions": [
+            [tr.t, tr.target, tr.old, tr.new, tr.reason]
+            for tr in chaos.transitions
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Engine chaos
+# ---------------------------------------------------------------------------
+
+
+class EngineChaos:
+    """Steps a measured-cost serving engine under a scripted probe fault.
+
+    The plan's event times are *step indices*.  On a window start the
+    harness installs a :attr:`StageProbes.corrupt` hook — ``pim_brownout``
+    scales only the tail-GEMV probe durations (a PIM slowdown the health
+    loop must detect and clamp to GPU-only); ``probe_poison`` scales every
+    probe (a broken timer the feed's outlier gates must reject).  On the
+    clear it removes the hook.  Each step appends a trajectory record of
+    the health/fallback state and the decode jit-cache size.
+    """
+
+    def __init__(self, engine, plan: FaultPlan):
+        from repro.telemetry.probes import TAIL_SPAN
+
+        if engine._probes is None or engine._timing_feed is None:
+            raise ValueError(
+                "EngineChaos requires a measured-cost engine "
+                "(cost_source='measured' with telemetry probes)"
+            )
+        self.engine = engine
+        self.plan = plan
+        self.injector = FaultInjector(plan)
+        self.trajectory: List[Dict] = []
+        self._tail_span = TAIL_SPAN
+        self._mag = 1.0
+        self._kind: Optional[str] = None
+
+    # ---- corruption hook -------------------------------------------------
+    def _corrupt(self, span_name: str, value: float, dt: float) -> float:
+        if self._kind == PIM_BROWNOUT and span_name != self._tail_span:
+            return dt
+        return dt * self._mag
+
+    def _apply(self, phase: str, ev) -> None:
+        if phase == "start":
+            self._kind = ev.kind
+            self._mag = ev.magnitude
+            self.engine._probes.corrupt = self._corrupt
+        else:
+            self._kind = None
+            self._mag = 1.0
+            self.engine._probes.corrupt = None
+
+    # ---- stepping --------------------------------------------------------
+    def step(self):
+        """One engine step with due fault actions applied first."""
+        k = self.engine.stats.steps
+        for phase, ev in self.injector.pop_due(float(k)):
+            self._apply(phase, ev)
+        done = self.engine.step()
+        eng = self.engine
+        self.trajectory.append(
+            {
+                "step": k,
+                "faulted": self._kind is not None,
+                "healthy": eng.pim_healthy,
+                "quarantined": eng._timing_feed.quarantined,
+                "gpu_only": eng._sieve_gpu_only,
+                "sieve_version": eng._sieve_version,
+                "decode_cache": eng._decode._cache_size(),
+                "feed_ok": eng._timing_feed.n_ok,
+                "feed_rejected": eng._timing_feed.n_rejected,
+            }
+        )
+        return done
+
+    # ---- summary ---------------------------------------------------------
+    def summary(self) -> Dict:
+        traj = self.trajectory
+        fault_t = min((ev.t for ev in self.plan.events), default=None)
+        clear_t = max((ev.t_clear for ev in self.plan.events), default=None)
+
+        def first(pred, recs):
+            for r in recs:
+                if pred(r):
+                    return r["step"]
+            return None
+
+        detect = first(
+            lambda r: not r["healthy"] and r["step"] >= (fault_t or 0), traj
+        )
+        gpu_only = first(
+            lambda r: r["gpu_only"] and r["step"] >= (fault_t or 0), traj
+        )
+        recover = (
+            first(
+                lambda r: r["healthy"] and not r["gpu_only"]
+                and r["step"] >= clear_t,
+                traj,
+            )
+            if clear_t is not None
+            else None
+        )
+        cache_at_fault = next(
+            (r["decode_cache"] for r in traj if r["step"] >= (fault_t or 0)),
+            None,
+        )
+        end = traj[-1] if traj else None
+        return {
+            "scenario": self.plan.scenario,
+            "seed": self.plan.seed,
+            "n_steps": len(traj),
+            "fault_t": fault_t,
+            "clear_t": clear_t,
+            "detect_step": detect,
+            "gpu_only_step": gpu_only,
+            "recover_step": recover,
+            "cache_at_fault": cache_at_fault,
+            "cache_at_end": end["decode_cache"] if end else None,
+            "cache_misses_after_fault": (
+                end["decode_cache"] - cache_at_fault
+                if end is not None and cache_at_fault is not None
+                else None
+            ),
+            "restored": bool(
+                end
+                and end["healthy"]
+                and not end["gpu_only"]
+                and not end["quarantined"]
+            ),
+            "feed_rejected": end["feed_rejected"] if end else 0,
+            "trajectory": traj,
+        }
+
+
+def run_engine_chaos(
+    scenario: str,
+    n_steps: int = 48,
+    seed: int = 0,
+    refresh: int = 4,
+    n_slots: int = 4,
+    magnitude: Optional[float] = None,
+    telemetry=None,
+) -> Dict:
+    """Build a tiny measured ``dual_path_cost`` engine, drive it for
+    ``n_steps`` under ``scenario``, and return the recovery summary plus
+    the generated tokens (the split is an equivalence-preserving schedule
+    choice, so chaos must not change a single token — pinned in tests by
+    comparing against a fault-free run)."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models import LM
+    from repro.serving import BatchingConfig, Request, ServingEngine
+    from repro.telemetry import Telemetry
+
+    if scenario not in ENGINE_SCENARIOS:
+        raise ValueError(
+            f"unknown engine scenario {scenario!r}; expected one of "
+            f"{ENGINE_SCENARIOS}"
+        )
+    arch = get_arch("qwen3-moe-30b-a3b").reduced()
+    arch = _dc.replace(
+        arch, moe=_dc.replace(arch.moe, expert_exec="dual_path_cost")
+    )
+    lm = LM(arch, dtype=jnp.float32)
+    params = lm.init(jax.random.PRNGKey(seed))
+    tel = telemetry or Telemetry(enabled=True, capacity=1 << 16)
+    eng = ServingEngine(
+        lm,
+        params,
+        BatchingConfig(n_slots=n_slots, max_seq=64),
+        policy="sieve",
+        telemetry=tel,
+        cost_source="measured",
+        sieve_refresh_every=refresh,
+    )
+
+    plan = make_plan(scenario, float(n_steps), seed=seed, magnitude=magnitude)
+    chaos = EngineChaos(eng, plan)
+
+    # keep the slots saturated: enough short requests to cover the run
+    rng = np.random.default_rng(seed + 1)
+    max_new = 6
+    n_req = n_slots * (n_steps // max_new + 2)
+    for _ in range(n_req):
+        chaos.engine.submit(
+            Request(
+                prompt=[int(x) for x in rng.integers(1, 255, size=8)],
+                max_new_tokens=max_new,
+            )
+        )
+    tokens: List[List[int]] = []
+    for _ in range(n_steps):
+        for req in chaos.step():
+            tokens.append(list(req.generated))
+
+    out = chaos.summary()
+    out["refresh"] = refresh
+    out["tokens"] = tokens
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def run_chaos(scenario: str, **kwargs) -> Dict:
+    """Run any named chaos scenario; dispatches on the scenario family."""
+    if scenario in CLUSTER_SCENARIOS:
+        return run_cluster_chaos(scenario, **kwargs)
+    if scenario in ENGINE_SCENARIOS:
+        return run_engine_chaos(scenario, **kwargs)
+    raise ValueError(
+        f"unknown chaos scenario {scenario!r}; expected one of {SCENARIOS}"
+    )

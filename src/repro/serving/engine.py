@@ -37,6 +37,7 @@ from repro.core.cost_model import CostModel, MoELayerSpec, SystemSpec, b200_pim_
 from repro.core.cost_table import CostTable
 from repro.core.scheduler import schedule
 from repro.core.scheduler_jax import SieveState, make_sieve_state
+from repro.faults.health import HealthMonitor
 from repro.models.model import LM
 from repro.sim.dram import PimGemvModel
 from repro.telemetry import StageProbes, Telemetry, TimingFeed
@@ -53,6 +54,19 @@ COST_SOURCES = ("model", "measured")
 # cap on stage probes per refresh boundary (distinct tail counts measured);
 # keeps the off-critical-path probe cost bounded per cadence
 _MAX_TAIL_PROBES = 8
+
+# fixed sentinel tail cell probed at every refresh boundary: its measured
+# time vs the roofline model proxy is the PIM-health drift signal (a
+# stationary ratio — the EMA baseline absorbs the hardware/model scale),
+# and it keeps the feed's progress heartbeat alive on idle boundaries
+_SENTINEL_TAIL = 1
+_SENTINEL_PROBES = 3  # repeats per boundary; the mean damps OS jitter
+
+# "PIM time" exported while the stack is flagged unhealthy: huge but
+# finite float32 seconds, so the in-graph argmin picks the minimal
+# feasible tail (GPU-only split) without any shape or dtype change — the
+# compiled decode step never retraces on a health transition
+_PIM_BLOCKED_TIME = 1e9
 
 
 @dataclass
@@ -94,6 +108,7 @@ class ServingEngine:
         sieve_refresh_every: int = 16,
         telemetry: Optional[Telemetry] = None,
         cost_source: str = "model",
+        health: Optional[HealthMonitor] = None,
     ):
         if cost_source not in COST_SOURCES:
             raise ValueError(
@@ -136,6 +151,12 @@ class ServingEngine:
         self.sieve_refreshes: List[int] = []  # step indices of re-exports
         self._sieve_state: Optional[SieveState] = None
         self._sieve_version = -1
+        self._sieve_gpu_only = False
+        # PIM health gate: flipped by _update_pim_health at refresh
+        # boundaries; while False the sieve export clamps to GPU-only and
+        # the measured feed is quarantined (model-proxy fallback)
+        self.pim_healthy = True
+        self.health = health
         if cost_source == "measured" and not self.is_moe:
             raise ValueError(
                 "cost_source='measured' feeds the MoE cost table; "
@@ -193,6 +214,24 @@ class ServingEngine:
                     seed=seed,
                 )
                 self._timing_feed = TimingFeed(self.cost_table, self.tel)
+                # health detection on the measured loop (the only cost
+                # source that can silently break): sentinel drift vs the
+                # roofline proxy + a feed-progress staleness watchdog.
+                # PimGemvModel is never consulted — the measured path
+                # stays DRAM-proxy-free even for its health reference.
+                if self.health is None:
+                    self.health = HealthMonitor(
+                        threshold=4.0,
+                        alpha=0.2,
+                        warmup=1,
+                        confirm=1,
+                        recover=2,
+                        stale_after=2,
+                        telemetry=self.tel,
+                    )
+                self._roofline_t1 = self.cost_model.t_pim_gemv_roofline(
+                    _SENTINEL_TAIL
+                )
             if self.uses_cost_split:
                 # per-expert counts are bounded by the step's token count
                 # (n_slots decode tokens / max_seq prefill tokens); the jit
@@ -203,7 +242,7 @@ class ServingEngine:
                 self._refresh_sieve_state(step=0)
 
     # ------------------------------------------------------------------
-    def _refresh_sieve_state(self, step: int) -> None:
+    def _refresh_sieve_state(self, step: int, gpu_only: bool = False) -> None:
         """Re-export (CostTable, CostModel) into the device-resident state.
 
         Fixed shapes (table depth and packed-params length never change),
@@ -218,20 +257,35 @@ class ServingEngine:
         engine feeding long prefills should export a per-phase state
         (ROADMAP open item) so the prefill split's comm floor is not
         understated.
+
+        ``gpu_only=True`` (PIM flagged unhealthy) exports huge-but-finite
+        PIM times instead of the table, so the in-graph argmin clamps to
+        the minimal feasible tail — same shapes, same compiled step, zero
+        jit-cache misses on a health transition.
         """
-        if self.cost_table.version == self._sieve_version:
+        if (
+            self._sieve_state is not None
+            and self.cost_table.version == self._sieve_version
+            and gpu_only == self._sieve_gpu_only
+        ):
             return
         stale = self._sieve_state
-        self._sieve_state = jax.device_put(
-            make_sieve_state(
-                self.cost_table,
-                self.cost_model,
-                self._sieve_max_count,
-                total_routed_tokens=self.cfg.n_slots
-                * self.lm.arch.moe.top_k,
-            )
+        state = make_sieve_state(
+            self.cost_table,
+            self.cost_model,
+            self._sieve_max_count,
+            total_routed_tokens=self.cfg.n_slots
+            * self.lm.arch.moe.top_k,
         )
+        if gpu_only:
+            blocked = np.full(
+                state.pim_time_by_count.shape, _PIM_BLOCKED_TIME, np.float32
+            )
+            blocked[0] = 0.0  # a 0-token expert still costs nothing
+            state = state._replace(pim_time_by_count=blocked)
+        self._sieve_state = jax.device_put(state)
         self._sieve_version = self.cost_table.version
+        self._sieve_gpu_only = gpu_only
         self.sieve_refreshes.append(step)
         # donate the stale state: its device buffers can never be read
         # again (the engine always passes the current state), so free
@@ -277,6 +331,11 @@ class ServingEngine:
                 "max_head": moe.dual_max_head,
             }
         measured = self.cost_source == "measured"
+        quarantined = (
+            measured
+            and self._timing_feed is not None
+            and self._timing_feed.quarantined
+        )
         tel = self.tel
         for li, counts in enumerate(counts_per_layer):
             part = schedule(
@@ -284,7 +343,10 @@ class ServingEngine:
             )
             if measured:
                 # queue the tail set's token counts for the refresh-cadence
-                # probe pass — the DRAM proxy is never consulted here
+                # probe pass — the DRAM proxy is never consulted here.
+                # Probing continues even under quarantine: the raw
+                # measurements are what the health monitor needs to see
+                # the fault clear.
                 for e in part.pim_experts:
                     n = int(counts[e])
                     if n > 0:
@@ -292,6 +354,17 @@ class ServingEngine:
                 self._last_head_counts = [
                     int(counts[e]) for e in part.gpu_experts if counts[e] > 0
                 ]
+                if quarantined:
+                    # graceful degradation: the measured feed is untrusted,
+                    # so the table falls back to the roofline model proxy
+                    # (its own fallback estimator) until clearance re-warms
+                    # the measured path
+                    for e in part.pim_experts:
+                        n = int(counts[e])
+                        if n > 0:
+                            self.cost_table.update(
+                                n, self.cost_model.t_pim_gemv_roofline(n)
+                            )
             elif self._pim is not None:
                 # observe "PIM" execution times for the chosen set (from
                 # the DRAM-timing model — the synthetic-oracle fallback)
@@ -348,6 +421,8 @@ class ServingEngine:
             tails = [tails[i] for i in idx]
         for n in tails:
             self._probes.tail(n)
+        for _ in range(_SENTINEL_PROBES - tails.count(_SENTINEL_TAIL)):
+            self._probes.tail(_SENTINEL_TAIL)
         if self._last_head_counts:
             self._probes.head(self._last_head_counts)
             self._last_head_counts = []
@@ -356,6 +431,46 @@ class ServingEngine:
                 self._last_decode_batch, moe.n_experts, moe.top_k
             )
             self._probes.attention(self._last_decode_batch, self._last_kv_depth)
+
+    def _update_pim_health(self, step: int) -> None:
+        """Boundary-cadence health pass over the measured cost loop.
+
+        Two orthogonal detectors feed one gate:
+
+        * **drift** — the sentinel tail cell's measured time vs the
+          roofline model proxy.  The ratio is stationary while healthy
+          (the EMA baseline absorbs the constant hardware/model scale),
+          so a breach means the PIM-side stage genuinely slowed — the
+          brownout signature;
+        * **staleness** — the feed's accepted-poll counter.  A feed whose
+          samples all fail validity/outlier filters stops advancing it
+          even though no observation ever "looked wrong" — the poisoned-
+          probe signature.
+
+        Either flag quarantines the feed (model-proxy fallback) and
+        clamps the next sieve export to GPU-only; clearance (with the
+        monitor's hysteresis) re-warms the measured path.
+        """
+        mon, feed = self.health, self._timing_feed
+        if mon is None or feed is None:
+            return
+        t = float(step)
+        raw = feed.last_raw.get(_SENTINEL_TAIL)
+        if raw is not None and self._roofline_t1 > 0:
+            mon.observe("pim", raw / self._roofline_t1, t=t)
+        mon.watch("cost_feed", float(feed.n_ok), t=t)
+        healthy = mon.is_healthy("pim") and mon.is_healthy("cost_feed")
+        if healthy != self.pim_healthy:
+            self.pim_healthy = healthy
+            feed.quarantined = not healthy
+            if healthy:
+                # accept the first measured window ungated: quarantine may
+                # have re-seeded the table at the proxy's scale
+                feed.rewarm()
+        if self.tel.enabled:
+            self.tel.gauge(
+                "engine/pim_healthy", 1.0 if self.pim_healthy else 0.0
+            )
 
     def step(self) -> List[Request]:
         """One engine step: admit -> prefill work -> decode -> retire."""
@@ -435,9 +550,13 @@ class ServingEngine:
             with tel.span("engine/probe"):
                 self._run_probes()
                 self._timing_feed.poll()
+            self._update_pim_health(self.stats.steps + 1)
         if boundary and self.uses_cost_split:
             with tel.span("engine/sieve_refresh"):
-                self._refresh_sieve_state(step=self.stats.steps + 1)
+                self._refresh_sieve_state(
+                    step=self.stats.steps + 1,
+                    gpu_only=not self.pim_healthy,
+                )
 
         done = self.sched.retire(time.perf_counter())
         self.stats.steps += 1

@@ -53,8 +53,23 @@ class PimGemvModel:
     # requires only basic arithmetic operations").
     expert_setup: float = 0.2e-6
     n_dependent_stages: int = 2  # (w1,w3 gate/up in parallel) -> w2 down
+    # Health/brownout multiplier on every returned time (>= 1.0 slows the
+    # stack down uniformly — the fault-injection model of a browned-out or
+    # thermally-throttled PIM stack).  1.0 = nominal; see :meth:`degraded`.
+    degrade: float = 1.0
 
     # -- derived -----------------------------------------------------------
+    def degraded(self, factor: float) -> "PimGemvModel":
+        """A copy of this model with all timings scaled by ``factor``
+        (fault injection: PIM brownout / partial stack loss).  ``1.0``
+        returns the nominal model; factors compose multiplicatively with
+        the current degrade."""
+        import dataclasses
+
+        if factor <= 0:
+            raise ValueError(f"degrade factor must be > 0, got {factor}")
+        return dataclasses.replace(self, degrade=self.degrade * factor)
+
     @property
     def n_banks_total(self) -> int:
         return self.pim.n_channels * self.pim.banks_per_channel
@@ -132,15 +147,18 @@ class PimGemvModel:
         stream_tok = pages_per_bank * t_burst
         cmd_tok = self.cmd_time_per_token(layer)
         if isolated:
-            return (
+            t = (
                 self.expert_setup
                 + self.refresh_factor * (act + n_tokens * stream_tok)
                 + n_tokens * cmd_tok
             )
-        # pipelined: command path hides under array streaming (or vice versa)
-        return self.refresh_factor * act + n_tokens * max(
-            self.refresh_factor * stream_tok, cmd_tok
-        )
+        else:
+            # pipelined: command path hides under array streaming (or
+            # vice versa)
+            t = self.refresh_factor * act + n_tokens * max(
+                self.refresh_factor * stream_tok, cmd_tok
+            )
+        return t * self.degrade if self.degrade != 1.0 else t
 
     def expert_time_vec(
         self, layer: MoELayerSpec, counts, n_channels: int | None = None
@@ -157,6 +175,8 @@ class PimGemvModel:
         )
         act = act_base * (1.0 + (n - 1) * reuse_coeff)
         out = rf * act + n * tok_cost
+        if self.degrade != 1.0:
+            out = out * self.degrade
         return np.where(n > 0, out, 0.0)
 
     def experts_time_tp(self, layer: MoELayerSpec, counts) -> float:
@@ -167,7 +187,8 @@ class PimGemvModel:
         c = c[c > 0]
         if c.size == 0:
             return 0.0
-        return self.expert_setup + float(self.expert_time_vec(layer, c).sum())
+        setup = self.expert_setup * self.degrade
+        return setup + float(self.expert_time_vec(layer, c).sum())
 
     def roofline_time(self, layer: MoELayerSpec, n_tokens: int) -> float:
         """The optimistic estimate the paper's fallback uses (§5.1)."""
@@ -221,7 +242,8 @@ class PimGemvModel:
         t_stream = kv_bytes / self.pim.internal_bw
         t_act_exposed = pages_per_bank * t_activate
         t_cmd = n_requests * self.n_dependent_stages * self.cmd_issue_overhead
-        return self.refresh_factor * (t_stream + t_act_exposed) + t_cmd
+        t = self.refresh_factor * (t_stream + t_act_exposed) + t_cmd
+        return t * self.degrade if self.degrade != 1.0 else t
 
 
 @lru_cache(maxsize=64)

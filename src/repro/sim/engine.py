@@ -236,6 +236,13 @@ class ServingSimulator:
         self.gpu = GpuModel(system.xpu)
         self.pim = PimGemvModel(system.pim) if system.pim is not None else None
         self.net = InterconnectModel(system.xpu, model.n_gpus)
+        # nominal models kept for fault injection: set_pim_degrade /
+        # set_link_degrade swap in degraded copies (absolute factors, so
+        # injectors can set and clear without drift)
+        self._pim_base = self.pim
+        self._net_base = self.net
+        self.pim_degrade = 1.0
+        self.link_degrade = 1.0
         self.trace = TraceGenerator(model.trace, seed=seed)
         self.n_interleave = n_interleave
         self.rng = np.random.default_rng(seed + 1)
@@ -251,6 +258,28 @@ class ServingSimulator:
         self._pimoe_ids: Optional[List[set]] = None
         self._pimoe_mask: List[np.ndarray] = []  # per-gpu bool pinning mask
         self.pimoe_calibration_batch = 32
+
+    # ---- fault-injection hooks ----------------------------------------
+    def set_pim_degrade(self, factor: float) -> None:
+        """Scale all PIM timings by ``factor`` (absolute vs nominal; 1.0
+        restores).  Observed PIM times fed into cost tables degrade too —
+        exactly what a long-running Sieve runtime would measure on a
+        browned-out stack, so the EMA split adapts on its own."""
+        self.pim_degrade = float(factor)
+        if self._pim_base is not None:
+            self.pim = (
+                self._pim_base if factor == 1.0
+                else self._pim_base.degraded(factor)
+            )
+
+    def set_link_degrade(self, factor: float) -> None:
+        """Divide effective interconnect bandwidth by ``factor`` (absolute
+        vs nominal; 1.0 restores)."""
+        self.link_degrade = float(factor)
+        self.net = (
+            self._net_base if factor == 1.0
+            else self._net_base.degraded(factor)
+        )
 
     def _calibrate_pimoe(self) -> None:
         cal_trace = TraceGenerator(self.model.trace, seed=self._seed)

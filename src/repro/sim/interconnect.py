@@ -18,6 +18,23 @@ class InterconnectModel:
     xpu: XPUSpec
     n_gpus: int
     sw_overhead: float = 2.0e-6  # kernel launch / NCCL-style per-collective cost
+    # Link-health multiplier (>= 1.0 divides the effective link bandwidth —
+    # fault injection for slow or flapping links; latency/launch overheads
+    # are unaffected).  Build degraded copies with :meth:`degraded`.
+    degrade: float = 1.0
+
+    def degraded(self, factor: float) -> "InterconnectModel":
+        """A copy with effective link bandwidth divided by ``factor``."""
+        import dataclasses
+
+        if factor <= 0:
+            raise ValueError(f"degrade factor must be > 0, got {factor}")
+        return dataclasses.replace(self, degrade=self.degrade * factor)
+
+    @property
+    def _link_bw(self) -> float:
+        bw = self.xpu.link_bw
+        return bw / self.degrade if self.degrade != 1.0 else bw
 
     def a2a_time(self, tokens_per_gpu: int, d_model: int, dtype_bytes: int = 2) -> float:
         """All-to-all token dispatch (or combine) across the EP group."""
@@ -25,7 +42,7 @@ class InterconnectModel:
             return 0.0
         remote = tokens_per_gpu * (1.0 - 1.0 / self.n_gpus)
         bytes_one_way = remote * d_model * dtype_bytes
-        return bytes_one_way / self.xpu.link_bw + self.xpu.link_latency + self.sw_overhead
+        return bytes_one_way / self._link_bw + self.xpu.link_latency + self.sw_overhead
 
     def allgather_time(self, bytes_per_gpu: float) -> float:
         """Ring allgather of the routing maps (paper §6.1 ③)."""
@@ -33,7 +50,7 @@ class InterconnectModel:
             return 0.0
         total = bytes_per_gpu * (self.n_gpus - 1)
         return (
-            total / self.xpu.link_bw
+            total / self._link_bw
             + (self.n_gpus - 1) * self.xpu.link_latency
             + self.sw_overhead
         )
@@ -43,7 +60,7 @@ class InterconnectModel:
             return 0.0
         total = 2.0 * bytes_per_gpu * (self.n_gpus - 1) / self.n_gpus
         return (
-            total / self.xpu.link_bw
+            total / self._link_bw
             + 2 * (self.n_gpus - 1) * self.xpu.link_latency
             + self.sw_overhead
         )

@@ -234,9 +234,16 @@ class Telemetry:
         """
         if not self.enabled:
             return
+        # non-finite stamps can't be represented in the int64 ring; record
+        # a zero-duration span at t=0 instead of raising — downstream
+        # consumers (TimingFeed) reject dur <= 0, so corrupt timings from
+        # a faulted clock degrade to "no sample", never a crash
+        if not math.isfinite(t_start_s):
+            t_start_s = 0.0
+        dur_ns = int(dur_s * 1e9) if math.isfinite(dur_s) else 0
         self._emit(
             KIND_SPAN, self._intern(name), self._intern_track(track),
-            int(t_start_s * 1e9), max(int(dur_s * 1e9), 0), value,
+            int(t_start_s * 1e9), max(dur_ns, 0), value,
         )
 
     def point(

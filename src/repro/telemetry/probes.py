@@ -28,8 +28,9 @@ execution.
 
 from __future__ import annotations
 
+import math
 import time
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -99,16 +100,30 @@ class StageProbes:
         self._rng = rng
         self._jits: Dict[tuple, tuple] = {}  # key -> (fn, args)
         self.n_probes = 0
+        # Fault-injection hook: ``corrupt(span_name, value, dt) -> dt'``
+        # rewrites a measured duration before it is recorded — the
+        # probe-poison chaos scenario plugs in here, so the *measurement
+        # channel* (not the stage code) is what gets attacked and the
+        # TimingFeed/health defenses downstream are what's under test.
+        self.corrupt: Optional[Callable[[str, float, float], float]] = None
 
     # ------------------------------------------------------------------
     def _timed(self, span_name: str, value: float, fn, args) -> float:
-        """Run ``fn(*args)`` to completion inside a span; returns seconds."""
+        """Run ``fn(*args)`` to completion; records the measured duration
+        as a span (via the optional :attr:`corrupt` hook) and returns it."""
         import jax
 
-        with self.tel.span(span_name, value=value):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args))
-            dt = time.perf_counter() - t0
+        t0_ns = self.tel._clock() if self.tel.enabled else 0
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        if self.corrupt is not None:
+            dt = float(self.corrupt(span_name, value, dt))
+        if self.tel.enabled:
+            # non-finite corruption cannot be represented in the int64
+            # ring; record a zero-duration span (rejected downstream)
+            dur = dt if math.isfinite(dt) else 0.0
+            self.tel.span_at(span_name, t0_ns * 1e-9, dur, value=value)
         self.n_probes += 1
         return dt
 

@@ -19,33 +19,14 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+# The single-stream EMA spike detector now lives in the shared health
+# module (repro.faults.health) so the serving/cluster HealthMonitor and
+# the train driver use one implementation; re-exported here because the
+# train-side API (``from repro.train.fault_tolerance import
+# StragglerMonitor``) is stable.
+from repro.faults.health import StragglerMonitor  # noqa: F401
+
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
-
-
-class StragglerMonitor:
-    """EMA step-time monitor; flags steps slower than ``threshold`` x EMA."""
-
-    def __init__(self, alpha: float = 0.2, threshold: float = 2.0, warmup: int = 3):
-        self.alpha = alpha
-        self.threshold = threshold
-        self.warmup = warmup
-        self.ema: Optional[float] = None
-        self.n = 0
-        self.flagged: List[int] = []
-
-    def observe(self, step: int, dt: float) -> bool:
-        """Returns True if this step is a straggler."""
-        self.n += 1
-        if self.ema is None:
-            self.ema = dt
-            return False
-        is_straggler = self.n > self.warmup and dt > self.threshold * self.ema
-        if is_straggler:
-            self.flagged.append(step)
-            # do not pollute the EMA with the spike
-        else:
-            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
-        return is_straggler
 
 
 @dataclass

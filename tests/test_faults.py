@@ -1,0 +1,404 @@
+"""Fault injection + graceful degradation: plans, health detection,
+feed/table hardening, cluster chaos recovery, and the engine's
+health-gated GPU-only fallback."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import CostTable
+from repro.faults import (
+    CLUSTER_SCENARIOS,
+    DEGRADED,
+    ENGINE_SCENARIOS,
+    FAILED,
+    HEALTHY,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    HealthMonitor,
+    StragglerMonitor,
+    make_plan,
+    run_cluster_chaos,
+    run_engine_chaos,
+    windowed_goodput,
+)
+from repro.faults.plan import PIM_BROWNOUT, REPLICA_CRASH
+from repro.telemetry import Telemetry, TimingFeed
+from repro.telemetry.timing_feed import TAIL_SPAN
+
+
+# ---------------------------------------------------------------------------
+# Plans + injector
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_same_seed_bit_identical(self):
+        for sc in CLUSTER_SCENARIOS + ENGINE_SCENARIOS:
+            a = make_plan(sc, 8.0, n_replicas=3, seed=11)
+            b = make_plan(sc, 8.0, n_replicas=3, seed=11)
+            assert a.events == b.events
+
+    def test_different_seed_differs(self):
+        a = make_plan("pim-brownout", 8.0, seed=0)
+        b = make_plan("pim-brownout", 8.0, seed=1)
+        assert a.events != b.events
+
+    def test_unknown_scenario_and_kind_rejected(self):
+        with pytest.raises(ValueError, match="scenario"):
+            make_plan("solar-flare", 8.0)
+        with pytest.raises(ValueError, match="fault kind"):
+            FaultPlan(events=(FaultEvent(t=1.0, kind="gremlins"),))
+
+    def test_timeline_sorted_and_paired(self):
+        plan = make_plan("link-flap", 10.0, seed=2)
+        acts = plan.timeline()
+        assert [t for t, _, _ in acts] == sorted(t for t, _, _ in acts)
+        assert sum(1 for _, p, _ in acts if p == "start") == len(plan.events)
+        assert sum(1 for _, p, _ in acts if p == "clear") == len(plan.events)
+
+    def test_faults_fit_inside_horizon_with_recovery_margin(self):
+        for sc in CLUSTER_SCENARIOS:
+            plan = make_plan(sc, 8.0, seed=5)
+            assert min(ev.t for ev in plan.events) >= 0.2 * 8.0
+            assert max(ev.t_clear for ev in plan.events) <= 0.8 * 8.0
+
+
+class TestFaultInjector:
+    def test_pop_due_in_order_until_exhausted(self):
+        plan = make_plan("link-flap", 10.0, seed=0)
+        inj = FaultInjector(plan)
+        seen = []
+        while not inj.exhausted:
+            t = inj.next_time()
+            seen.extend(inj.pop_due(t))
+        assert len(seen) == 2 * len(plan.events)
+        assert inj.next_time() is None
+        log = inj.timeline_log()
+        assert [t for t, *_ in log] == sorted(t for t, *_ in log)
+        assert len(log) == 2 * len(plan.events)
+
+    def test_active_window_tracking(self):
+        ev = FaultEvent(t=1.0, kind=PIM_BROWNOUT, duration=2.0, magnitude=8.0)
+        inj = FaultInjector(FaultPlan(events=(ev,)))
+        inj.pop_due(1.0)
+        assert inj.active(PIM_BROWNOUT)
+        inj.pop_due(3.0)
+        assert not inj.active(PIM_BROWNOUT)
+
+
+# ---------------------------------------------------------------------------
+# Health detection
+# ---------------------------------------------------------------------------
+
+
+class TestHealthMonitor:
+    def test_spike_confirm_and_recover_hysteresis(self):
+        mon = HealthMonitor(threshold=2.0, warmup=1, confirm=2, recover=2)
+        for t in range(4):
+            assert mon.observe("r", 1.0, t=t) == HEALTHY
+        assert mon.observe("r", 10.0, t=4) == HEALTHY  # 1 breach < confirm
+        assert mon.observe("r", 10.0, t=5) == DEGRADED
+        assert mon.observe("r", 1.0, t=6) == DEGRADED  # 1 good < recover
+        assert mon.observe("r", 1.0, t=7) == HEALTHY
+        assert mon.time_to_detect("r", 4.0) == pytest.approx(1.0)
+        assert mon.time_to_clear("r", 6.0) == pytest.approx(1.0)
+
+    def test_breaches_do_not_pollute_baseline(self):
+        mon = HealthMonitor(threshold=2.0, warmup=1, confirm=1, recover=1)
+        for t in range(4):
+            mon.observe("r", 1.0, t=t)
+        for t in range(4, 20):
+            mon.observe("r", 50.0, t=t)  # long degradation
+        # baseline still ~1.0, so clearance back to 1.0 is detectable
+        assert mon.observe("r", 1.0, t=21) == HEALTHY
+
+    def test_watchdog_flags_stuck_counter_and_clears_on_advance(self):
+        mon = HealthMonitor(stale_after=2)
+        mon.watch("feed", 5.0, t=0)
+        assert not mon.watch("feed", 5.0, t=1)
+        assert mon.watch("feed", 5.0, t=2)
+        assert mon.status("feed") == DEGRADED
+        mon.watch("feed", 6.0, t=3)
+        assert mon.status("feed") == HEALTHY
+
+    def test_failed_only_clears_via_mark_recovered(self):
+        mon = HealthMonitor()
+        mon.mark_failed("r", t=1.0, reason="heartbeat")
+        assert mon.observe("r", 1.0, t=2.0) == FAILED
+        mon.mark_recovered("r", t=3.0)
+        assert mon.is_healthy("r")
+        assert [tr.new for tr in mon.transitions] == [FAILED, HEALTHY]
+
+
+class TestSharedStragglerMonitor:
+    def test_train_reexport_is_shared_module(self):
+        from repro.train.fault_tolerance import StragglerMonitor as TrainSM
+
+        assert TrainSM is StragglerMonitor
+
+    def test_spike_detection_behavior(self):
+        m = StragglerMonitor(threshold=2.0, warmup=2)
+        assert not any(m.observe(i, 1.0) for i in range(4))
+        assert m.observe(4, 5.0)
+        assert m.flagged == [4]
+        assert m.ema == pytest.approx(1.0)  # spike not absorbed
+
+
+# ---------------------------------------------------------------------------
+# Cost-table + feed hardening (a poisoned sample cannot move the split)
+# ---------------------------------------------------------------------------
+
+
+class TestCostTableHardening:
+    def test_non_finite_rejected_value_unchanged(self):
+        tab = CostTable(fallback=lambda n: 1.0)
+        tab.update(4, 2e-6)
+        v0, ver0 = tab.lookup(4), tab.version
+        for bad in (float("nan"), float("inf"), -float("inf")):
+            assert tab.update(4, bad) == pytest.approx(v0)
+        assert tab.lookup(4) == pytest.approx(v0)
+        assert tab.version == ver0
+        assert tab.n_rejected == 3
+
+    def test_batch_filters_non_finite_keeps_rest(self):
+        tab = CostTable(fallback=lambda n: 1.0)
+        tab.update_batch([2, 3, 4], [1e-6, float("nan"), 2e-6])
+        assert tab.has(2) and tab.has(4) and not tab.has(3)
+        assert tab.n_rejected == 1
+
+    def test_negative_finite_still_raises(self):
+        tab = CostTable(fallback=lambda n: 1.0)
+        with pytest.raises(ValueError):
+            tab.update(2, -1e-6)
+
+
+class TestTimingFeedOutliers:
+    def _feed(self):
+        tel = Telemetry(enabled=True)
+        tab = CostTable(fallback=lambda n: 1.0)
+        return tel, tab, TimingFeed(tab, tel)
+
+    def test_single_1000x_outlier_cannot_move_the_entry(self):
+        tel, tab, feed = self._feed()
+        for i in range(3):
+            tel.span_at(TAIL_SPAN, 0.1 * i, 1e-5, value=8.0)
+            feed.poll()
+        v0 = tab.lookup(8)
+        # one poisoned window: honest repeats + a 1000x spike -> MAD-clipped
+        for i in range(4):
+            tel.span_at(TAIL_SPAN, 1.0 + 0.1 * i, 1e-5, value=8.0)
+        tel.span_at(TAIL_SPAN, 1.5, 1e-2, value=8.0)
+        feed.poll()
+        assert tab.lookup(8) == pytest.approx(v0, rel=0.05)
+        # a lone 1000x window (no honest repeats to vote it down) is
+        # caught by the ratio gate instead
+        tel.span_at(TAIL_SPAN, 2.0, 1e-2, value=8.0)
+        assert feed.poll() == {}
+        assert tab.lookup(8) == pytest.approx(v0, rel=0.05)
+        assert feed.n_rejected >= 2
+
+    def test_non_finite_span_values_rejected(self):
+        tel, tab, feed = self._feed()
+        tel.span_at(TAIL_SPAN, 0.0, float("nan"), value=4.0)
+        tel.span_at(TAIL_SPAN, 0.1, -1.0, value=4.0)
+        assert feed.poll() == {}
+        assert not tab.has(4)
+
+    def test_quarantine_observes_but_never_writes(self):
+        tel, tab, feed = self._feed()
+        tel.span_at(TAIL_SPAN, 0.0, 1e-5, value=4.0)
+        feed.poll()
+        ver0 = tab.version
+        feed.quarantined = True
+        tel.span_at(TAIL_SPAN, 1.0, 9e-5, value=4.0)
+        n_ok0 = feed.n_ok
+        assert feed.poll() == {}
+        assert tab.version == ver0
+        assert feed.last_raw[4] == pytest.approx(9e-5)  # health signal live
+        assert feed.n_ok == n_ok0 + 1  # progress visible to the watchdog
+
+    def test_rewarm_accepts_scale_change_once(self):
+        tel, tab, feed = self._feed()
+        tel.span_at(TAIL_SPAN, 0.0, 1e-5, value=4.0)
+        feed.poll()
+        # 20x drift: gated normally, accepted during the re-warm window
+        tel.span_at(TAIL_SPAN, 1.0, 2e-4, value=4.0)
+        assert feed.poll() == {}
+        feed.rewarm()
+        tel.span_at(TAIL_SPAN, 2.0, 2e-4, value=4.0)
+        assert feed.poll() == {4: pytest.approx(2e-4)}
+
+
+# ---------------------------------------------------------------------------
+# Degenerate metrics (all-dropped runs stay renderable)
+# ---------------------------------------------------------------------------
+
+
+class TestDegenerateMetrics:
+    def test_percentiles_empty_is_explicit_none(self):
+        from repro.cluster.metrics import percentiles
+
+        assert percentiles([]) == {"p50": None, "p90": None, "p99": None}
+
+    def test_summarize_zero_completions(self):
+        from repro.cluster import SLO
+        from repro.cluster.metrics import summarize
+        from repro.cluster.replica import ClusterRequest
+        from repro.cluster.arrivals import RequestSpec
+
+        drop = ClusterRequest(
+            spec=RequestSpec(
+                req_id=0, arrival_time=0.0, prompt_len=8, output_len=4
+            )
+        )
+        rep = summarize([], 1.0, slo=SLO(ttft=1.0), dropped=[drop])
+        assert rep["dropped_all"] is True and rep["n_dropped"] == 1
+        assert rep["ttft"]["p99"] is None
+        assert rep["throughput_rps"] == 0.0
+        assert rep["goodput_rps"] == 0.0 and rep["slo_attainment"] == 0.0
+        assert not any(
+            isinstance(v, float) and math.isnan(v)
+            for blk in rep.values()
+            if isinstance(blk, dict)
+            for v in blk.values()
+            if isinstance(v, (int, float))
+        )
+
+    def test_knee_skips_none_points(self):
+        from repro.cluster import SLO, max_rate_under_slo
+
+        res = {
+            10.0: {"tpot": {"p99": 0.01}},
+            20.0: {"tpot": {"p99": None}},
+        }
+        assert max_rate_under_slo(res, SLO(tpot=0.02)) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# Cluster chaos (discrete-event sim; no JAX)
+# ---------------------------------------------------------------------------
+
+
+_KW = dict(horizon=3.0, rate_per_replica=20.0, n_replicas=2)
+
+
+class TestClusterChaos:
+    def test_windowed_goodput_buckets(self):
+        from repro.cluster.arrivals import RequestSpec
+        from repro.cluster.replica import ClusterRequest
+
+        reqs = []
+        for i, t in enumerate([0.1, 0.2, 1.5, 2.7]):
+            r = ClusterRequest(
+                spec=RequestSpec(
+                    req_id=i, arrival_time=0.0, prompt_len=1, output_len=2
+                )
+            )
+            r.finish_time = t
+            reqs.append(r)
+        assert windowed_goodput(reqs, 3.0, None, n_windows=3) == [
+            pytest.approx(2.0),
+            pytest.approx(1.0),
+            pytest.approx(1.0),
+        ]
+
+    def test_chaos_run_deterministic(self):
+        a = run_cluster_chaos("replica-crash", seed=3, **_KW)
+        b = run_cluster_chaos("replica-crash", seed=3, **_KW)
+        assert a == b
+
+    def test_replica_crash_no_lost_requests_and_recovery(self):
+        r = run_cluster_chaos("replica-crash", seed=0, **_KW)
+        assert r["n_lost"] == 0
+        assert r["n_completed"] + r["n_dropped"] == r["n_submitted"]
+        # detection is the heartbeat timeout, not sooner
+        assert r["time_to_detect"] == pytest.approx(0.05, abs=1e-6)
+        # goodput over post-clear arrivals within 10% of the fault-free
+        # baseline on the identical arrival sequence
+        assert r["recovery_ratio"] is not None
+        assert r["recovery_ratio"] >= 0.9
+        # the crash window actually hurt (otherwise this test is vacuous)
+        assert r["goodput_dip"] is not None and r["goodput_dip"] < 1.0
+
+    def test_pim_brownout_detected_and_recovered(self):
+        r = run_cluster_chaos("pim-brownout", seed=0, **_KW)
+        assert r["n_lost"] == 0
+        assert r["time_to_detect"] is not None
+        assert r["time_to_detect"] < 0.15 * _KW["horizon"]
+        assert r["time_to_clear"] is not None
+        assert r["recovery_ratio"] is None or r["recovery_ratio"] >= 0.9
+        tgt = f"replica-{int(r['plan'][0][2]) % _KW['n_replicas']}"
+        assert any(
+            tr[1] == tgt and tr[3] == DEGRADED for tr in r["transitions"]
+        )
+
+    def test_link_flap_conserves_requests(self):
+        r = run_cluster_chaos("link-flap", seed=1, **_KW)
+        assert r["n_lost"] == 0
+        assert r["n_completed"] + r["n_dropped"] == r["n_submitted"]
+
+    def test_shedding_counts_as_dropped(self):
+        from repro.cluster import ClusterSimulator, LengthModel, PoissonProcess
+        from repro.core import b200_pim_system
+        from repro.sim import SIM_MODELS
+
+        cs = ClusterSimulator(
+            SIM_MODELS["qwen3-30b"], b200_pim_system(),
+            n_replicas=1, shed_delay=1e-4, seed=0,
+        )
+        res = cs.run(
+            PoissonProcess(
+                rate=200.0,
+                lengths=LengthModel(
+                    kind="lognormal", prompt_mean=512, output_mean=64
+                ),
+                seed=7,
+            ),
+            2.0,
+        )
+        assert res.n_shed > 0
+        assert len(res.completed) + len(res.dropped) == res.n_submitted
+        rep = res.report()
+        assert rep["n_dropped"] == len(res.dropped)
+
+
+# ---------------------------------------------------------------------------
+# Engine chaos (real measured dual_path_cost engine; JAX)
+# ---------------------------------------------------------------------------
+
+
+class TestEngineChaos:
+    def test_brownout_gpu_only_fallback_and_restoration(self):
+        n_steps, refresh = 28, 4
+        r = run_engine_chaos(
+            "pim-brownout-engine", n_steps=n_steps, seed=0, refresh=refresh
+        )
+        # clamped to the GPU-only split within one refresh cadence
+        assert r["gpu_only_step"] is not None
+        assert r["gpu_only_step"] - r["fault_t"] <= refresh
+        # the fallback is a state refresh, not a recompile
+        assert r["cache_misses_after_fault"] == 0
+        assert r["cache_at_end"] == 1
+        # measured split restored after the fault clears
+        assert r["recover_step"] is not None
+        assert r["restored"]
+        # quarantine tracked the unhealthy window exactly
+        for rec in r["trajectory"]:
+            assert rec["quarantined"] == rec["gpu_only"]
+        # the split is an equivalence-preserving schedule choice: a run
+        # with the corruption hook forced to x1 yields identical tokens
+        control = run_engine_chaos(
+            "pim-brownout-engine", n_steps=n_steps, seed=0,
+            refresh=refresh, magnitude=1.0,
+        )
+        assert control["tokens"] == r["tokens"]
+
+    def test_probe_poison_rejected_then_quarantined(self):
+        r = run_engine_chaos("probe-poison", n_steps=28, seed=0, refresh=4)
+        assert r["gpu_only_step"] is not None
+        assert r["cache_misses_after_fault"] == 0
+        assert r["restored"]
+        assert r["feed_rejected"] > 0  # outlier gates actually fired
