@@ -96,6 +96,11 @@ def run_chaos_suite(args) -> dict:
       (completed + dropped == submitted), the fault is detected within
       ``0.15 x horizon``, and post-clear goodput recovers to >= 90% of the
       fault-free baseline on the identical arrival sequence;
+    * ``replica-crash-migrate`` additionally: warm KV migration actually
+      fires, loses nothing, recovers no worse than the cold re-dispatch
+      control post-clear, and beats it on mean end-to-end latency of the
+      orphaned requests; the recovery journal is written next to the
+      report (``recovery_journal.json``) as the audit/replay artifact;
     * every engine scenario: the measured engine clamps to the GPU-only
       split within one refresh cadence of the fault, does so with zero
       decode jit-cache misses (no recompile), and restores the measured
@@ -151,6 +156,48 @@ def run_chaos_suite(args) -> dict:
                 failures.append(
                     f"{sc}: post-clear goodput {r['recovery_ratio']:.2f} "
                     f"< 0.9x baseline"
+                )
+            if sc == "replica-crash-migrate":
+                rec = r["recovery"]
+                if rec["n_migrations"] <= 0:
+                    failures.append(f"{sc}: no warm KV migrations fired")
+                if rec["cold_n_lost"] != 0:
+                    failures.append(
+                        f"{sc}: cold control lost {rec['cold_n_lost']} requests"
+                    )
+                warm_rr, cold_rr = r["recovery_ratio"], rec["cold_recovery_ratio"]
+                if (
+                    warm_rr is not None
+                    and cold_rr is not None
+                    and warm_rr < cold_rr
+                ):
+                    failures.append(
+                        f"{sc}: warm recovery {warm_rr:.2f} worse than "
+                        f"cold control {cold_rr:.2f}"
+                    )
+                warm_e2e = rec["orphan_e2e_mean"]
+                cold_e2e = rec["cold_orphan_e2e_mean"]
+                if (
+                    warm_e2e is not None
+                    and cold_e2e is not None
+                    and warm_e2e >= cold_e2e
+                ):
+                    failures.append(
+                        f"{sc}: orphan e2e {warm_e2e:.3f}s not better than "
+                        f"cold re-dispatch {cold_e2e:.3f}s"
+                    )
+                jpath = os.path.join(
+                    os.path.dirname(args.out) or ".", "recovery_journal.json"
+                )
+                os.makedirs(os.path.dirname(jpath) or ".", exist_ok=True)
+                with open(jpath, "w") as f:
+                    json.dump(rec["journal"], f, indent=1)
+                print(
+                    f"# recovery journal: {jpath} "
+                    f"({rec['n_migrations']} migrations, "
+                    f"{rec['n_cold_redispatch']} cold re-dispatches, "
+                    f"orphan e2e {warm_e2e} vs cold {cold_e2e})",
+                    file=sys.stderr,
                 )
         else:
             assert sc in ENGINE_SCENARIOS
@@ -224,8 +271,8 @@ def main(argv=None) -> dict:
     ap.add_argument(
         "--chaos", default=None, metavar="SCENARIO",
         help="run the chaos suite instead of the rate sweep: a scenario "
-        "name (pim-brownout, replica-crash, link-flap, straggler, "
-        "probe-poison, pim-brownout-engine) or 'all'",
+        "name (pim-brownout, replica-crash, replica-crash-migrate, "
+        "link-flap, straggler, probe-poison, pim-brownout-engine) or 'all'",
     )
     ap.add_argument(
         "--check", action="store_true",

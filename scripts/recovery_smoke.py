@@ -1,0 +1,180 @@
+"""Recovery smoke: kill a serving engine mid-run, restore, gate bit-identity.
+
+Runs the same workload twice on a tiny reduced MoE engine:
+
+1. **uninterrupted** — N steps straight through;
+2. **interrupted** — N/2 steps, snapshot to disk, then a *fresh* engine
+   (fresh jit wrappers — the in-process proxy for a fresh process)
+   restores the snapshot and runs the remaining N/2 steps.
+
+The continuation must be bit-identical: same generated tokens in the same
+completion order, same head/tail partition decisions, same Sieve refresh
+trajectory — and the restored engine must not recompile anything beyond
+what the uninterrupted run compiled (jit cache entries <= uninterrupted).
+Any mismatch exits nonzero; this is the CI ``recovery-smoke`` gate.
+
+Run:  PYTHONPATH=src python scripts/recovery_smoke.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses as dc
+import json
+import os
+import sys
+import tempfile
+import time
+
+
+def build_engine(lm, params, seed: int):
+    from repro.serving import BatchingConfig, ServingEngine
+
+    return ServingEngine(
+        lm,
+        params,
+        BatchingConfig(n_slots=4, max_seq=64),
+        policy="sieve",
+        cost_source="model",
+        sieve_refresh_every=4,
+        seed=seed,
+    )
+
+
+def feed(eng, n_req: int, seed: int):
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    for _ in range(n_req):
+        eng.submit(
+            Request(
+                prompt=[int(x) for x in rng.integers(1, 255, size=8)],
+                max_new_tokens=6,
+            )
+        )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=24, help="total engine steps")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--out", default=os.path.join("benchmarks", "out", "recovery_smoke.json")
+    )
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro.serving.request as reqmod
+    from repro.configs import get_arch
+    from repro.models import LM
+
+    t0 = time.perf_counter()
+    arch = get_arch("qwen3-moe-30b-a3b").reduced()
+    arch = dc.replace(
+        arch, moe=dc.replace(arch.moe, expert_exec="dual_path_cost")
+    )
+    lm = LM(arch, dtype=jnp.float32)
+    params = lm.init(jax.random.PRNGKey(args.seed))
+
+    n_total = args.steps
+    n_half = n_total // 2
+    n_req = 12
+
+    # ---- uninterrupted reference run ------------------------------------
+    reqmod._next_id = 0  # identical request ids across both runs
+    ref = build_engine(lm, params, seed=7)
+    feed(ref, n_req, seed=1)
+    tokens_ref = []
+    for _ in range(n_total):
+        for r in ref.step():
+            tokens_ref.append(list(r.generated))
+    jit_ref = ref._decode._cache_size() + ref._prefill_chunk._cache_size()
+
+    # ---- interrupted run: snapshot at the half-way point ----------------
+    reqmod._next_id = 0
+    victim = build_engine(lm, params, seed=7)
+    feed(victim, n_req, seed=1)
+    tokens_resumed = []
+    for _ in range(n_half):
+        for r in victim.step():
+            tokens_resumed.append(list(r.generated))
+    snap_dir = tempfile.mkdtemp(prefix="recovery_smoke_")
+    victim.snapshot(snap_dir)
+    del victim  # "crash": the engine object is gone; only the snapshot survives
+
+    # fresh engine = fresh jit wrappers = fresh-process proxy
+    resumed = build_engine(lm, params, seed=7)
+    snap_id = resumed.restore(snap_dir)
+    for _ in range(n_total - n_half):
+        for r in resumed.step():
+            tokens_resumed.append(list(r.generated))
+    jit_resumed = (
+        resumed._decode._cache_size() + resumed._prefill_chunk._cache_size()
+    )
+
+    # ---- gates ----------------------------------------------------------
+    failures = []
+    if tokens_ref != tokens_resumed:
+        failures.append(
+            f"tokens diverged after restore "
+            f"({len(tokens_ref)} vs {len(tokens_resumed)} completions)"
+        )
+    if ref.stats.partitions != resumed.stats.partitions:
+        failures.append(
+            f"partition decisions diverged: {ref.stats.partitions} "
+            f"vs {resumed.stats.partitions}"
+        )
+    if ref.sieve_refreshes != resumed.sieve_refreshes:
+        failures.append(
+            f"sieve refresh trajectory diverged: {ref.sieve_refreshes} "
+            f"vs {resumed.sieve_refreshes}"
+        )
+    if ref.cost_table.version != resumed.cost_table.version:
+        failures.append(
+            f"cost-table version diverged: {ref.cost_table.version} "
+            f"vs {resumed.cost_table.version}"
+        )
+    if jit_resumed > jit_ref:
+        failures.append(
+            f"restore caused extra jit compiles "
+            f"({jit_resumed} entries vs {jit_ref} uninterrupted)"
+        )
+
+    report = {
+        "mode": "recovery-smoke",
+        "steps": n_total,
+        "snapshot_step": n_half,
+        "snapshot_id": snap_id,
+        "seed": args.seed,
+        "n_completions": len(tokens_ref),
+        "tokens_identical": tokens_ref == tokens_resumed,
+        "jit_entries_uninterrupted": jit_ref,
+        "jit_entries_resumed_segment": jit_resumed,
+        "wall_time_s": time.perf_counter() - t0,
+        "failures": failures,
+    }
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out} ({report['wall_time_s']:.1f}s)", file=sys.stderr)
+
+    if failures:
+        for msg in failures:
+            print(f"RECOVERY FAIL: {msg}", file=sys.stderr)
+        return 1
+    print(
+        f"recovery smoke OK: {len(tokens_ref)} completions bit-identical "
+        f"after mid-run snapshot/restore; jit {jit_resumed} <= {jit_ref}",
+        file=sys.stderr,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

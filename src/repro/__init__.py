@@ -28,6 +28,7 @@ _SUBPACKAGES = (
     "kernels",
     "launch",
     "models",
+    "recovery",
     "roofline",
     "serving",
     "sim",

@@ -84,6 +84,7 @@ def summarize(
     replicas: Optional[List[Replica]] = None,
     end_time: Optional[float] = None,
     dropped: Optional[List[ClusterRequest]] = None,
+    recovery: Optional[Dict] = None,
 ) -> Dict:
     """Aggregate a finished cluster run into the standard report dict.
 
@@ -148,6 +149,18 @@ def summarize(
         routed = sum(getattr(rep, "routed_tokens", 0.0) for rep in replicas)
         out["expert_dropped_tokens"] = dropped
         out["expert_drop_rate"] = dropped / routed if routed > 0 else 0.0
+        migrated_in = {
+            str(rep.replica_id): getattr(rep, "n_migrated_in", 0)
+            for rep in replicas
+        }
+        if any(migrated_in.values()):
+            out["replica_migrated_in"] = migrated_in
+
+    if recovery is not None:
+        # warm-vs-cold crash recovery accounting (cluster simulator):
+        # requests that kept their progress via KV migration vs those that
+        # repaid their prefill after a cold re-dispatch
+        out["recovery"] = dict(recovery)
     return out
 
 

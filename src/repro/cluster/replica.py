@@ -42,9 +42,13 @@ class ClusterRequest:
 
     prefill_done: int = 0
     generated: int = 0
-    # times this request was re-dispatched after a replica crash (its KV
-    # and generated tokens are lost with the replica, so progress resets)
+    # times this request was cold re-dispatched after a replica crash
+    # (progress reset + jittered backoff; bounded by ``max_retries``)
     retries: int = 0
+    # times this request's KV pages were warm-migrated to a surviving
+    # replica (progress preserved; the handoff is charged through the
+    # interconnect model)
+    migrations: int = 0
 
     @property
     def done(self) -> bool:
@@ -151,6 +155,7 @@ class Replica:
         self.straggle = 1.0  # multiplier on every step duration
         self.last_step_dur = 0.0  # single-step duration of the last step
         self.n_crashes = 0
+        self.n_migrated_in = 0  # warm-migrated requests delivered here
 
     # ---- load signals used by the router --------------------------------
     @property
@@ -211,13 +216,18 @@ class Replica:
         self.straggle = float(factor)
 
     def fail(self, now: float) -> List[ClusterRequest]:
-        """Crash: abort the in-flight step, lose all KV/progress, and hand
-        every resident request back for re-dispatch.
+        """Crash: abort the in-flight step and hand every resident request
+        back to the control plane.
 
-        Returned requests have their progress reset (prefill, generated
-        tokens, and admit/first-token stamps — the KV cache died with the
-        replica); the caller (cluster simulator) re-enqueues them through
-        the router with bounded retries.
+        Returned orphans keep their progress (``prefill_done`` /
+        ``generated`` / first-token stamps): their KV pages live in the
+        PIM-attached memory pool, which survives the serving process — so
+        the cluster simulator can *warm-migrate* them to a surviving
+        replica (charging the page transfer through the interconnect
+        model) or fall back to a cold re-dispatch, which resets progress
+        there.  The in-flight step's effects never applied (the step plan
+        is aborted), so an orphan's progress is exactly its state at the
+        last completed step boundary.
         """
         if self.busy_until is not None:
             # the aborted remainder never ran — refund it from busy_time
@@ -226,10 +236,6 @@ class Replica:
             self._step_plan = None
         orphans = list(self.active) + list(self.queue)
         for r in orphans:
-            r.prefill_done = 0
-            r.generated = 0
-            r.admit_time = None
-            r.first_token_time = None
             r.replica_id = None
         self.queue = []
         self.slots = [None] * self.cfg.n_slots
@@ -282,6 +288,7 @@ class Replica:
         self.straggle = 1.0
         self.last_step_dur = 0.0
         self.n_crashes = 0
+        self.n_migrated_in = 0
         self.set_pim_degrade(1.0)
         self.set_link_degrade(1.0)
 

@@ -10,14 +10,23 @@ the standard trace-driven serving-simulator structure (NeuPIMs lineage).
 
 Fault semantics (repro.faults):
 
-* **replica crash** — the replica aborts its in-flight step and loses all
-  KV/progress immediately; the control plane only notices after
-  ``detect_latency`` (a heartbeat-timeout model), at which point the
-  router excludes the replica and every orphaned request (in-flight at
-  the crash, or routed to the corpse during the detection window) is
-  re-dispatched with its progress reset, up to ``max_retries`` times;
-  beyond that it is counted dropped.  On the fault's clear the replica
-  rejoins the rotation.
+* **replica crash** — the replica aborts its in-flight step immediately;
+  the control plane only notices after ``detect_latency`` (a heartbeat-
+  timeout model), at which point the router excludes the replica and
+  every orphaned request (in-flight at the crash, or routed to the corpse
+  during the detection window) is recovered one of two ways.  With
+  ``migrate_kv`` the orphan's KV pages are *warm-migrated* to the
+  surviving replica with the most headroom — progress is preserved, and
+  the page transfer is charged through the interconnect model
+  (``p2p_time`` over the request's KV bytes) before the request lands on
+  the target's queue.  Without it (or when no replica has headroom) the
+  orphan is *cold re-dispatched*: progress reset, then re-routed after a
+  seeded jittered-exponential backoff (crash storms must not synchronize
+  retries), up to ``max_retries`` times; beyond that it is counted
+  dropped.  Every recovery decision (detection, migration target, backoff
+  draw, drop) is journaled — see :class:`repro.recovery.RecoveryJournal`
+  — so a seeded chaos run replays bit-identically.  On the fault's clear
+  the replica rejoins the rotation.
 * **pim brownout / link degrade / straggle** — the replica keeps serving,
   slower; the :class:`HealthMonitor` watches per-replica step durations
   (EMA + spike detection) and flags sustained inflation DEGRADED, which
@@ -37,6 +46,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.cost_model import SystemSpec
 from repro.faults.health import DEGRADED, HealthMonitor, Transition
 from repro.faults.inject import FaultInjector
@@ -47,7 +58,10 @@ from repro.faults.plan import (
     STRAGGLE,
     FaultEvent,
 )
+from repro.recovery import journal as jrn
+from repro.recovery.journal import RecoveryJournal
 from repro.sim.engine import BatchState
+from repro.sim.interconnect import InterconnectModel
 from repro.sim.models import SimModelConfig
 from .arrivals import ArrivalProcess, RequestSpec
 from .metrics import SLO, summarize
@@ -75,6 +89,11 @@ class ClusterResult:
     )
     transitions: List[Transition] = field(default_factory=list)
     n_shed: int = 0
+    # recovery accounting: warm KV migrations vs cold (progress-reset)
+    # re-dispatches, and the journal of every recovery decision
+    n_migrations: int = 0
+    n_cold_redispatch: int = 0
+    journal: Optional[RecoveryJournal] = None
 
     def report(self, slo: Optional[SLO] = None) -> Dict:
         return summarize(
@@ -84,6 +103,13 @@ class ClusterResult:
             replicas=self.replicas,
             end_time=self.end_time,
             dropped=self.dropped,
+            recovery={
+                "n_migrations": self.n_migrations,
+                "n_cold_redispatch": self.n_cold_redispatch,
+                "n_journal_entries": (
+                    len(self.journal) if self.journal is not None else 0
+                ),
+            },
         )
 
 
@@ -95,6 +121,14 @@ class ClusterSimulator:
     crash re-dispatches per request; ``shed_delay`` enables admission
     control (see :class:`Router`); ``health`` supplies a configured
     :class:`HealthMonitor` (a default is built when faults are injected).
+
+    ``migrate_kv`` turns on warm KV migration: crash orphans with progress
+    keep it by shipping their KV pages (``n_layers x kv_bytes(1, pos)``
+    over the interconnect's ``p2p_time``) to the surviving replica with
+    the most headroom, falling back to cold re-dispatch when none has
+    any.  ``backoff_base`` scales the cold path's jittered exponential
+    retry delay (``base * 2^(retries-1) * U[0.5, 1.5)``, seeded off
+    ``seed`` — deterministic, and desynchronized across a crash storm).
     """
 
     def __init__(
@@ -111,6 +145,8 @@ class ClusterSimulator:
         max_retries: int = 3,
         shed_delay: Optional[float] = None,
         health: Optional[HealthMonitor] = None,
+        migrate_kv: bool = False,
+        backoff_base: float = 0.02,
     ):
         # one Telemetry instance spans all replicas: each replica records
         # onto its own ``replica-{i}`` track in simulated time, so a run
@@ -126,6 +162,13 @@ class ClusterSimulator:
         self.detect_latency = detect_latency
         self.max_retries = max_retries
         self.shed_delay = shed_delay
+        self.migrate_kv = migrate_kv
+        self.backoff_base = backoff_base
+        self._seed = seed
+        self._model = model
+        self.interconnect = InterconnectModel(
+            system.xpu, n_gpus=max(model.n_gpus, 1)
+        )
         self.health = health or HealthMonitor(
             threshold=2.5, alpha=0.2, warmup=3, confirm=2, recover=2,
             telemetry=telemetry,
@@ -146,10 +189,12 @@ class ClusterSimulator:
         horizon: float,
         max_steps: int = 2_000_000,
         injector: Optional[FaultInjector] = None,
+        journal: Optional[RecoveryJournal] = None,
     ) -> ClusterResult:
         specs: List[RequestSpec] = arrivals.generate(horizon)
         return self.run_requests(
-            specs, horizon, max_steps=max_steps, injector=injector
+            specs, horizon, max_steps=max_steps, injector=injector,
+            journal=journal,
         )
 
     # ---- fault application ----------------------------------------------
@@ -182,20 +227,149 @@ class ClusterSimulator:
         elif ev.kind == STRAGGLE:
             rep.set_straggle(ev.magnitude if starting else 1.0)
 
-    def _redispatch(
+    # ---- crash recovery --------------------------------------------------
+    def _handoff_time(self, req: ClusterRequest) -> float:
+        """Interconnect cost of shipping one orphan's KV pages: a p2p
+        transfer of its per-layer KV footprint at its current position."""
+        m = self._model
+        return self.interconnect.p2p_time(
+            m.n_layers * m.attn.kv_bytes(1, max(req.position, 1))
+        )
+
+    def _pick_migration_target(self, req: ClusterRequest) -> Optional[int]:
+        """Surviving replica with headroom and the least committed KV, or
+        None (cold fallback).  Deterministic tie-break by replica id."""
+        best = None
+        for rep in self.replicas:
+            if rep.failed or rep.replica_id in self.router.excluded:
+                continue
+            if rep.queue_len >= rep.cfg.n_slots:
+                continue  # no headroom: would just queue behind a full pool
+            key = (rep.kv_load, rep.replica_id)
+            if best is None or key < best[0]:
+                best = (key, rep.replica_id)
+        return None if best is None else best[1]
+
+    def _handle_orphans(
         self,
         orphans: List[ClusterRequest],
         now: float,
         dropped: List[ClusterRequest],
     ) -> None:
-        """Bounded-retry re-dispatch of crash orphans."""
+        """Recover crash orphans: warm KV migration when possible, else
+        cold re-dispatch with jittered exponential backoff (bounded by
+        ``max_retries``).  Every decision is journaled; during replay the
+        journal *drives* the decisions instead."""
+        jr = self.journal
         for req in orphans:
+            if jr.replaying:
+                kind = jr.peek_kind()
+                if kind == jrn.MIGRATE:
+                    e = jr.expect(now, jrn.MIGRATE, req=req.spec.req_id)
+                    self._schedule_migration(
+                        req, now, int(e["target"]), float(e["handoff"])
+                    )
+                    continue
+                if kind == jrn.DROP:
+                    jr.expect(now, jrn.DROP, req=req.spec.req_id)
+                    req.retries += 1
+                    dropped.append(req)
+                    continue
+                e = jr.expect(now, jrn.BACKOFF, req=req.spec.req_id)
+                req.retries += 1
+                self._schedule_cold_retry(req, now, float(e["delay"]))
+                continue
+
+            # live decisions (recorded as they are made)
+            target = None
+            if (
+                self.migrate_kv
+                and req.position > 0
+                and req.migrations < self.max_retries
+            ):
+                target = self._pick_migration_target(req)
+            if target is not None:
+                handoff = self._handoff_time(req)
+                jr.record(
+                    now, jrn.MIGRATE,
+                    req=req.spec.req_id, target=target,
+                    handoff=handoff, position=req.position,
+                )
+                self._schedule_migration(req, now, target, handoff)
+                continue
             req.retries += 1
             if req.retries > self.max_retries:
+                jr.record(
+                    now, jrn.DROP,
+                    req=req.spec.req_id, reason="retries_exhausted",
+                )
                 dropped.append(req)
                 continue
-            if self.router.dispatch(req, now) is None:
-                dropped.append(req)  # shed or no replica available
+            # jittered exponential backoff: deterministic (seeded), and
+            # desynchronized — a crash storm's retries spread out instead
+            # of hammering the survivors in lockstep
+            delay = (
+                self.backoff_base
+                * (2.0 ** (req.retries - 1))
+                * (0.5 + self._backoff_rng.random())
+            )
+            jr.record(
+                now, jrn.BACKOFF,
+                req=req.spec.req_id, delay=delay, retry=req.retries,
+            )
+            self._schedule_cold_retry(req, now, delay)
+
+    def _schedule_migration(
+        self, req: ClusterRequest, now: float, target: int, handoff: float
+    ) -> None:
+        req.migrations += 1
+        self.n_migrations += 1
+        self._migrations.append((now + handoff, req, target))
+
+    def _schedule_cold_retry(
+        self, req: ClusterRequest, now: float, delay: float
+    ) -> None:
+        """Cold path: the KV died unrecovered — progress resets here (the
+        replica no longer resets it at fail time; see Replica.fail)."""
+        req.prefill_done = 0
+        req.generated = 0
+        req.admit_time = None
+        req.first_token_time = None
+        self.n_cold_redispatch += 1
+        self._retries.append((now + delay, req))
+
+    def _deliver_recovery_events(
+        self, now: float, dropped: List[ClusterRequest]
+    ) -> None:
+        """Apply due migration arrivals and backoff retries."""
+        jr = self.journal
+        if self._migrations:
+            due = [m for m in self._migrations if m[0] <= now + _EPS]
+            if due:
+                self._migrations = [
+                    m for m in self._migrations if m[0] > now + _EPS
+                ]
+                for _, req, rid in due:
+                    rep = self.replicas[rid]
+                    if rep.failed or rid in self.router.excluded:
+                        # the target died while the pages were in flight:
+                        # the pages survive (pool semantics), so the orphan
+                        # is re-handled — possibly migrating again
+                        self._handle_orphans([req], now, dropped)
+                    else:
+                        rep.submit(req, now)
+                        rep.n_migrated_in += 1
+        if self._retries:
+            due = [r for r in self._retries if r[0] <= now + _EPS]
+            if due:
+                self._retries = [r for r in self._retries if r[0] > now + _EPS]
+                for _, req in due:
+                    if self.router.dispatch(req, now) is None:
+                        jr.record(
+                            now, jrn.DROP,
+                            req=req.spec.req_id, reason="no_replica",
+                        )
+                        dropped.append(req)
 
     def run_requests(
         self,
@@ -203,8 +377,18 @@ class ClusterSimulator:
         horizon: float,
         max_steps: int = 2_000_000,
         injector: Optional[FaultInjector] = None,
+        journal: Optional[RecoveryJournal] = None,
     ) -> ClusterResult:
         specs = sorted(specs, key=lambda s: s.arrival_time)
+        # recovery state (per run): the decision journal (pass a replaying
+        # one to re-drive a recorded run), in-flight KV migrations
+        # ``(deliver_t, req, target_rid)``, and pending backoff retries
+        self.journal = journal if journal is not None else RecoveryJournal()
+        self._migrations: List[Tuple[float, ClusterRequest, int]] = []
+        self._retries: List[Tuple[float, ClusterRequest]] = []
+        self._backoff_rng = np.random.default_rng(self._seed + 0x5EED)
+        self.n_migrations = 0
+        self.n_cold_redispatch = 0
         for rep in self.replicas:  # allow back-to-back runs on one cluster
             rep.reset_requests()
         self.router.reset_health()
@@ -250,6 +434,12 @@ class ClusterSimulator:
             for t_d, _ in detections:
                 if t_next is None or t_d < t_next:
                     t_next = t_d
+            for t_m, _, _ in self._migrations:
+                if t_next is None or t_m < t_next:
+                    t_next = t_m
+            for t_r, _ in self._retries:
+                if t_next is None or t_r < t_next:
+                    t_next = t_r
             if t_next is None:
                 break  # nothing pending anywhere -> drained
             now = t_next
@@ -272,11 +462,16 @@ class ClusterSimulator:
                             # rescue requests routed to the corpse during
                             # the detection window
                             self._orphans.extend(rep.take_queue())
-                        # replay everything orphaned (even when the crash
+                        # recover everything orphaned (even when the crash
                         # cleared before the control plane noticed — the
                         # in-flight work it killed is still gone)
                         orphans, self._orphans = self._orphans, []
-                        self._redispatch(orphans, now, dropped)
+                        self.journal.record(
+                            now, jrn.CRASH_DETECTED,
+                            replica=rid, n_orphans=len(orphans),
+                        )
+                        self._handle_orphans(orphans, now, dropped)
+            self._deliver_recovery_events(now, dropped)
 
             while i < len(specs) and specs[i].arrival_time <= now + _EPS:
                 if self.router.dispatch(ClusterRequest(spec=specs[i]), now) is None:
@@ -307,6 +502,12 @@ class ClusterSimulator:
                 t_stop = min(t_stop, injector.next_time())
             for t_d, _ in detections:
                 t_stop = min(t_stop, t_d)
+            # a migration delivery or backoff retry can hand a replica new
+            # work mid-stretch, so step-jumping may not leap past them
+            for t_m, _, _ in self._migrations:
+                t_stop = min(t_stop, t_m)
+            for t_r, _ in self._retries:
+                t_stop = min(t_stop, t_r)
             for rep in self.replicas:
                 if rep.busy_until is None and rep.has_work:
                     rep.start_step(now, t_stop)
@@ -322,6 +523,16 @@ class ClusterSimulator:
             f"request conservation violated: {len(specs)} submitted, "
             f"{len(completed)} completed + {len(dropped)} dropped"
         )
+        # exactly-once: no request may complete (or drop) twice — a
+        # migrated request must leave exactly one completion record
+        outcome_ids = [r.spec.req_id for r in completed] + [
+            r.spec.req_id for r in dropped
+        ]
+        assert len(outcome_ids) == len(set(outcome_ids)), (
+            "duplicate completion/drop detected"
+        )
+        if self.journal.replaying:
+            self.journal.finish_replay()
         end_time = max((r.finish_time for r in completed), default=0.0)
         return ClusterResult(
             completed=completed,
@@ -333,4 +544,7 @@ class ClusterSimulator:
             fault_log=injector.timeline_log() if injector is not None else [],
             transitions=list(mon.transitions),
             n_shed=self.router.n_shed,
+            n_migrations=self.n_migrations,
+            n_cold_redispatch=self.n_cold_redispatch,
+            journal=self.journal,
         )

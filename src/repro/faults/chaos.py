@@ -5,12 +5,16 @@ Two families of scenario share one plan/injector substrate
 (:mod:`repro.faults.plan`):
 
 * **cluster scenarios** (``pim-brownout``, ``replica-crash``,
-  ``link-flap``, ``straggler``) run the discrete-event cluster simulator
-  twice on the *identical* arrival sequence — once fault-free, once with
-  the injector attached — and compare: time-to-detect/-clear from the
-  health transitions, the goodput dip during the fault window, the
-  post-recovery goodput ratio, and the no-lost-request invariant
-  (completed + dropped == submitted).
+  ``replica-crash-migrate``, ``link-flap``, ``straggler``) run the
+  discrete-event cluster simulator twice on the *identical* arrival
+  sequence — once fault-free, once with the injector attached — and
+  compare: time-to-detect/-clear from the health transitions, the
+  goodput dip during the fault window, the post-recovery goodput ratio,
+  and the no-lost-request invariant (completed + dropped == submitted).
+  The ``-migrate`` variant additionally runs a *cold* control (same
+  arrivals, same fault timeline, ``migrate_kv=False``) so the report can
+  attribute any goodput delta to warm KV migration alone, and embeds the
+  recovery journal for decision-by-decision audit and replay.
 * **engine scenarios** (``probe-poison``, ``pim-brownout-engine``) drive
   a real measured ``dual_path_cost`` :class:`repro.serving.ServingEngine`
   while a :class:`StageProbes.corrupt` hook inflates or poisons the
@@ -36,7 +40,13 @@ import numpy as np
 from .inject import FaultInjector
 from .plan import FaultPlan, PIM_BROWNOUT, PROBE_POISON, make_plan
 
-CLUSTER_SCENARIOS = ("pim-brownout", "replica-crash", "link-flap", "straggler")
+CLUSTER_SCENARIOS = (
+    "pim-brownout",
+    "replica-crash",
+    "replica-crash-migrate",
+    "link-flap",
+    "straggler",
+)
 ENGINE_SCENARIOS = ("probe-poison", "pim-brownout-engine")
 SCENARIOS = CLUSTER_SCENARIOS + ENGINE_SCENARIOS
 
@@ -139,7 +149,9 @@ def run_cluster_chaos(
         seed=seed + 7,
     ).generate(horizon)
 
-    def build(tel):
+    migrate = scenario == "replica-crash-migrate"
+
+    def build(tel, migrate_kv=False):
         return ClusterSimulator(
             SIM_MODELS[model],
             b200_pim_system(),
@@ -151,6 +163,7 @@ def run_cluster_chaos(
             detect_latency=detect_latency,
             max_retries=max_retries,
             shed_delay=shed_delay,
+            migrate_kv=migrate_kv,
         )
 
     base = build(None).run_requests(list(specs), horizon)
@@ -159,10 +172,19 @@ def run_cluster_chaos(
         scenario, horizon, n_replicas=n_replicas, seed=seed,
         magnitude=magnitude,
     )
-    chaos_cluster = build(telemetry)
+    chaos_cluster = build(telemetry, migrate_kv=migrate)
     chaos = chaos_cluster.run_requests(
         list(specs), horizon, injector=FaultInjector(plan)
     )
+
+    # warm-vs-cold control: re-run the identical arrivals and fault
+    # timeline with migration disabled, so the goodput/recovery delta in
+    # the report isolates the KV-handoff policy
+    cold = None
+    if migrate:
+        cold = build(None).run_requests(
+            list(specs), horizon, injector=FaultInjector(plan)
+        )
 
     fault_t = min(ev.t for ev in plan.events)
     clear_t = max(ev.t_clear for ev in plan.events)
@@ -192,6 +214,39 @@ def run_cluster_chaos(
     )
 
     n_lost = chaos.n_submitted - len(chaos.completed) - len(chaos.dropped)
+
+    def _orphan_e2e(res) -> Optional[float]:
+        # mean end-to-end latency of requests the recovery path touched
+        # (journal entries carry the orphan's req id) — the most direct
+        # measure of how much progress the crash cost them
+        ids = {e["req"] for e in res.journal.entries if "req" in e}
+        xs = [
+            r.finish_time - r.spec.arrival_time
+            for r in res.completed
+            if r.spec.req_id in ids
+        ]
+        return sum(xs) / len(xs) if xs else None
+
+    recovery: Dict = {
+        "n_migrations": chaos.n_migrations,
+        "n_cold_redispatch": chaos.n_cold_redispatch,
+        "orphan_e2e_mean": _orphan_e2e(chaos),
+        "journal": chaos.journal.to_dict() if chaos.journal else None,
+    }
+    if cold is not None:
+        g_after_cold = _goodput_after(cold.completed, t0, horizon, slo)
+        recovery.update(
+            cold_recovery_ratio=(
+                g_after_cold / g_after_base if g_after_base > 0 else None
+            ),
+            cold_orphan_e2e_mean=_orphan_e2e(cold),
+            cold_n_completed=len(cold.completed),
+            cold_n_dropped=len(cold.dropped),
+            cold_n_redispatch=cold.n_cold_redispatch,
+            cold_n_lost=(
+                cold.n_submitted - len(cold.completed) - len(cold.dropped)
+            ),
+        )
     return {
         "scenario": scenario,
         "seed": seed,
@@ -216,6 +271,7 @@ def run_cluster_chaos(
         "n_dropped": len(chaos.dropped),
         "n_shed": chaos.n_shed,
         "n_lost": n_lost,
+        "recovery": recovery,
         "baseline": base.report(slo),
         "chaos": chaos.report(slo),
         "fault_log": [list(a) for a in chaos.fault_log],

@@ -94,6 +94,11 @@ class HealthMonitor:
     ``stale_after`` consecutive unchanged :meth:`watch` checks flag
     staleness (the watchdog is orthogonal to the value stream: a target
     can be value-healthy but stale).
+
+    The transition log is bounded (``max_transitions``; oldest entries
+    drop first, counted in ``n_transitions_dropped``) so a week-long chaos
+    run with a flapping target cannot grow it without limit; time-to-
+    detect / time-to-clear stay derivable from the retained window.
     """
 
     def __init__(
@@ -105,9 +110,12 @@ class HealthMonitor:
         recover: int = 1,
         stale_after: int = 3,
         telemetry=None,
+        max_transitions: int = 4096,
     ):
         if confirm < 1 or recover < 1:
             raise ValueError("confirm and recover must be >= 1")
+        if max_transitions < 1:
+            raise ValueError("max_transitions must be >= 1")
         self.threshold = threshold
         self.alpha = alpha
         self.warmup = warmup
@@ -115,8 +123,10 @@ class HealthMonitor:
         self.recover = recover
         self.stale_after = stale_after
         self.tel = telemetry
+        self.max_transitions = int(max_transitions)
         self._targets: Dict[str, _TargetState] = {}
         self.transitions: List[Transition] = []
+        self.n_transitions_dropped = 0
 
     # ------------------------------------------------------------------
     def _state(self, target: str) -> _TargetState:
@@ -137,6 +147,10 @@ class HealthMonitor:
         self.transitions.append(
             Transition(t=t, target=target, old=st.status, new=new, reason=reason)
         )
+        if len(self.transitions) > self.max_transitions:
+            drop = len(self.transitions) - self.max_transitions
+            del self.transitions[:drop]
+            self.n_transitions_dropped += drop
         st.status = new
         if self.tel is not None and self.tel.enabled:
             self.tel.point(f"health/{target}", _STATUS_CODE[new], t_s=t)
@@ -227,3 +241,53 @@ class HealthMonitor:
             if tr.target == target and tr.new == HEALTHY and tr.t >= clear_t:
                 return tr.t - clear_t
         return None
+
+    # ---- persistence (serving-engine snapshots) -----------------------
+    def state_dict(self) -> dict:
+        """Msgpack/JSON-friendly runtime state (config knobs excluded —
+        they belong to the constructor, not the snapshot)."""
+        return {
+            "targets": {
+                name: {
+                    "status": st.status,
+                    "bad_streak": st.bad_streak,
+                    "good_streak": st.good_streak,
+                    "last_value": st.last_value,
+                    "last_counter": st.last_counter,
+                    "stale_checks": st.stale_checks,
+                    "ema": st.monitor.ema,
+                    "n": st.monitor.n,
+                    "flagged": list(st.monitor.flagged),
+                }
+                for name, st in self._targets.items()
+            },
+            "transitions": [
+                {
+                    "t": tr.t,
+                    "target": tr.target,
+                    "old": tr.old,
+                    "new": tr.new,
+                    "reason": tr.reason,
+                }
+                for tr in self.transitions
+            ],
+            "n_transitions_dropped": self.n_transitions_dropped,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self._targets = {}
+        for name, d in state["targets"].items():
+            st = self._state(name)
+            st.status = d["status"]
+            st.bad_streak = int(d["bad_streak"])
+            st.good_streak = int(d["good_streak"])
+            st.last_value = float(d["last_value"])
+            st.last_counter = (
+                None if d["last_counter"] is None else float(d["last_counter"])
+            )
+            st.stale_checks = int(d["stale_checks"])
+            st.monitor.ema = None if d["ema"] is None else float(d["ema"])
+            st.monitor.n = int(d["n"])
+            st.monitor.flagged = [int(x) for x in d["flagged"]]
+        self.transitions = [Transition(**tr) for tr in state["transitions"]]
+        self.n_transitions_dropped = int(state["n_transitions_dropped"])

@@ -126,7 +126,10 @@ def make_plan(
             ),
             scenario=scenario, seed=seed,
         )
-    if scenario == "replica-crash":
+    if scenario in ("replica-crash", "replica-crash-migrate"):
+        # the -migrate variant consumes the same rng draws, so the fault
+        # timeline is bit-identical to plain replica-crash — the warm-vs-
+        # cold recovery comparison isolates the recovery policy
         t0 = _jitter(rng, 0.25, 0.30) * horizon
         return FaultPlan(
             events=(

@@ -1,0 +1,38 @@
+"""Crash recovery: engine snapshots, recovery journals, shared codec.
+
+* :mod:`repro.recovery.codec` — sha256-per-leaf integrity + atomic commit
+  helpers shared with the train checkpoints;
+* :mod:`repro.recovery.journal` — deterministic record/replay of cluster
+  recovery decisions (numpy-free, importable from anywhere);
+* :mod:`repro.recovery.snapshot` — ServingEngine snapshot/restore
+  (imported lazily: it pulls in jax, which journal/codec consumers such
+  as the pure-numpy cluster simulator don't need).
+"""
+
+from repro.recovery.journal import RecoveryJournal, ReplayMismatch
+
+__all__ = [
+    "RecoveryJournal",
+    "ReplayMismatch",
+    "save_engine_snapshot",
+    "restore_engine_snapshot",
+    "latest_snapshot",
+    "list_snapshots",
+]
+
+_SNAPSHOT_ATTRS = (
+    "save_engine_snapshot",
+    "restore_engine_snapshot",
+    "latest_snapshot",
+    "list_snapshots",
+    "SNAPSHOT_VERSION",
+)
+
+
+def __getattr__(name):
+    if name in _SNAPSHOT_ATTRS:
+        import importlib
+
+        mod = importlib.import_module("repro.recovery.snapshot")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.recovery' has no attribute {name!r}")

@@ -1,0 +1,194 @@
+"""Shared snapshot codec: per-leaf sha256 integrity + atomic commits.
+
+One codec serves both persistence layers — the train checkpoints
+(:mod:`repro.train.checkpoint`) and the serving-engine snapshots
+(:mod:`repro.recovery.snapshot`) — so a corruption bug fixed in one can
+never survive in the other:
+
+* **leaf storage** — numpy ``.npy`` per array leaf; ``ml_dtypes`` arrays
+  (bf16, fp8) are stored as same-width uints with the logical dtype
+  recorded in the manifest, because numpy cannot serialize them natively;
+* **integrity** — sha256 over the *stored* bytes of every leaf, verified
+  on load;
+* **atomic commit** — writers fill a ``<dir>.tmp`` staging directory,
+  rename it into place, and write a ``COMMITTED`` marker last.  A killed
+  writer leaves either the previous committed state or an uncommitted
+  ``.tmp`` / marker-less directory that readers skip — never a torn mix;
+* **state blobs** — msgpack with an extension hook for the values runtime
+  state actually contains (numpy scalars, >64-bit RNG integers, tuples),
+  so snapshot metadata round-trips without pickle.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+from typing import Any, Callable, Iterable, List, Tuple
+
+import ml_dtypes
+import msgpack
+import numpy as np
+
+COMMIT_MARKER = "COMMITTED"
+
+# numpy can't serialize ml_dtypes natively; store them as same-width uints
+VIEW_AS = {
+    np.dtype(ml_dtypes.bfloat16): np.uint16,
+    np.dtype(ml_dtypes.float8_e4m3fn): np.uint8,
+    np.dtype(ml_dtypes.float8_e5m2): np.uint8,
+}
+
+
+def to_storable(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """(storable array, logical dtype string) for one leaf."""
+    view = VIEW_AS.get(arr.dtype)
+    if view is not None:
+        return arr.view(view), str(arr.dtype)
+    return arr, str(arr.dtype)
+
+
+def from_storable(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if str(arr.dtype) != logical_dtype:
+        return arr.view(np.dtype(logical_dtype))
+    return arr
+
+
+def sha256_array(arr: np.ndarray) -> str:
+    return hashlib.sha256(arr.tobytes()).hexdigest()
+
+
+def sha256_bytes(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Atomic directory commit (temp dir + rename + marker)
+# ---------------------------------------------------------------------------
+
+
+def commit_dir(final: str, write_fn: Callable[[str], Any]) -> str:
+    """Atomically materialize a directory at ``final``.
+
+    ``write_fn(staging_path)`` fills a ``<final>.tmp`` staging directory;
+    afterwards the staging dir is renamed over ``final`` and the
+    ``COMMITTED`` marker is written last.  If ``write_fn`` raises (or the
+    process dies), ``final`` is untouched: readers that require the
+    marker (:func:`is_committed`) never see a partial write.
+    """
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    write_fn(tmp)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(final, COMMIT_MARKER), "w") as f:
+        f.write("ok\n")
+    return final
+
+
+def is_committed(path: str) -> bool:
+    return os.path.exists(os.path.join(path, COMMIT_MARKER))
+
+
+def committed_dirs(root: str, prefix: str) -> List[Tuple[int, str]]:
+    """Committed ``<prefix><n>`` directories under ``root``, as sorted
+    ``(n, path)`` pairs (ascending).  Torn writes (missing marker, ``.tmp``
+    staging leftovers) are skipped."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if not name.startswith(prefix) or name.endswith(".tmp"):
+            continue
+        tail = name[len(prefix):]
+        if not tail.isdigit():
+            continue
+        path = os.path.join(root, name)
+        if is_committed(path):
+            out.append((int(tail), path))
+    out.sort()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Leaf I/O with manifest entries
+# ---------------------------------------------------------------------------
+
+
+def write_leaves(dirname: str, leaves: Iterable[np.ndarray]) -> List[dict]:
+    """Write ``leaf_<i>.npy`` per array; returns the manifest entries
+    (shape / logical dtype / sha256-over-stored-bytes)."""
+    entries = []
+    for i, arr in enumerate(leaves):
+        arr = np.asarray(arr)
+        storable, logical = to_storable(arr)
+        np.save(os.path.join(dirname, f"leaf_{i:05d}.npy"), storable)
+        entries.append(
+            {
+                "shape": list(arr.shape),
+                "dtype": logical,
+                "sha256": sha256_array(storable),
+            }
+        )
+    return entries
+
+
+def read_leaf(dirname: str, i: int, meta: dict, verify: bool = True) -> np.ndarray:
+    """Load + verify one leaf against its manifest entry.
+
+    Raises ``IOError`` on checksum mismatch and ``FileNotFoundError`` on a
+    truncated snapshot (missing leaf file) — the two corruption signatures
+    the restore fallbacks catch.
+    """
+    path = os.path.join(dirname, f"leaf_{i:05d}.npy")
+    arr = np.load(path)
+    if verify and sha256_array(arr) != meta["sha256"]:
+        raise IOError(f"checksum mismatch for leaf {i} in {dirname}")
+    return from_storable(arr, meta["dtype"])
+
+
+# ---------------------------------------------------------------------------
+# msgpack state blobs (runtime-state friendly)
+# ---------------------------------------------------------------------------
+
+_EXT_BIGINT = 1  # ints outside the 64-bit range (PCG64 RNG state words)
+
+
+def _default(obj):
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.ndarray):  # small metadata arrays only
+        return obj.tolist()
+    if isinstance(obj, int):  # reached only for ints msgpack cannot encode
+        sign = b"-" if obj < 0 else b"+"
+        mag = abs(obj)
+        return msgpack.ExtType(
+            _EXT_BIGINT, sign + mag.to_bytes((mag.bit_length() + 7) // 8 or 1, "big")
+        )
+    raise TypeError(f"cannot pack {type(obj)!r}")
+
+
+def _ext_hook(code, data):
+    if code == _EXT_BIGINT:
+        mag = int.from_bytes(data[1:], "big")
+        return -mag if data[:1] == b"-" else mag
+    return msgpack.ExtType(code, data)
+
+
+def pack_state(state: Any) -> bytes:
+    """msgpack-encode a (possibly nested) runtime-state structure.
+
+    Tuples flatten to lists (callers normalize on load); numpy scalars
+    decay to python numbers; >64-bit ints (PCG64 RNG state) ride an
+    ExtType so RNG state round-trips exactly.
+    """
+    return msgpack.packb(state, default=_default)
+
+
+def unpack_state(data: bytes) -> Any:
+    return msgpack.unpackb(data, ext_hook=_ext_hook, strict_map_key=False)

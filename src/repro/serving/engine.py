@@ -583,6 +583,27 @@ class ServingEngine:
         step_span.__exit__(None, None, None)
         return done
 
+    # ------------------------------------------------------------------
+    def snapshot(
+        self, snap_dir: str, snap_id: Optional[int] = None,
+        keep: Optional[int] = None,
+    ) -> str:
+        """Atomic, checksummed snapshot of the engine's runtime state
+        (KV cache + slots, SieveState, cost table, RNG, requests, feed and
+        health monitors).  See :mod:`repro.recovery.snapshot`."""
+        from repro.recovery.snapshot import save_engine_snapshot
+
+        return save_engine_snapshot(self, snap_dir, snap_id=snap_id, keep=keep)
+
+    def restore(self, snap_dir: str, snap_id: Optional[int] = None) -> int:
+        """Restore from a snapshot (newest committed by default, walking
+        back past corrupt ones); continues bit-identically — same tokens,
+        same splits, zero added jit-cache misses (pinned by
+        tests/test_recovery.py).  Returns the snap id restored."""
+        from repro.recovery.snapshot import restore_engine_snapshot
+
+        return restore_engine_snapshot(self, snap_dir, snap_id=snap_id)
+
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
             if self.sched.idle:

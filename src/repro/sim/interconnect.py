@@ -44,6 +44,18 @@ class InterconnectModel:
         bytes_one_way = remote * d_model * dtype_bytes
         return bytes_one_way / self._link_bw + self.xpu.link_latency + self.sw_overhead
 
+    def p2p_time(self, bytes_: float) -> float:
+        """Point-to-point transfer of ``bytes_`` over one link.
+
+        Used for cross-replica KV-page migration on replica failure
+        (recovery warm handoff).  Unlike the collectives this is *not*
+        gated on ``n_gpus``: the peers are distinct replicas, so even a
+        single-GPU-per-replica deployment pays the link.
+        """
+        if bytes_ < 0:
+            raise ValueError(f"bytes_ must be >= 0, got {bytes_}")
+        return bytes_ / self._link_bw + self.xpu.link_latency + self.sw_overhead
+
     def allgather_time(self, bytes_per_gpu: float) -> float:
         """Ring allgather of the routing maps (paper §6.1 ③)."""
         if self.n_gpus <= 1:

@@ -164,3 +164,28 @@ class TimingFeed:
         self.n_polls += 1
         self.n_fed += len(counts)
         return dict(zip(counts, times))
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Runtime state for engine snapshots.  ``_cursor`` is deliberately
+        excluded: it indexes the live telemetry ring, which does not
+        survive a process restart — a restored feed polls its fresh ring
+        from the beginning."""
+        return {
+            "n_polls": self.n_polls,
+            "n_fed": self.n_fed,
+            "n_rejected": self.n_rejected,
+            "last_raw": {int(k): float(v) for k, v in self.last_raw.items()},
+            "n_ok": self.n_ok,
+            "quarantined": self.quarantined,
+            "ungated_polls": self._ungated_polls,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.n_polls = int(state["n_polls"])
+        self.n_fed = int(state["n_fed"])
+        self.n_rejected = int(state["n_rejected"])
+        self.last_raw = {int(k): float(v) for k, v in state["last_raw"].items()}
+        self.n_ok = int(state["n_ok"])
+        self.quarantined = bool(state["quarantined"])
+        self._ungated_polls = int(state["ungated_polls"])

@@ -17,7 +17,14 @@ Design points for scale (DESIGN.md §5):
     the *target* sharding, so a checkpoint written on one mesh restores
     onto any other mesh/topology (elastic scaling / failover);
   * async save: the host-gather happens synchronously (cheap on CPU), the
-    serialization + fsync runs on a background thread.
+    serialization + fsync runs on a background thread;
+  * corruption fallback: :func:`restore_latest` walks back through older
+    committed steps when the newest one fails integrity checks, so one bad
+    disk sector costs a few steps of progress, not the whole run.
+
+The leaf codec (ml_dtypes storage views, sha256, atomic commit marker) is
+shared with the serving-engine snapshots via :mod:`repro.recovery.codec` —
+one integrity implementation for both persistence layers.
 
 On a real multi-host pod each host would write only its addressable
 shards; the manifest layout already records per-leaf shardings to support
@@ -26,49 +33,35 @@ that extension.
 
 from __future__ import annotations
 
-import hashlib
-import io
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import warnings
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import ml_dtypes
-import msgpack
 import numpy as np
 
-COMMIT_MARKER = "COMMITTED"
+from repro.recovery.codec import (
+    COMMIT_MARKER,
+    committed_dirs,
+    pack_state,
+    read_leaf,
+    sha256_array,
+    to_storable,
+    unpack_state,
+)
 
-# numpy can't serialize ml_dtypes natively; store them as same-width uints
-_VIEW_AS = {
-    np.dtype(ml_dtypes.bfloat16): np.uint16,
-    np.dtype(ml_dtypes.float8_e4m3fn): np.uint8,
-    np.dtype(ml_dtypes.float8_e5m2): np.uint8,
-}
+_STEP_PREFIX = "step_"
 
-
-def _to_storable(arr: np.ndarray):
-    view = _VIEW_AS.get(arr.dtype)
-    if view is not None:
-        return arr.view(view), str(arr.dtype)
-    return arr, str(arr.dtype)
-
-
-def _from_storable(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
-    if str(arr.dtype) != logical_dtype:
-        return arr.view(np.dtype(logical_dtype))
-    return arr
+# fallback telemetry: how many times restore_latest had to walk past a
+# corrupt/truncated checkpoint (reset per-process; tests and ops read it)
+n_fallbacks = 0
 
 
-def _tree_flatten_with_names(tree):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return leaves, treedef
-
-
-def _sha256(arr: np.ndarray) -> str:
-    return hashlib.sha256(arr.tobytes()).hexdigest()
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"{_STEP_PREFIX}{step:08d}")
 
 
 def save_checkpoint(
@@ -84,11 +77,11 @@ def save_checkpoint(
     ``_fault_injection``: test hook — abort after writing N leaves to
     simulate a mid-write crash (the commit marker is never written).
     """
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    final = _step_dir(ckpt_dir, step)
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
 
-    leaves, treedef = _tree_flatten_with_names(tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
     host_leaves = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
 
     def _write():
@@ -101,18 +94,17 @@ def save_checkpoint(
         for i, arr in enumerate(host_leaves):
             if _fault_injection is not None and i >= _fault_injection:
                 return  # simulated crash: no commit marker
-            path = os.path.join(tmp, f"leaf_{i:05d}.npy")
-            storable, logical = _to_storable(arr)
-            np.save(path, storable)
+            storable, logical = to_storable(arr)
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), storable)
             manifest["leaves"].append(
                 {
                     "shape": list(arr.shape),
                     "dtype": logical,
-                    "sha256": _sha256(storable),
+                    "sha256": sha256_array(storable),
                 }
             )
         with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-            f.write(msgpack.packb(manifest))
+            f.write(pack_state(manifest))
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -136,14 +128,8 @@ def wait_for_async_saves():
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
     """Latest *committed* checkpoint step (ignores torn writes)."""
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = []
-    for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(ckpt_dir, name, COMMIT_MARKER)):
-                steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    steps = committed_dirs(ckpt_dir, _STEP_PREFIX)
+    return steps[-1][0] if steps else None
 
 
 def restore_checkpoint(
@@ -156,13 +142,15 @@ def restore_checkpoint(
     """Restore into the structure of ``like``; reshard to ``shardings``.
 
     ``shardings`` may target a different mesh than the checkpoint was
-    written on (elastic restore).
+    written on (elastic restore).  Raises on a corrupt or truncated
+    checkpoint — callers that want the walk-back-to-last-good behavior
+    use :func:`restore_latest`.
     """
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    d = _step_dir(ckpt_dir, step)
     if not os.path.exists(os.path.join(d, COMMIT_MARKER)):
         raise FileNotFoundError(f"checkpoint at {d} is missing or uncommitted")
     with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+        manifest = unpack_state(f.read())
 
     leaves, treedef = jax.tree_util.tree_flatten(like)
     if manifest["n_leaves"] != len(leaves):
@@ -174,11 +162,7 @@ def restore_checkpoint(
     )
     out = []
     for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
-        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
-        meta = manifest["leaves"][i]
-        if verify and _sha256(arr) != meta["sha256"]:
-            raise IOError(f"checksum mismatch for leaf {i} in {d}")
-        arr = _from_storable(arr, meta["dtype"])
+        arr = read_leaf(d, i, manifest["leaves"][i], verify=verify)
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != target {ref.shape}"
@@ -188,3 +172,33 @@ def restore_checkpoint(
             x = jax.device_put(x, sh)
         out.append(x)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(
+    ckpt_dir: str,
+    like: Any,
+    shardings: Any = None,
+    verify: bool = True,
+) -> Optional[Tuple[int, Any]]:
+    """Restore the newest committed checkpoint, walking back past corrupt
+    ones.
+
+    On a checksum mismatch or truncated leaf in the newest checkpoint, the
+    next-older committed step is tried (warn + ``n_fallbacks`` counter)
+    instead of raising — one bad snapshot costs a few steps of replayed
+    training, not the job.  Returns ``(step, tree)`` or ``None`` if no
+    committed checkpoint restores cleanly.
+    """
+    global n_fallbacks
+    candidates = committed_dirs(ckpt_dir, _STEP_PREFIX)
+    for step, path in reversed(candidates):
+        try:
+            tree = restore_checkpoint(ckpt_dir, step, like, shardings, verify)
+            return step, tree
+        except (IOError, ValueError) as e:  # includes FileNotFoundError
+            n_fallbacks += 1
+            warnings.warn(
+                f"checkpoint {path} failed to restore ({e}); "
+                f"falling back to previous committed step"
+            )
+    return None

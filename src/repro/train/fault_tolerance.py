@@ -26,7 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 # StragglerMonitor``) is stable.
 from repro.faults.health import StragglerMonitor  # noqa: F401
 
-from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .checkpoint import restore_latest, save_checkpoint
 
 
 @dataclass
@@ -63,10 +63,12 @@ class FaultTolerantDriver:
         self.history: List[Dict] = []
 
     def _restore(self, state_like: Any) -> Tuple[Any, int]:
-        step = latest_step(self.cfg.ckpt_dir)
-        if step is None:
+        # restore_latest walks back past corrupt/truncated checkpoints, so
+        # one bad snapshot costs replayed steps rather than the whole job
+        restored = restore_latest(self.cfg.ckpt_dir, state_like)
+        if restored is None:
             return state_like, 0
-        state = restore_checkpoint(self.cfg.ckpt_dir, step, state_like)
+        step, state = restored
         return state, step
 
     def run(

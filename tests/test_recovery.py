@@ -1,0 +1,563 @@
+"""Crash-consistent serving state: snapshot/restore bit-identity, codec
+round-trips, corruption fallback, warm KV migration, recovery journal
+record/replay, bounded health transition log."""
+
+import dataclasses as dc
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.recovery.codec import (
+    from_storable,
+    pack_state,
+    sha256_array,
+    to_storable,
+    unpack_state,
+)
+from repro.recovery.journal import (
+    BACKOFF,
+    CRASH_DETECTED,
+    MIGRATE,
+    RecoveryJournal,
+    ReplayMismatch,
+)
+
+
+# ---------------------------------------------------------------------------
+# Codec (no JAX)
+# ---------------------------------------------------------------------------
+
+
+class TestCodec:
+    @settings(max_examples=20)
+    @given(
+        # shifted into >64-bit territory to exercise the bigint extension
+        ints=st.lists(
+            st.integers(-(2**62), 2**62).map(lambda x: (x << 70) + x),
+            max_size=8,
+        ),
+        f=st.floats(min_value=-1e300, max_value=1e300),
+        n=st.integers(0, 50),
+    )
+    def test_pack_state_roundtrip(self, ints, f, n):
+        state = {
+            "ints": ints,
+            "f": f,
+            "nested": {"xs": list(range(n)), "flag": True, "none": None},
+            "np_scalar": np.int64(n),
+        }
+        out = unpack_state(pack_state(state))
+        assert out["ints"] == ints
+        assert out["f"] == f
+        assert out["nested"] == {"xs": list(range(n)), "flag": True, "none": None}
+        assert out["np_scalar"] == n
+
+    def test_pcg64_state_roundtrips(self):
+        # the PCG64 state words are 128-bit ints — the whole reason the
+        # codec carries a bigint extension
+        rng = np.random.default_rng(1234)
+        rng.random(17)
+        st_ = rng.bit_generator.state
+        out = unpack_state(pack_state(st_))
+        rng2 = np.random.default_rng()
+        rng2.bit_generator.state = out
+        assert rng2.random(5).tolist() == rng.random(5).tolist()
+        # both generators advanced in lockstep from the restored state
+        assert rng2.bit_generator.state == rng.bit_generator.state
+
+    @pytest.mark.parametrize(
+        "dtype", ["float32", "int32", "uint8", "bfloat16", "float16"]
+    )
+    def test_storable_view_roundtrip(self, dtype):
+        import ml_dtypes  # noqa: F401  (registers bfloat16 with numpy)
+
+        arr = (np.arange(24, dtype=np.float64) / 7.0).reshape(4, 6)
+        arr = arr.astype(np.dtype(dtype))
+        storable, logical = to_storable(arr)
+        assert logical == dtype
+        back = from_storable(storable, logical)
+        assert back.dtype == arr.dtype
+        np.testing.assert_array_equal(
+            back.view(np.uint8), arr.view(np.uint8)
+        )
+        # checksum is over the stored bytes, so it is stable across views
+        assert sha256_array(storable) == sha256_array(to_storable(arr)[0])
+
+
+# ---------------------------------------------------------------------------
+# Recovery journal (no JAX)
+# ---------------------------------------------------------------------------
+
+
+class TestJournal:
+    def _journal(self):
+        j = RecoveryJournal()
+        j.record(1.0, CRASH_DETECTED, replica=0, n_orphans=2)
+        j.record(1.0, MIGRATE, req=5, target=1, handoff=0.002)
+        j.record(1.0, BACKOFF, req=6, delay=0.02, retry=1)
+        return j
+
+    def test_replay_consumes_in_order(self):
+        j = self._journal()
+        r = RecoveryJournal(entries=[dict(e) for e in j.entries]).start_replay()
+        assert r.peek_kind() == CRASH_DETECTED
+        assert r.record(1.0, CRASH_DETECTED)["n_orphans"] == 2
+        assert r.expect(1.0, MIGRATE)["target"] == 1
+        assert r.expect(1.0, BACKOFF)["delay"] == pytest.approx(0.02)
+        assert r.peek_kind() is None
+        r.finish_replay()
+
+    def test_replay_divergence_raises(self):
+        r = self._journal().start_replay()
+        with pytest.raises(ReplayMismatch):
+            r.expect(1.0, MIGRATE)  # recorded kind is crash_detected
+        r2 = self._journal().start_replay()
+        r2.expect(1.0, CRASH_DETECTED)
+        with pytest.raises(ReplayMismatch):
+            r2.finish_replay()  # two entries unconsumed
+
+    def test_save_load_roundtrip(self, tmp_path):
+        j = self._journal()
+        p = j.save(str(tmp_path / "journal.json"))
+        assert RecoveryJournal.load(p) == j
+
+    def test_bad_version_rejected(self):
+        with pytest.raises(ValueError):
+            RecoveryJournal.from_dict({"version": 99, "entries": []})
+
+
+# ---------------------------------------------------------------------------
+# Bounded health transition log (no JAX)
+# ---------------------------------------------------------------------------
+
+
+class TestHealthTransitionBound:
+    def test_log_capped_with_drop_counter(self):
+        from repro.faults import HealthMonitor
+
+        mon = HealthMonitor(
+            threshold=2.0, warmup=1, confirm=1, recover=1, max_transitions=4
+        )
+        t = 0.0
+        for _ in range(3):  # baseline
+            mon.observe("r", 1.0, t=(t := t + 1))
+        for _ in range(10):  # flap in blocks: degrade, clear, degrade, ...
+            for _ in range(3):
+                mon.observe("r", 50.0, t=(t := t + 1))
+            for _ in range(3):
+                mon.observe("r", 1.0, t=(t := t + 1))
+        assert len(mon.transitions) == 4
+        assert mon.n_transitions_dropped > 0
+        # time-to-clear still derivable from the retained window
+        last = mon.transitions[-1]
+        assert mon.time_to_clear("r", last.t - 0.5) is not None
+
+    def test_state_dict_roundtrip(self):
+        from repro.faults import HealthMonitor
+
+        a = HealthMonitor(threshold=2.0, warmup=1, confirm=1, recover=1)
+        for i in range(6):
+            a.observe("r", 1.0 if i < 4 else 10.0, t=float(i))
+        b = HealthMonitor(threshold=2.0, warmup=1, confirm=1, recover=1)
+        b.load_state_dict(a.state_dict())
+        assert b.status("r") == a.status("r")
+        assert [dc.asdict(t) for t in b.transitions] == [
+            dc.asdict(t) for t in a.transitions
+        ]
+        # the restored monitor keeps evolving identically
+        assert a.observe("r", 10.0, t=6.0) == b.observe("r", 10.0, t=6.0)
+
+    def test_invalid_cap_rejected(self):
+        from repro.faults import HealthMonitor
+
+        with pytest.raises(ValueError):
+            HealthMonitor(max_transitions=0)
+
+
+# ---------------------------------------------------------------------------
+# Request serialization (no JAX)
+# ---------------------------------------------------------------------------
+
+
+class TestRequestState:
+    def test_roundtrip_and_id_advance(self):
+        import repro.serving.request as reqmod
+        from repro.serving import Request
+
+        r = Request(prompt=[1, 2, 3], max_new_tokens=4, eos_id=2)
+        r.generated = [9, 8]
+        r.prefill_done = 3
+        r.slot = 1
+        back = Request.from_state(r.to_state())
+        assert back.to_state() == r.to_state()
+        assert back.position == r.position
+        # restoring must advance the allocator past every restored id
+        assert reqmod._next_id > r.req_id
+        assert Request(prompt=[1]).req_id > r.req_id
+
+
+# ---------------------------------------------------------------------------
+# Train-checkpoint fallback (JAX, cheap)
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointFallback:
+    def test_restore_latest_walks_past_corruption(self, tmp_path):
+        import jax
+        import jax.numpy as jnp
+
+        import repro.train.checkpoint as ckpt
+
+        t1 = {"a": jnp.arange(4.0)}
+        t2 = {"a": jnp.arange(4.0) + 1}
+        ckpt.save_checkpoint(str(tmp_path), 1, t1)
+        d2 = ckpt.save_checkpoint(str(tmp_path), 2, t2)
+        # corrupt the newest committed checkpoint
+        leaf = os.path.join(d2, "leaf_00000.npy")
+        arr = np.load(leaf)
+        arr.ravel()[0] += 1
+        np.save(leaf, arr)
+
+        n0 = ckpt.n_fallbacks
+        with pytest.warns(UserWarning, match="falling back"):
+            restored = ckpt.restore_latest(
+                str(tmp_path), jax.eval_shape(lambda: t1)
+            )
+        assert restored is not None
+        step, tree = restored
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(t1["a"]))
+        assert ckpt.n_fallbacks == n0 + 1
+        # the explicit-step API still hard-fails (pinned contract)
+        with pytest.raises(IOError):
+            ckpt.restore_checkpoint(
+                str(tmp_path), 2, jax.eval_shape(lambda: t1)
+            )
+
+    def test_restore_latest_none_when_empty(self, tmp_path):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.train.checkpoint import restore_latest
+
+        assert (
+            restore_latest(
+                str(tmp_path), jax.eval_shape(lambda: {"a": jnp.ones(2)})
+            )
+            is None
+        )
+
+
+# ---------------------------------------------------------------------------
+# Warm KV migration + journal replay (discrete-event sim; no JAX)
+# ---------------------------------------------------------------------------
+
+
+_KW = dict(horizon=3.0, rate_per_replica=20.0, n_replicas=2)
+
+
+def _crash_run(migrate, seed=0, journal=None, scenario="replica-crash-migrate"):
+    from repro.cluster import ClusterSimulator, LengthModel, PoissonProcess
+    from repro.core import b200_pim_system
+    from repro.faults import FaultInjector, make_plan
+    from repro.sim import SIM_MODELS
+
+    specs = PoissonProcess(
+        rate=_KW["rate_per_replica"] * _KW["n_replicas"],
+        lengths=LengthModel(kind="lognormal", prompt_mean=512, output_mean=64),
+        seed=seed + 7,
+    ).generate(_KW["horizon"])
+    sim = ClusterSimulator(
+        SIM_MODELS["qwen3-30b"],
+        b200_pim_system(),
+        policy="sieve",
+        n_replicas=_KW["n_replicas"],
+        seed=seed,
+        detect_latency=0.05,
+        max_retries=3,
+        migrate_kv=migrate,
+    )
+    plan = make_plan(
+        scenario, _KW["horizon"], n_replicas=_KW["n_replicas"], seed=seed
+    )
+    return sim.run_requests(
+        list(specs), _KW["horizon"], injector=FaultInjector(plan),
+        journal=journal,
+    )
+
+
+class TestWarmMigration:
+    def test_conservation_and_no_duplicate_completion(self):
+        res = _crash_run(migrate=True)
+        assert res.n_migrations > 0
+        assert len(res.completed) + len(res.dropped) == res.n_submitted
+        ids = [r.spec.req_id for r in res.completed] + [
+            r.spec.req_id for r in res.dropped
+        ]
+        assert len(ids) == len(set(ids))  # exactly-once outcome per request
+
+    def test_migrated_requests_keep_progress(self):
+        res = _crash_run(migrate=True)
+        migrated = {
+            e["req"] for e in res.journal.entries if e["kind"] == MIGRATE
+        }
+        assert migrated
+        by_id = {r.spec.req_id: r for r in res.completed}
+        for rid in migrated:
+            r = by_id[rid]
+            assert r.migrations >= 1
+            assert r.retries == 0  # never cold-reset: progress was kept
+            assert r.generated == r.spec.output_len
+            assert r.finish_time is not None
+
+    def test_backoff_jitter_deterministic_per_seed(self):
+        a = _crash_run(migrate=False, scenario="replica-crash")
+        b = _crash_run(migrate=False, scenario="replica-crash")
+        assert a.journal == b.journal
+        assert [r.spec.req_id for r in a.completed] == [
+            r.spec.req_id for r in b.completed
+        ]
+        delays = [
+            e["delay"] for e in a.journal.entries if e["kind"] == BACKOFF
+        ]
+        assert delays and len(set(delays)) > 1  # actually jittered
+
+    def test_journal_replay_bit_identical(self):
+        live = _crash_run(migrate=True)
+        replay = RecoveryJournal(
+            entries=[dict(e) for e in live.journal.entries]
+        ).start_replay()
+        replayed = _crash_run(migrate=True, journal=replay)
+        assert replayed.n_migrations == live.n_migrations
+        assert [r.spec.req_id for r in replayed.completed] == [
+            r.spec.req_id for r in live.completed
+        ]
+        assert [r.finish_time for r in replayed.completed] == [
+            r.finish_time for r in live.completed
+        ]
+
+    def test_tampered_journal_raises_on_replay(self):
+        live = _crash_run(migrate=True)
+        entries = [dict(e) for e in live.journal.entries]
+        entries[0]["t"] += 0.5  # recorded detection time no longer matches
+        with pytest.raises(ReplayMismatch):
+            _crash_run(
+                migrate=True,
+                journal=RecoveryJournal(entries=entries).start_replay(),
+            )
+
+    def test_warm_beats_cold_on_orphan_latency(self):
+        from repro.faults import run_cluster_chaos
+
+        r = run_cluster_chaos("replica-crash-migrate", seed=0, **_KW)
+        assert r["n_lost"] == 0
+        rec = r["recovery"]
+        assert rec["n_migrations"] > 0
+        assert rec["cold_n_lost"] == 0
+        assert rec["orphan_e2e_mean"] < rec["cold_orphan_e2e_mean"]
+        assert rec["journal"]["entries"]
+
+    def test_migrate_chaos_deterministic(self):
+        from repro.faults import run_cluster_chaos
+
+        a = run_cluster_chaos("replica-crash-migrate", seed=3, **_KW)
+        b = run_cluster_chaos("replica-crash-migrate", seed=3, **_KW)
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Engine snapshot/restore bit-identity (JAX)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm(seed=0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models import LM
+
+    arch = get_arch("qwen3-moe-30b-a3b").reduced()
+    arch = dc.replace(
+        arch, moe=dc.replace(arch.moe, expert_exec="dual_path_cost")
+    )
+    lm = LM(arch, dtype=jnp.float32)
+    return lm, lm.init(jax.random.PRNGKey(seed))
+
+
+def _build_engine(lm, params, **kw):
+    from repro.serving import BatchingConfig, ServingEngine
+
+    kw.setdefault("policy", "sieve")
+    kw.setdefault("cost_source", "model")
+    kw.setdefault("sieve_refresh_every", 4)
+    kw.setdefault("seed", 7)
+    return ServingEngine(
+        lm, params, BatchingConfig(n_slots=4, max_seq=64), **kw
+    )
+
+
+def _feed(eng, n_req=12, seed=1):
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    for _ in range(n_req):
+        eng.submit(
+            Request(
+                prompt=[int(x) for x in rng.integers(1, 255, size=8)],
+                max_new_tokens=6,
+            )
+        )
+
+
+class TestEngineSnapshot:
+    def test_restore_continues_bit_identically(self, tmp_path):
+        import repro.serving.request as reqmod
+
+        lm, params = _tiny_lm()
+        n_total, n_half = 16, 8
+
+        reqmod._next_id = 0
+        ref = _build_engine(lm, params)
+        _feed(ref)
+        tokens_ref = []
+        for _ in range(n_total):
+            for r in ref.step():
+                tokens_ref.append(list(r.generated))
+        jit_ref = ref._decode._cache_size() + ref._prefill_chunk._cache_size()
+
+        reqmod._next_id = 0
+        victim = _build_engine(lm, params)
+        _feed(victim)
+        tokens_resumed = []
+        for _ in range(n_half):
+            for r in victim.step():
+                tokens_resumed.append(list(r.generated))
+        victim.snapshot(str(tmp_path))
+        del victim
+
+        # fresh engine = fresh jit wrappers (the fresh-process proxy)
+        resumed = _build_engine(lm, params)
+        sid = resumed.restore(str(tmp_path))
+        assert sid == n_half
+        for _ in range(n_total - n_half):
+            for r in resumed.step():
+                tokens_resumed.append(list(r.generated))
+
+        assert tokens_resumed == tokens_ref
+        assert resumed.stats.partitions == ref.stats.partitions
+        assert resumed.sieve_refreshes == ref.sieve_refreshes
+        assert resumed.cost_table.version == ref.cost_table.version
+        # restoring must not add a single jit-cache miss over the
+        # uninterrupted run's compile set
+        jit_resumed = (
+            resumed._decode._cache_size()
+            + resumed._prefill_chunk._cache_size()
+        )
+        assert jit_resumed <= jit_ref
+
+    def test_restore_under_active_fault_plan(self, tmp_path):
+        """Snapshot taken while a scripted PIM brownout is mid-window:
+        the restored engine (with the fault re-armed at the same step)
+        generates the same tokens as an uninterrupted faulted run — the
+        measured split stays an equivalence-preserving schedule choice
+        across the crash."""
+        import repro.serving.request as reqmod
+        from repro.faults import make_plan
+        from repro.faults.chaos import EngineChaos
+        from repro.telemetry import Telemetry
+
+        lm, params = _tiny_lm()
+        n_total, n_half = 16, 6  # fault window is steps [4, 8)
+        plan = make_plan("pim-brownout-engine", float(n_total), seed=0)
+        assert plan.events[0].t <= n_half < plan.events[0].t_clear
+
+        def measured(seed_reset=True):
+            if seed_reset:
+                reqmod._next_id = 0
+            eng = _build_engine(
+                lm, params, cost_source="measured",
+                telemetry=Telemetry(enabled=True, capacity=1 << 16),
+            )
+            return eng
+
+        ref_chaos = EngineChaos(measured(), plan)
+        _feed(ref_chaos.engine)
+        tokens_ref = []
+        for _ in range(n_total):
+            for r in ref_chaos.step():
+                tokens_ref.append(list(r.generated))
+
+        victim_chaos = EngineChaos(measured(), plan)
+        _feed(victim_chaos.engine)
+        tokens_resumed = []
+        for _ in range(n_half):
+            for r in victim_chaos.step():
+                tokens_resumed.append(list(r.generated))
+        victim_chaos.engine.snapshot(str(tmp_path))
+
+        resumed_chaos = EngineChaos(measured(seed_reset=False), plan)
+        # re-arm the injector to the snapshot step (the fault schedule is
+        # scripted state outside the engine, like the fault itself)
+        for phase, ev in resumed_chaos.injector.pop_due(float(n_half - 1)):
+            resumed_chaos._apply(phase, ev)
+        resumed_chaos.engine.restore(str(tmp_path))
+        for _ in range(n_total - n_half):
+            for r in resumed_chaos.step():
+                tokens_resumed.append(list(r.generated))
+
+        assert tokens_resumed == tokens_ref
+
+    def test_corrupt_snapshot_falls_back_to_previous(self, tmp_path):
+        import repro.recovery.snapshot as snap
+        import repro.serving.request as reqmod
+
+        lm, params = _tiny_lm()
+        reqmod._next_id = 0
+        eng = _build_engine(lm, params)
+        _feed(eng)
+        for _ in range(4):
+            eng.step()
+        eng.snapshot(str(tmp_path))  # snap_00000004
+        for _ in range(4):
+            eng.step()
+        p2 = eng.snapshot(str(tmp_path))  # snap_00000008
+        # corrupt the newest snapshot's first leaf
+        leaf = os.path.join(p2, "leaf_00000.npy")
+        arr = np.load(leaf)
+        arr.view(np.uint8).ravel()[0] ^= 0xFF
+        np.save(leaf, arr)
+
+        n0 = snap.n_fallbacks
+        fresh = _build_engine(lm, params)
+        with pytest.warns(UserWarning, match="falling back"):
+            sid = fresh.restore(str(tmp_path))
+        assert sid == 4
+        assert fresh.stats.steps == 4
+        assert snap.n_fallbacks == n0 + 1
+        # explicit snap_id restore of the corrupt snapshot hard-fails
+        fresh2 = _build_engine(lm, params)
+        with pytest.raises(IOError):
+            fresh2.restore(str(tmp_path), snap_id=8)
+
+    def test_snapshot_keep_prunes_old(self, tmp_path):
+        from repro.recovery.snapshot import list_snapshots
+
+        lm, params = _tiny_lm()
+        eng = _build_engine(lm, params)
+        _feed(eng, n_req=4)
+        for k in range(3):
+            eng.step()
+            eng.snapshot(str(tmp_path), keep=2)
+        ids = [sid for sid, _ in list_snapshots(str(tmp_path))]
+        assert len(ids) == 2
+        assert ids == sorted(ids)
+
+    def test_empty_dir_raises(self, tmp_path):
+        lm, params = _tiny_lm()
+        eng = _build_engine(lm, params)
+        with pytest.raises(FileNotFoundError):
+            eng.restore(str(tmp_path))
