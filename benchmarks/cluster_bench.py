@@ -202,7 +202,8 @@ def run_chaos_suite(args) -> dict:
         else:
             assert sc in ENGINE_SCENARIOS
             r = run_engine_chaos(
-                sc, n_steps=n_steps, seed=args.seed, refresh=refresh
+                sc, n_steps=n_steps, seed=args.seed, refresh=refresh,
+                paged=args.paged,
             )
             r.pop("tokens", None)  # bulky; pinned by tests, not the report
             print(
@@ -233,6 +234,7 @@ def run_chaos_suite(args) -> dict:
         "model": args.model,
         "horizon": horizon,
         "engine_steps": n_steps,
+        "paged": args.paged,
         "seed": args.seed,
         "wall_time_s": time.perf_counter() - t0,
         "scenarios": by_scenario,
@@ -277,6 +279,11 @@ def main(argv=None) -> dict:
     ap.add_argument(
         "--check", action="store_true",
         help="with --chaos: exit nonzero if any recovery invariant fails",
+    )
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="with --chaos: run engine scenarios on the paged "
+        "(block-table) KV cache instead of the dense layout",
     )
     ap.add_argument("--out", default=None)
     add_trace_arg(ap)

@@ -7,6 +7,12 @@ motivates the Sieve dual path.  TPU projections live in §Roofline.
 Runs standalone with a CLI (``--quick`` is the CI perf-smoke mode: kernel
 rows only, fewer iters, JSON artifact to ``benchmarks/out``) or through
 ``benchmarks.run`` alongside the paper figures.
+
+``--check`` gates the paged-decode padding win: the pool-major XLA twin at
+mixed sequence lengths must beat ``decode_attention_ref`` padded to
+max_seq by the committed floor (and stay within 2x of the baseline ratio
+in ``benchmarks/BENCH_kernel.json``; regenerate with
+``--quick --update-baseline`` after an intentional change).
 """
 
 from __future__ import annotations
@@ -23,12 +29,22 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.kernels import ops, ref
 from repro.models import LM
+from repro.models import attention as attn_lib
 
 try:
     from .common import Rows, add_trace_arg, time_fn, trace_session
 except ImportError:  # invoked as a script: python benchmarks/kernel_bench.py
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     from common import Rows, add_trace_arg, time_fn, trace_session
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_PATH = os.path.join(REPO, "benchmarks", "BENCH_kernel.json")
+
+# paged-decode gate: the pool-major XLA twin at mixed sequence lengths
+# must beat the dense reference padded to max_seq by at least this much
+# (compute/traffic ∝ allocated pool blocks, not B×max_seq) — the
+# serving-level padding win the paged KV cache exists for
+GATE_MIN_PAGED_TWIN_SPEEDUP = 1.5
 
 
 def kernels() -> Rows:
@@ -87,6 +103,91 @@ def kernels() -> Rows:
         warmup=1, iters=3,
     )
     rows.add("kernel/decode_attention_ref", us_ref, "")
+
+    # flash decode at ragged (mixed) lengths: T=1024 with bt=256 means the
+    # short rows skip dead tiles entirely — plus the T % bt != 0 tail path
+    mixed = np.array([64, 128, 256, 384, 512, 640, 896, 1024])
+    lens_mixed = jnp.asarray(mixed, jnp.int32)
+    us_ragged = time_fn(
+        lambda: ops.decode_attention(q, ck, cv, lens_mixed, bt=256,
+                                     interpret=True).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    rows.add("kernel/flash_decode_ragged_interp", us_ragged,
+             f"mean_len={mixed.mean():.0f};ratio_vs_ref={us_ragged / us_ref:.2f}")
+    us_split = time_fn(
+        lambda: ops.decode_attention(q, ck, cv, lens_mixed, bt=256,
+                                     n_splits=4,
+                                     interpret=True).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    rows.add("kernel/flash_decode_split4_interp", us_split,
+             f"ratio_vs_ref={us_split / us_ref:.2f}")
+    return rows
+
+
+def paged_decode() -> Rows:
+    """Paged (block-table) decode attention: the Pallas kernel in interpret
+    mode and its pool-major XLA twin (the CPU serving path), each against
+    ``decode_attention_ref`` padded to max_seq.  The twin's speedup is the
+    padding win — compute ∝ allocated blocks, not B×max_seq — and is the
+    gated number (``--check``)."""
+    rows = Rows()
+    B, H, Kv, dh, T, page = 8, 16, 4, 64, 1024, 64
+    mixed = np.array([64, 128, 256, 384, 512, 640, 896, 1024])
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, dh), jnp.float32)
+    ck = jax.random.normal(ks[1], (B, T, Kv, dh), jnp.float32)
+    cv = jax.random.normal(ks[2], (B, T, Kv, dh), jnp.float32)
+    lens = jnp.asarray(mixed, jnp.int32)
+
+    # pack the dense cache into a block pool sized to the allocated blocks
+    nb = T // page
+    n_pool = int((-(-mixed // page)).sum()) + 1  # +1 trash block
+    tab = np.zeros((B, nb), np.int32)
+    owner = np.full((n_pool,), -1, np.int32)
+    bpos = np.zeros((n_pool,), np.int32)
+    pool_k = np.zeros((n_pool, page, Kv, dh), np.float32)
+    pool_v = np.zeros_like(pool_k)
+    ck_np, cv_np = np.asarray(ck), np.asarray(cv)
+    nxt = 1
+    for b in range(B):
+        for j in range(-(-int(mixed[b]) // page)):
+            tab[b, j] = nxt
+            owner[nxt], bpos[nxt] = b, j
+            pool_k[nxt] = ck_np[b, j * page:(j + 1) * page]
+            pool_v[nxt] = cv_np[b, j * page:(j + 1) * page]
+            nxt += 1
+    pk, pv = jnp.asarray(pool_k), jnp.asarray(pool_v)
+    tab_j = jnp.asarray(tab)
+    owner_j, bpos_j = jnp.asarray(owner), jnp.asarray(bpos)
+    pool_frac = (n_pool - 1) / (B * nb)
+
+    us_ref = time_fn(
+        lambda: ref.decode_attention_ref(q, ck, cv, lens).block_until_ready(),
+        warmup=1, iters=5,
+    )
+    rows.add("kernel/paged_ref_padded", us_ref,
+             f"kv_tokens={B * T};pool_tokens={(n_pool - 1) * page}")
+    us_paged = time_fn(
+        lambda: ops.decode_attention_paged(
+            q, pk, pv, tab_j, lens, interpret=True
+        ).block_until_ready(),
+        warmup=1, iters=3,
+    )
+    rows.add("kernel/paged_decode_interp", us_paged,
+             f"page={page};ratio_vs_ref={us_paged / us_ref:.2f}")
+
+    twin = jax.jit(attn_lib.paged_decode_attention_xla)
+    q4 = q[:, None]
+    us_twin = time_fn(
+        lambda: twin(q4, pk, pv, owner_j, bpos_j, lens).block_until_ready(),
+        warmup=1, iters=5,
+    )
+    rows.add(
+        "kernel/paged_decode_xla_twin", us_twin,
+        f"pool_frac={pool_frac:.2f};twin_speedup={us_ref / us_twin:.2f}",
+    )
     return rows
 
 
@@ -176,7 +277,7 @@ def model_steps() -> Rows:
     return rows
 
 
-ALL = [kernels, fused_swiglu, model_steps]
+ALL = [kernels, paged_decode, fused_swiglu, model_steps]
 
 
 def main(argv=None) -> dict:
@@ -186,12 +287,22 @@ def main(argv=None) -> dict:
         help="CI perf-smoke mode: kernel rows only (skips model steps)",
     )
     ap.add_argument(
+        "--check", action="store_true",
+        help="exit nonzero if the paged XLA twin's mixed-length speedup "
+        f"over the padded reference falls below "
+        f"{GATE_MIN_PAGED_TWIN_SPEEDUP}x or regresses >2x vs the baseline",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help=f"also write results to {BASELINE_PATH}",
+    )
+    ap.add_argument(
         "--out", default=os.path.join("benchmarks", "out", "kernel_bench.json")
     )
     add_trace_arg(ap)
     args = ap.parse_args(argv)
 
-    fns = [kernels, fused_swiglu] if args.quick else list(ALL)
+    fns = [kernels, paged_decode, fused_swiglu] if args.quick else list(ALL)
     print("name,us_per_call,derived")
     records = []
     with trace_session(args.trace_out, "kernel_bench") as tel:
@@ -200,7 +311,14 @@ def main(argv=None) -> dict:
                 rows = fn()
             rows.emit()
             records.extend(rows.to_records())
+    by_name = {r["name"]: r for r in records}
     report = {"quick": args.quick, "rows": records}
+    ref_row = by_name.get("kernel/paged_ref_padded")
+    twin_row = by_name.get("kernel/paged_decode_xla_twin")
+    if ref_row and twin_row:
+        report["paged_twin_speedup"] = round(
+            ref_row["us_per_call"] / twin_row["us_per_call"], 3
+        )
 
     out_dir = os.path.dirname(args.out)
     if out_dir:
@@ -208,6 +326,41 @@ def main(argv=None) -> dict:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}", file=sys.stderr)
+    if args.update_baseline:
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {BASELINE_PATH}", file=sys.stderr)
+
+    if args.check:
+        failures = []
+        got = report.get("paged_twin_speedup")
+        if got is None:
+            failures.append("paged decode rows missing from this run")
+        elif got < GATE_MIN_PAGED_TWIN_SPEEDUP:
+            failures.append(
+                f"paged XLA twin speedup {got:.2f}x < "
+                f"{GATE_MIN_PAGED_TWIN_SPEEDUP}x floor over the padded "
+                "reference at mixed lengths"
+            )
+        if got is not None and os.path.exists(BASELINE_PATH):
+            with open(BASELINE_PATH) as f:
+                base = json.load(f)
+            want = base.get("paged_twin_speedup")
+            # in-run ratio, machine-independent (cf. moe_bench gates)
+            if want and got < want / 2.0:
+                failures.append(
+                    f"paged XLA twin speedup {got:.2f}x < baseline "
+                    f"{want:.2f}x / 2"
+                )
+        elif got is not None:
+            print("no committed baseline; floor check only", file=sys.stderr)
+        if failures:
+            print(
+                "PERF REGRESSION:\n  " + "\n  ".join(failures),
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        print("perf check OK", file=sys.stderr)
     return report
 
 

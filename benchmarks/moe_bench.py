@@ -40,6 +40,14 @@ as measured step time, not just per-kernel microbenchmarks.  The
 machine-independent ``decode_step_ratio`` (dense/dual step time) is
 baseline-gated.
 
+The **paged-KV cells** (``decode_step/paged_kv`` vs
+``decode_step/dense_kv_mixed``) serve mixed-length prompts against a long
+``max_seq`` through the same dual-path proxy engine with only the KV
+layout switched: dense pays attention compute over ``n_slots × max_seq``
+padding, paged pays per allocated pool block (the pool-major XLA twin).
+The machine-independent ``decode_step_paged_ratio`` (dense/paged step
+time) is baseline-gated alongside ``decode_step_ratio``.
+
 The **telemetry-overhead cell** (``decode_step/telemetry_overhead``)
 times the same decode step with telemetry explicitly disabled vs an
 enabled recording instance; the in-run ``overhead_pct`` must stay under
@@ -479,6 +487,100 @@ def run_decode_bench(iters: int, seed: int = 0) -> dict:
     return cells
 
 
+# paged-KV decode cells: mixed prompt lengths against a long max_seq, so
+# the dense layout pays attention compute/traffic over n_slots × max_seq
+# padding while the paged layout pays only for allocated pool blocks.
+# The cells use a KV-heavier attention stack than the MoE-dominated
+# decode_step proxy — paging targets exactly the regime where the KV
+# cache, not expert execution, is the step's biggest tensor.
+PAGED_MAX_SEQ = 1024
+PAGED_PAGE = 64
+PAGED_PROMPTS = (8, 16, 32, 64, 96, 128, 160, 224)
+
+
+def run_paged_decode_bench(iters: int, seed: int = 0) -> dict:
+    """Paged vs dense KV layout through ``ServingEngine.step`` at mixed
+    sequence lengths (``PAGED_PROMPTS`` against ``max_seq=PAGED_MAX_SEQ``).
+
+    Same arch and expert_exec (dual_path) in both cells — the only
+    difference is the KV layout (the paged pool is demand-sized:
+    enough blocks for every prompt + generation budget, vs the dense
+    layout's ``n_slots × max_seq`` allocation), so the cell ratio
+    (``decode_step_paged_ratio``) isolates the attention padding win the
+    block pool buys on CPU hosts (pool-major XLA twin; the Pallas paged
+    kernel is pinned equivalent by tests/test_paged_kv.py)."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import LM
+    from repro.serving import BatchingConfig, Request, ServingEngine
+
+    assert len(PAGED_PROMPTS) == DECODE_SLOTS
+    arch = _decode_arch("dual_path")
+    arch = dc.replace(
+        arch,
+        attn=dc.replace(arch.attn, n_heads=8, n_kv_heads=4, d_head=64),
+    )
+    lm = LM(arch, dtype=jnp.float32)
+    p = lm.init(jax.random.PRNGKey(seed))
+    max_new = iters + 8
+    # demand-sized pool: blocks for every prompt + generation budget (+1
+    # trash block, + one slack block per slot)
+    pool_blocks = 1 + sum(
+        -(-(plen + max_new) // PAGED_PAGE) + 1 for plen in PAGED_PROMPTS
+    )
+
+    cells = {}
+    for paged in (False, True):
+        eng = ServingEngine(
+            lm, p, BatchingConfig(
+                n_slots=DECODE_SLOTS, max_seq=PAGED_MAX_SEQ, paged=paged,
+                page_size=PAGED_PAGE, pool_blocks=pool_blocks,
+            ),
+        )
+        rng = np.random.default_rng(seed)
+        for plen in PAGED_PROMPTS:
+            eng.submit(Request(
+                prompt=list(rng.integers(0, 500, size=plen)),
+                max_new_tokens=max_new,
+            ))
+        t0 = time.perf_counter()
+        eng.step()  # admits + prefills, compiles prefill
+        while any(
+            r.prefill_done < len(r.prompt) for r in eng.sched.active
+        ):
+            eng.step()  # chunked prefill of the long prompts
+        first = time.perf_counter() - t0
+        eng.step()  # first batched decode: compiles the decode step
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            eng.step()  # pure decode
+            ts.append(time.perf_counter() - t0)
+        assert eng.stats.decode_tokens >= (iters + 1) * DECODE_SLOTS
+        name = "decode_step/paged_kv" if paged else "decode_step/dense_kv_mixed"
+        cells[name] = {
+            "step_ms": round(float(np.min(ts)) * 1e3, 3),
+            "step_ms_median": round(float(np.median(ts)) * 1e3, 3),
+            "first_step_ms": round(first * 1e3, 1),
+            "decode_tokens_per_step": DECODE_SLOTS,
+        }
+        if paged:
+            used = eng.paged.n_pool - 1 - eng.paged.n_free
+            cells[name]["kv_tokens_touched"] = used * PAGED_PAGE
+        else:
+            cells[name]["kv_tokens_touched"] = DECODE_SLOTS * PAGED_MAX_SEQ
+    cells["decode_step/paged_kv"]["note"] = (
+        f"mixed prompts {list(PAGED_PROMPTS)} vs max_seq={PAGED_MAX_SEQ}, "
+        f"page={PAGED_PAGE}, demand-sized pool ({pool_blocks} blocks); "
+        "KV-heavy dual_path proxy (8 heads, 4 KV heads, d_head=64) — "
+        "only the KV layout differs between the two cells"
+    )
+    return cells
+
+
 def run_telemetry_overhead_bench(iters: int, seed: int = 0) -> dict:
     """Telemetry on-vs-off overhead on the decode_step hot path.
 
@@ -582,6 +684,8 @@ def main(argv=None) -> dict:
             cells = run_bench(batch_sizes, iters, seed=args.seed)
         with tel.span("bench/decode_step"):
             cells.update(run_decode_bench(decode_iters, seed=args.seed))
+        with tel.span("bench/paged_decode_step"):
+            cells.update(run_paged_decode_bench(decode_iters, seed=args.seed))
         with tel.span("bench/telemetry_overhead"):
             cells.update(
                 run_telemetry_overhead_bench(
@@ -591,6 +695,11 @@ def main(argv=None) -> dict:
     decode_ratio = round(
         cells["decode_step/dense"]["step_ms"]
         / cells["decode_step/dual_path"]["step_ms"],
+        3,
+    )
+    paged_ratio = round(
+        cells["decode_step/dense_kv_mixed"]["step_ms"]
+        / cells["decode_step/paged_kv"]["step_ms"],
         3,
     )
     telemetry_overhead = cells["decode_step/telemetry_overhead"]["overhead_pct"]
@@ -627,6 +736,7 @@ def main(argv=None) -> dict:
         "gate_speedup_cost": cells[gate_cell]["cost_speedup"],
         "gate_speedup_fused": cells[gate_cell]["fused_speedup"],
         "decode_step_ratio": decode_ratio,
+        "decode_step_paged_ratio": paged_ratio,
         "telemetry_overhead_pct": telemetry_overhead,
     }
     print(json.dumps(report, indent=1))
@@ -692,6 +802,13 @@ def main(argv=None) -> dict:
                 failures.append(
                     "decode_step: dense/dual step-time ratio "
                     f"{got_decode:.2f} < baseline {want_decode:.2f} / 2"
+                )
+            want_paged = base.get("decode_step_paged_ratio")
+            got_paged = report["decode_step_paged_ratio"]
+            if want_paged and got_paged < want_paged / 2.0:
+                failures.append(
+                    "decode_step: dense-KV/paged-KV mixed-length step-time "
+                    f"ratio {got_paged:.2f} < baseline {want_paged:.2f} / 2"
                 )
             # compile-time drift is machine-dependent: warn, don't gate
             base_cells = base.get("cells", {})

@@ -27,13 +27,13 @@ import tempfile
 import time
 
 
-def build_engine(lm, params, seed: int):
+def build_engine(lm, params, seed: int, paged: bool = False):
     from repro.serving import BatchingConfig, ServingEngine
 
     return ServingEngine(
         lm,
         params,
-        BatchingConfig(n_slots=4, max_seq=64),
+        BatchingConfig(n_slots=4, max_seq=64, paged=paged, page_size=8),
         policy="sieve",
         cost_source="model",
         sieve_refresh_every=4,
@@ -61,6 +61,12 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=24, help="total engine steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
+        "--paged", action="store_true",
+        help="serve with the paged (block-table) KV cache; the snapshot "
+        "then carries block-table state and the restored engine must "
+        "continue bit-identically through the block pool",
+    )
+    ap.add_argument(
         "--out", default=os.path.join("benchmarks", "out", "recovery_smoke.json")
     )
     args = ap.parse_args(argv)
@@ -86,7 +92,7 @@ def main(argv=None) -> int:
 
     # ---- uninterrupted reference run ------------------------------------
     reqmod._next_id = 0  # identical request ids across both runs
-    ref = build_engine(lm, params, seed=7)
+    ref = build_engine(lm, params, seed=7, paged=args.paged)
     feed(ref, n_req, seed=1)
     tokens_ref = []
     for _ in range(n_total):
@@ -96,7 +102,7 @@ def main(argv=None) -> int:
 
     # ---- interrupted run: snapshot at the half-way point ----------------
     reqmod._next_id = 0
-    victim = build_engine(lm, params, seed=7)
+    victim = build_engine(lm, params, seed=7, paged=args.paged)
     feed(victim, n_req, seed=1)
     tokens_resumed = []
     for _ in range(n_half):
@@ -107,7 +113,7 @@ def main(argv=None) -> int:
     del victim  # "crash": the engine object is gone; only the snapshot survives
 
     # fresh engine = fresh jit wrappers = fresh-process proxy
-    resumed = build_engine(lm, params, seed=7)
+    resumed = build_engine(lm, params, seed=7, paged=args.paged)
     snap_id = resumed.restore(snap_dir)
     for _ in range(n_total - n_half):
         for r in resumed.step():
@@ -146,6 +152,7 @@ def main(argv=None) -> int:
 
     report = {
         "mode": "recovery-smoke",
+        "paged": args.paged,
         "steps": n_total,
         "snapshot_step": n_half,
         "snapshot_id": snap_id,

@@ -421,6 +421,7 @@ def run_engine_chaos(
     n_slots: int = 4,
     magnitude: Optional[float] = None,
     telemetry=None,
+    paged: bool = False,
 ) -> Dict:
     """Build a tiny measured ``dual_path_cost`` engine, drive it for
     ``n_steps`` under ``scenario``, and return the recovery summary plus
@@ -452,7 +453,7 @@ def run_engine_chaos(
     eng = ServingEngine(
         lm,
         params,
-        BatchingConfig(n_slots=n_slots, max_seq=64),
+        BatchingConfig(n_slots=n_slots, max_seq=64, paged=paged, page_size=8),
         policy="sieve",
         telemetry=tel,
         cost_source="measured",
@@ -480,6 +481,7 @@ def run_engine_chaos(
 
     out = chaos.summary()
     out["refresh"] = refresh
+    out["paged"] = paged
     out["tokens"] = tokens
     return out
 

@@ -24,10 +24,12 @@ Both keep the grouped-GEMM scalar-prefetch contract (``sizes`` +
 ``rhs_of_group`` tile→group tables) and the dead-tile MXU skip: tiles with
 no live rows run none of the three dots.
 
-VMEM budget: the down projection keeps a full ``(bm, d_model)`` fp32
-accumulator plus one ``(bf, d_model)`` weight tile resident, so ``bm`` and
-``bf`` must be sized such that ``bm*d_model*4 + bf*d_model*dtype_bytes``
-fits VMEM — the qwen3-30b shapes (d_model=2048, bm=128, bf=256) use ~2 MB.
+VMEM budget: the grouped kernel keeps a ``(bm, F)`` fp32 SiLU product, the
+``(bm, bf)`` gate/up accumulators, one ``(bf, bn)`` weight tile, and a
+``(bm, bn)`` fp32 output accumulator resident; ``bn`` defaults to the full
+``d_model`` (one n-tile — identical schedule to the original single-pass
+kernel) and is blocked down automatically by the ops wrapper only when the
+old full ``(bm, d_model)`` accumulator would blow the VMEM budget.
 """
 
 from __future__ import annotations
@@ -53,24 +55,28 @@ def _fused_swiglu_gmm_kernel(
     lhs_ref,  # (bm, bk)
     wg_ref,  # (1, bk, bf)
     wu_ref,  # (1, bk, bf)
-    wd_ref,  # (1, bf, N)
+    wd_ref,  # (1, bf, bn)
     # outputs
-    out_ref,  # (bm, N)
+    out_ref,  # (bm, bn)
     # scratch
     gate_acc_ref,  # (bm, bf) fp32
     up_acc_ref,  # (bm, bf) fp32
-    out_acc_ref,  # (bm, N) fp32
+    h_ref,  # (bm, F) fp32 — full SiLU product, filled on the first n-tile
+    out_acc_ref,  # (bm, bn) fp32
     *,
     n_k_tiles: int,
     n_f_tiles: int,
+    n_n_tiles: int,
     bm: int,
+    bf: int,
 ):
     del rhs_of_group_ref
     i = pl.program_id(0)
-    j = pl.program_id(1)  # f tile (the SwiGLU hidden dim)
-    k = pl.program_id(2)  # k tile (d_model contraction)
+    n = pl.program_id(1)  # n tile (d_model output)
+    j = pl.program_id(2)  # f tile (the SwiGLU hidden dim)
+    k = pl.program_id(3)  # k tile (d_model contraction)
 
-    @pl.when(k == 0)
+    @pl.when((n == 0) & (k == 0))
     def _init_gate_up():
         gate_acc_ref[...] = jnp.zeros_like(gate_acc_ref)
         up_acc_ref[...] = jnp.zeros_like(up_acc_ref)
@@ -84,7 +90,9 @@ def _fused_swiglu_gmm_kernel(
     size = group_sizes_ref[g]
     live = base < size  # any real rows in this tile?
 
-    @pl.when(live)
+    # gate/up run once per (i, j, k) — on the first n-tile only; later
+    # n-tiles reuse the SiLU product parked in h_ref
+    @pl.when(live & (n == 0))
     def _gate_up():
         x = lhs_ref[...]
         gate_acc_ref[...] += jax.lax.dot_general(
@@ -96,13 +104,17 @@ def _fused_swiglu_gmm_kernel(
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(live & (k == n_k_tiles - 1))
-    def _activate_down():
-        # silu(gate) * up in VMEM — the (bm, bf) intermediate never touches
-        # HBM — then feed the down projection, accumulating across f tiles.
-        h = (
+    @pl.when(live & (n == 0) & (k == n_k_tiles - 1))
+    def _activate():
+        # silu(gate) * up in VMEM — the (bm, F) intermediate never touches
+        # HBM; it feeds the down projection of every n-tile.
+        h_ref[:, pl.ds(j * bf, bf)] = (
             jax.nn.silu(gate_acc_ref[...]) * up_acc_ref[...]
-        ).astype(lhs_ref.dtype)
+        )
+
+    @pl.when(live & (k == n_k_tiles - 1))
+    def _down():
+        h = h_ref[:, pl.ds(j * bf, bf)].astype(lhs_ref.dtype)
         out_acc_ref[...] += jax.lax.dot_general(
             h, wd_ref[0], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -131,58 +143,73 @@ def fused_swiglu_gmm(
     bm: int = 128,
     bk: int = 512,
     bf: int = 256,
+    bn: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Raw pallas_call; use ops.swiglu_gmm_capacity for the user-facing
     wrapper.  Same layout/scalar-prefetch contract as
     :func:`repro.kernels.grouped_gemm.grouped_gemm`; ``rhs_of_group``
-    defaults to the identity (group g uses expert g's weights)."""
+    defaults to the identity (group g uses expert g's weights).
+
+    ``bn`` blocks the output d_model axis so the fp32 accumulator is
+    ``(bm, bn)`` instead of the full ``(bm, d_model)``; the default (one
+    n-tile) keeps the original schedule bit-for-bit."""
     M, K = lhs.shape
     E, _, F = wg.shape
     N = wd.shape[2]
     bm, bk, bf = min(bm, M), min(bk, K), min(bf, F)
-    assert M % bm == 0 and K % bk == 0 and F % bf == 0, (M, K, F, bm, bk, bf)
+    bn = N if bn is None else min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and F % bf == 0 and N % bn == 0, (
+        M, K, F, N, bm, bk, bf, bn,
+    )
     assert wu.shape == wg.shape and wd.shape[:2] == (E, F), (
         wg.shape, wu.shape, wd.shape,
     )
-    m_tiles, f_tiles, k_tiles = M // bm, F // bf, K // bk
+    m_tiles, n_tiles, f_tiles, k_tiles = M // bm, N // bn, F // bf, K // bk
     if rhs_of_group is None:
         rhs_of_group = jnp.arange(group_sizes.shape[0], dtype=jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
-        grid=(m_tiles, f_tiles, k_tiles),
+        grid=(m_tiles, n_tiles, f_tiles, k_tiles),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k, g, r, s, w: (i, k)),
+            pl.BlockSpec((bm, bk), lambda i, n, j, k, g, r, s, w: (i, k)),
             pl.BlockSpec(
-                (1, bk, bf), lambda i, j, k, g, r, s, w: (w[g[i]], k, j)
+                (1, bk, bf), lambda i, n, j, k, g, r, s, w: (w[g[i]], k, j)
             ),
             pl.BlockSpec(
-                (1, bk, bf), lambda i, j, k, g, r, s, w: (w[g[i]], k, j)
+                (1, bk, bf), lambda i, n, j, k, g, r, s, w: (w[g[i]], k, j)
             ),
             pl.BlockSpec(
-                (1, bf, N), lambda i, j, k, g, r, s, w: (w[g[i]], j, 0)
+                (1, bf, bn), lambda i, n, j, k, g, r, s, w: (w[g[i]], j, n)
             ),
         ],
-        out_specs=pl.BlockSpec((bm, N), lambda i, j, k, g, r, s, w: (i, 0)),
+        out_specs=pl.BlockSpec(
+            (bm, bn), lambda i, n, j, k, g, r, s, w: (i, n)
+        ),
         scratch_shapes=[
             pltpu.VMEM((bm, bf), jnp.float32),
             pltpu.VMEM((bm, bf), jnp.float32),
-            pltpu.VMEM((bm, N), jnp.float32),
+            pltpu.VMEM((bm, F), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
         ],
     )
     kernel = functools.partial(
         _fused_swiglu_gmm_kernel,
         n_k_tiles=k_tiles,
         n_f_tiles=f_tiles,
+        n_n_tiles=n_tiles,
         bm=bm,
+        bf=bf,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), lhs.dtype),
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+            dimension_semantics=(
+                "arbitrary", "arbitrary", "arbitrary", "arbitrary"
+            ),
         ),
         interpret=interpret,
     )(

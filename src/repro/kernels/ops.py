@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .decode_attention import decode_attention as _decode_attention
+from .decode_attention import decode_attention_paged as _decode_attention_paged
 from .expert_gemv import expert_gemv as _expert_gemv
 from .fused_swiglu import fused_swiglu_gemv as _fused_swiglu_gemv
 from .fused_swiglu import fused_swiglu_gmm as _fused_swiglu_gmm
@@ -175,7 +176,24 @@ def gmm_ragged(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "interpret"))
+# Soft cap for the fused-SwiGLU fp32 output accumulator: when the full
+# (bm, d_model) block would exceed this many bytes, the n axis is blocked
+# so large-d_model configs still fit VMEM.  qwen3-30b (bm=128, N=2048,
+# 1 MB) stays a single n-tile — identical schedule to the unblocked kernel.
+_SWIGLU_ACC_BUDGET = int(
+    os.environ.get("REPRO_SWIGLU_ACC_BUDGET", 4 * 1024 * 1024)
+)
+
+
+def _fit_acc_bn(bm: int, n: int, budget: int = 0) -> int:
+    budget = budget or _SWIGLU_ACC_BUDGET
+    bn = n
+    while bn > 128 and bm * bn * 4 > budget:
+        bn //= 2
+    return _fit_block(bn, n)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "bn", "interpret"))
 def swiglu_gmm_capacity(
     buf: jax.Array,  # (G, C, K) capacity-layout dispatch buffer
     wg: jax.Array,  # (E, K, F)
@@ -186,6 +204,7 @@ def swiglu_gmm_capacity(
     bm: int = 128,
     bk: int = 512,
     bf: int = 256,
+    bn: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Single-pass SwiGLU over the (G, C, K) capacity buffer -> (G, C, N).
@@ -205,10 +224,12 @@ def swiglu_gmm_capacity(
     N = wd.shape[2]
     bk, bf = _fit_block(bk, K), _fit_block(bf, wg.shape[2])
     lhs, group_of_tile, row_in_group, bm, Cp = _capacity_tiles(buf, bm)
+    if bn is None:
+        bn = _fit_acc_bn(bm, N)
     out = _fused_swiglu_gmm(
         lhs, wg, wu, wd, group_sizes.astype(jnp.int32), group_of_tile,
         row_in_group, rhs_of_group,
-        bm=bm, bk=bk, bf=bf, interpret=interpret,
+        bm=bm, bk=bk, bf=bf, bn=bn, interpret=interpret,
     )
     return out.reshape(G, Cp, N)[:, :C, :]
 
@@ -274,23 +295,45 @@ def swiglu_gemv(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bt", "n_splits", "interpret"))
 def decode_attention(
     q: jax.Array,  # (B, H, dh)
     cache_k: jax.Array,  # (B, T, Kv, dh)
     cache_v: jax.Array,
     lengths: jax.Array,  # (B,)
     bt: int = 512,
+    n_splits: int = 1,
     interpret: bool | None = None,
 ) -> jax.Array:
+    """Flash-decode over a dense per-slot cache.
+
+    Ragged ``T % bt`` tails are masked in-kernel (no padding copy of the
+    cache); ``n_splits > 1`` partitions the KV axis into independent
+    splits combined by log-sum-exp.
+    """
     if interpret is None:
         interpret = _interpret_default()
-    T = cache_k.shape[1]
-    bt = min(bt, T)
-    if T % bt:
-        pad = _round_up(T, bt) - T
-        cache_k = jnp.pad(cache_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        cache_v = jnp.pad(cache_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return _decode_attention(
-        q, cache_k, cache_v, lengths.astype(jnp.int32), bt=bt, interpret=interpret
+        q, cache_k, cache_v, lengths.astype(jnp.int32),
+        bt=bt, n_splits=n_splits, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged(
+    q: jax.Array,  # (B, H, dh)
+    pool_k: jax.Array,  # (n_pool, page, Kv, dh) shared block pool
+    pool_v: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks) int32
+    lengths: jax.Array,  # (B,)
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash-decode over the paged block pool: each slot streams only the
+    pool blocks its block-table row owns (dead cells hit the trash block
+    and skip their work)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _decode_attention_paged(
+        q, pool_k, pool_v, block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32), interpret=interpret,
     )

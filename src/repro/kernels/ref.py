@@ -88,3 +88,22 @@ def decode_attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", p, cache_v.astype(jnp.float32))
     return o.reshape(B, H, dh).astype(q.dtype)
+
+
+def decode_attention_paged_ref(
+    q: jax.Array,  # (B, H, dh)
+    pool_k: jax.Array,  # (n_pool, page, Kv, dh) shared block pool
+    pool_v: jax.Array,  # (n_pool, page, Kv, dh)
+    block_tables: jax.Array,  # (B, max_blocks) int32 logical -> physical
+    lengths: jax.Array,  # (B,)
+) -> jax.Array:
+    """Gather the slot's pool blocks into a dense cache and fall back to
+    :func:`decode_attention_ref` — the semantic definition of the paged
+    layout (dead table cells point at the trash block and are masked by
+    ``lengths``)."""
+    B = q.shape[0]
+    _, page, Kv, dh = pool_k.shape
+    nb = block_tables.shape[1]
+    k = pool_k[block_tables].reshape(B, nb * page, Kv, dh)
+    v = pool_v[block_tables].reshape(B, nb * page, Kv, dh)
+    return decode_attention_ref(q, k, v, lengths)

@@ -8,6 +8,7 @@ in :mod:`repro.kernels` provide the TPU-optimized versions of the same math
 
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -17,6 +18,17 @@ from repro.configs.base import AttnConfig
 from .layers import _he, apply_mrope, apply_rope
 
 NEG_INF = -1e30
+
+
+def _flash_decode_mode() -> str:
+    """Decode-attention backend, dual-path convention (cf. expert_exec):
+    ``"kernel"`` — Pallas flash-decode on TPU; ``"xla"`` — the XLA twin on
+    CPU hosts (interpret-mode Pallas is too slow to serve from);
+    ``"oracle"`` — the dense reference einsum, forced by
+    ``REPRO_FLASH_DECODE=0``."""
+    if os.environ.get("REPRO_FLASH_DECODE", "1") in ("0", "false", "False"):
+        return "oracle"
+    return "kernel" if jax.default_backend() == "tpu" else "xla"
 
 
 # ---------------------------------------------------------------------------
@@ -240,9 +252,132 @@ def gqa_decode(
     cache_v = jax.vmap(lambda c, r, i: jax.lax.dynamic_update_slice(c, r, (i, 0, 0)))(
         cache_v, v1, idx
     )
-    o = decode_attention_ref(q, cache_k, cache_v, idx + 1)
+    if _flash_decode_mode() == "kernel":
+        from repro.kernels import ops as kernel_ops
+
+        o = kernel_ops.decode_attention(q[:, 0], cache_k, cache_v, idx + 1)
+        o = o[:, None]
+    else:
+        # the dense einsum is both the XLA twin and the oracle here
+        o = decode_attention_ref(q, cache_k, cache_v, idx + 1)
     y = o.reshape(B, 1, -1) @ params["wo"]
     return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (shared block pool + per-slot block tables)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, dh)
+    pool_k: jax.Array,  # (n_pool, page, Kv, dh)
+    pool_v: jax.Array,  # (n_pool, page, Kv, dh)
+    block_tables: jax.Array,  # (B, max_blocks) int32
+    lengths: jax.Array,  # (B,)
+) -> jax.Array:
+    """Oracle: gather each slot's blocks into a dense cache, then run the
+    dense reference."""
+    B = q.shape[0]
+    _, page, Kv, dh = pool_k.shape
+    nb = block_tables.shape[1]
+    k = pool_k[block_tables].reshape(B, nb * page, Kv, dh)
+    v = pool_v[block_tables].reshape(B, nb * page, Kv, dh)
+    return decode_attention_ref(q, k, v, lengths)
+
+
+def paged_decode_attention_xla(
+    q: jax.Array,  # (B, 1, H, dh)
+    pool_k: jax.Array,  # (n_pool, page, Kv, dh)
+    pool_v: jax.Array,  # (n_pool, page, Kv, dh)
+    owner: jax.Array,  # (n_pool,) int32 slot owning each block, -1 free
+    block_pos: jax.Array,  # (n_pool,) int32 logical index within owner
+    lengths: jax.Array,  # (B,)
+) -> jax.Array:
+    """Pool-major XLA twin of the paged flash-decode kernel.
+
+    Iterates physical blocks instead of (slot, max_seq) positions: each
+    pool block computes its partial (m, l, acc) against its owner's query
+    and a segment-reduce combines per slot — compute and memory traffic
+    scale with ``n_pool * page`` (the tokens actually resident) rather
+    than ``n_slots * max_seq``, which is the whole padding win on
+    non-TPU hosts.
+    """
+    B, _, H, dh = q.shape
+    n_pool, page, Kv, _ = pool_v.shape
+    G = H // Kv
+    qf = q.reshape(B, Kv, G, dh).astype(jnp.float32)
+    own = jnp.clip(owner, 0, B - 1)
+    qp = qf[own]  # (n_pool, Kv, G, dh) — free blocks get slot 0's q, masked
+    s = jnp.einsum(
+        "pkgd,ptkd->pkgt", qp, pool_k.astype(jnp.float32)
+    ) / jnp.sqrt(dh).astype(jnp.float32)
+    pos = block_pos[:, None] * page + jnp.arange(page)[None, :]  # (n_pool, page)
+    valid = (owner[:, None] >= 0) & (pos < lengths[own][:, None])
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    # two-pass softmax across each owner's blocks via segment reductions;
+    # free blocks land in the B-th (discarded) segment
+    seg = jnp.where(owner >= 0, owner, B).astype(jnp.int32)
+    m_blk = s.max(axis=-1)  # (n_pool, Kv, G)
+    m_slot = jax.ops.segment_max(m_blk, seg, num_segments=B + 1)[:B]
+    m_slot = jnp.maximum(m_slot, NEG_INF)  # slots with no blocks: -inf -> finite
+    m_of_blk = jnp.concatenate(
+        [m_slot, jnp.zeros((1,) + m_slot.shape[1:], m_slot.dtype)], axis=0
+    )[seg]
+    p = jnp.where(valid[:, None, None], jnp.exp(s - m_of_blk[..., None]), 0.0)
+    l_blk = p.sum(axis=-1)  # (n_pool, Kv, G)
+    acc_blk = jnp.einsum("pkgt,ptkd->pkgd", p, pool_v.astype(jnp.float32))
+    l_slot = jax.ops.segment_sum(l_blk, seg, num_segments=B + 1)[:B]
+    acc = jax.ops.segment_sum(acc_blk, seg, num_segments=B + 1)[:B]
+    out = acc / jnp.maximum(l_slot, 1e-30)[..., None]
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def gqa_decode_paged(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    position: jax.Array,  # (B,) current position
+    pool_k: jax.Array,  # (n_pool, page, Kv, dh)
+    pool_v: jax.Array,  # (n_pool, page, Kv, dh)
+    paged: Tuple[jax.Array, jax.Array, jax.Array],  # (block_tables, owner, block_pos)
+    cfg: AttnConfig,
+    mrope_positions=None,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One paged decode step: scatter the new KV row into the shared block
+    pool through the slot's block table, then attend over the slot's
+    logical blocks only.  Idle slots resolve to the trash block (physical
+    0, owner -1) so their masked write never corrupts live data."""
+    block_tables, owner, block_pos = paged
+    pos = position[:, None]
+    q, k1, v1 = gqa_project_qkv(params, x, pos, cfg, mrope_positions, use_rope)
+    B = x.shape[0]
+    page = pool_k.shape[1]
+    phys = jnp.take_along_axis(
+        block_tables, (position // page)[:, None], axis=1
+    )[:, 0]
+    off = position % page
+    pool_k = pool_k.at[phys, off].set(k1[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, off].set(v1[:, 0].astype(pool_v.dtype))
+    lengths = position + 1
+    mode = _flash_decode_mode()
+    if mode == "kernel":
+        from repro.kernels import ops as kernel_ops
+
+        o = kernel_ops.decode_attention_paged(
+            q[:, 0], pool_k, pool_v, block_tables, lengths
+        )
+        o = o[:, None]
+    elif mode == "xla":
+        o = paged_decode_attention_xla(
+            q, pool_k, pool_v, owner, block_pos, lengths
+        )
+    else:
+        o = paged_decode_attention_ref(
+            q, pool_k, pool_v, block_tables, lengths
+        )
+    y = o.reshape(B, 1, -1) @ params["wo"]
+    return y, pool_k, pool_v
 
 
 def quantize_kv_row(row: jax.Array):

@@ -510,6 +510,37 @@ class LM:
             }
         raise ValueError(arch.family)
 
+    def init_paged_cache(self, n_pool: int, page: int) -> Dict[str, Any]:
+        """Paged KV cache: per-layer shared block pools ``(n_layers,
+        n_pool, page, Kv, dh)`` replacing the dense per-slot buffers.  The
+        block table that maps (slot, logical block) → pool block lives
+        host-side (``serving.batching.PagedKVCache``) and arrives with
+        each decode batch; physical block 0 is the reserved trash block
+        idle slots write into."""
+        import os as _os
+
+        arch, dtype = self.arch, self.dtype
+        a = arch.attn
+        if arch.family not in ("dense", "moe", "vlm") or a.kind != "gqa":
+            raise ValueError(
+                "paged KV cache requires a gqa decoder-only family "
+                f"(got family={arch.family}, attn={a.kind})"
+            )
+        if _os.environ.get("REPRO_KV_INT8", "0") == "1":
+            raise ValueError("paged KV cache does not support int8 KV yet")
+
+        def kv(n_layers):
+            return (
+                jnp.zeros((n_layers, n_pool, page, a.n_kv_heads, a.d_head), dtype),
+                jnp.zeros((n_layers, n_pool, page, a.n_kv_heads, a.d_head), dtype),
+            )
+
+        n_prefix = arch.moe.first_k_dense if arch.moe is not None else 0
+        c = {"blocks": kv(arch.n_layers - n_prefix)}
+        if n_prefix:
+            c["prefix"] = kv(n_prefix)
+        return c
+
     # ==================================================================
     # Prefill
     # ==================================================================
@@ -606,7 +637,17 @@ class LM:
         if arch.family in ("dense", "moe", "vlm"):
             moe = arch.moe is not None
             n_prefix = arch.moe.first_k_dense if moe else 0
-            seq_par = self._use_seqpar_decode(cache)
+            # paged decode: cache leaves are shared block pools and the
+            # batch carries the block-table indexing state (fixed shapes —
+            # no extra jit keys on the decode path)
+            paged = None
+            if "block_tables" in batch:
+                paged = (
+                    batch["block_tables"],
+                    batch["pool_owner"],
+                    batch["pool_pos"],
+                )
+            seq_par = False if paged is not None else self._use_seqpar_decode(cache)
             sieve = batch.get("sieve")
             auxes = []
             new_prefix = None
@@ -617,7 +658,7 @@ class LM:
                     cache_l = jax.tree.map(lambda a: a[i], cache["prefix"])
                     x, new_c, aux = tf.attn_mlp_block_decode(
                         blk, x, position, cache_l, arch, mi, moe=False,
-                        mrope_positions=mrope, seq_par=seq_par,
+                        mrope_positions=mrope, seq_par=seq_par, paged=paged,
                     )
                     new_list.append(new_c)
                     auxes.append(aux)
@@ -628,6 +669,7 @@ class LM:
                 x, new_c, aux = tf.attn_mlp_block_decode(
                     blk_p, x, position, cache_l, arch, mi, moe=moe,
                     mrope_positions=mrope, seq_par=seq_par, sieve=sieve,
+                    paged=paged,
                 )
                 return x, (new_c, aux)
 

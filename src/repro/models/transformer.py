@@ -113,6 +113,7 @@ def attn_mlp_block_decode(
     mrope_positions=None,
     seq_par: bool = False,
     sieve=None,  # SieveState for expert_exec="dual_path_cost"
+    paged=None,  # (block_tables, owner, block_pos) — cache is a block pool
 ):
     h = apply_norm(p["norm1"], x, arch.norm)
     if arch.attn.kind == "mla":
@@ -120,6 +121,12 @@ def attn_mlp_block_decode(
             p["attn"], h, position, cache[0], cache[1], arch.attn
         )
         new_cache = (ckv, kr)
+    elif paged is not None:
+        a, k, v = attn_lib.gqa_decode_paged(
+            p["attn"], h, position, cache[0], cache[1], paged, arch.attn,
+            mrope_positions=mrope_positions,
+        )
+        new_cache = (k, v)
     elif seq_par:
         scales = (cache[2], cache[3]) if len(cache) == 4 else None  # int8 KV
         a, new_cache = attn_lib.gqa_decode_seqpar(

@@ -110,9 +110,14 @@ def _gather_state(engine) -> Dict[str, Any]:
             "wall_time": engine.stats.wall_time,
             "dropped_tokens": engine.stats.dropped_tokens,
             "routed_tokens": engine.stats.routed_tokens,
+            "truncated_requests": engine.stats.truncated_requests,
             "partitions": engine.stats.partitions,
         },
     }
+    if getattr(engine, "paged", None) is not None:
+        # host-side block-table state; the device pools themselves ride
+        # along as ordinary cache leaves
+        state["paged"] = engine.paged.state_dict()
     if engine.is_moe:
         state["cost_table"] = {
             "state": engine.cost_table.state_dict(),
@@ -243,6 +248,19 @@ def _apply(engine, state: Dict[str, Any], leaves: List[np.ndarray]) -> None:
         new_cache.append(jnp.asarray(arr, dtype=ref.dtype))
     engine.cache = jax.tree_util.tree_unflatten(treedef, new_cache)
 
+    # ---- paged block-table state (host side of the paged KV cache) ----
+    paged_state = state.get("paged")
+    engine_paged = getattr(engine, "paged", None)
+    if (paged_state is None) != (engine_paged is None):
+        raise ValueError(
+            "paged KV layout mismatch: snapshot "
+            f"{'has' if paged_state is not None else 'lacks'} block-table "
+            "state but the engine "
+            f"{'lacks' if engine_paged is None else 'has'} a paged cache"
+        )
+    if paged_state is not None:
+        engine_paged.load_state_dict(paged_state)
+
     # ---- device SieveState: restored verbatim, never re-exported ----
     sv = state["sieve"]
     stale = engine._sieve_state
@@ -308,6 +326,7 @@ def _apply(engine, state: Dict[str, Any], leaves: List[np.ndarray]) -> None:
     engine.stats.wall_time = float(s["wall_time"])
     engine.stats.dropped_tokens = int(s["dropped_tokens"])
     engine.stats.routed_tokens = int(s["routed_tokens"])
+    engine.stats.truncated_requests = int(s.get("truncated_requests", 0))
     engine.stats.partitions = list(s["partitions"])
 
 

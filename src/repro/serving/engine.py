@@ -42,7 +42,7 @@ from repro.models.model import LM
 from repro.sim.dram import PimGemvModel
 from repro.telemetry import StageProbes, Telemetry, TimingFeed
 from repro.telemetry import default as default_telemetry
-from .batching import BatchingConfig, SlotScheduler
+from .batching import BatchingConfig, PagedKVCache, SlotScheduler
 from .request import Request
 
 # cost-table feeding modes: "model" synthesizes PIM observations from the
@@ -80,6 +80,9 @@ class EngineStats:
     # drop *rate* can sit beside TTFT/TPOT in reports
     dropped_tokens: int = 0
     routed_tokens: int = 0
+    # requests force-finished at the KV capacity (max_seq) — the loud
+    # alternative to the old silent clamp-and-overwrite of the last entry
+    truncated_requests: int = 0
     partitions: List[Dict] = field(default_factory=list)
 
     @property
@@ -127,7 +130,15 @@ class ServingEngine:
         # (enabled iff REPRO_TELEMETRY is set — a shared no-op otherwise)
         self.tel = telemetry if telemetry is not None else default_telemetry()
 
-        self.cache = lm.init_cache(batching.n_slots, batching.max_seq)
+        # paged KV: slots index a shared device block pool through a
+        # host-side block table (allocated on admit/decode, freed on
+        # retire); dense mode keeps the per-slot (max_seq, ...) buffers
+        self.paged: Optional[PagedKVCache] = None
+        if batching.paged:
+            self.paged = PagedKVCache(batching)
+            self.cache = lm.init_paged_cache(self.paged.n_pool, self.paged.page)
+        else:
+            self.cache = lm.init_cache(batching.n_slots, batching.max_seq)
         # The KV cache is donated on both compiled steps (argnum 2): the
         # engine rebinds ``self.cache`` to the returned cache every call,
         # so the stale buffers would otherwise survive as full-cache
@@ -303,20 +314,50 @@ class ServingEngine:
         For simplicity the chunk is the whole prompt (chunked continuation
         uses the same mechanism with q_offset bookkeeping at the engine
         level)."""
+        block_ids = batch.pop("block_ids", None)  # paged: slot's block-table row
         logits, req_cache, aux = self.lm.prefill(params, batch)
 
-        def insert(slot_leaf, req_leaf):
-            # slot_leaf: (L, B_slots, T, ...); req_leaf: (L, 1, P, ...)
-            start = (0, slot, 0) + (0,) * (slot_leaf.ndim - 3)
-            return jax.lax.dynamic_update_slice(
-                slot_leaf, req_leaf.astype(slot_leaf.dtype), start
-            )
+        if block_ids is None:
+
+            def insert(slot_leaf, req_leaf):
+                # slot_leaf: (L, B_slots, T, ...); req_leaf: (L, 1, P, ...)
+                start = (0, slot, 0) + (0,) * (slot_leaf.ndim - 3)
+                return jax.lax.dynamic_update_slice(
+                    slot_leaf, req_leaf.astype(slot_leaf.dtype), start
+                )
+
+        else:
+            page = self.paged.page
+
+            def insert(pool_leaf, req_leaf):
+                # pool_leaf: (L, n_pool, page, ...); req_leaf: (L, 1, P, ...)
+                # pad the prompt's KV rows to whole pages and scatter them
+                # over the slot's allocated blocks (nbp is trace-static:
+                # the prompt length is already a jit key for prefill)
+                L, _, P = req_leaf.shape[:3]
+                nbp = -(-P // page)
+                rows = req_leaf[:, 0]
+                pad = nbp * page - P
+                if pad:
+                    rows = jnp.pad(
+                        rows, ((0, 0), (0, pad)) + ((0, 0),) * (rows.ndim - 2)
+                    )
+                pages = rows.reshape((L, nbp, page) + rows.shape[2:])
+                return pool_leaf.at[:, block_ids[:nbp]].set(
+                    pages.astype(pool_leaf.dtype)
+                )
 
         new_cache = jax.tree.map(insert, cache, req_cache)
         return logits, new_cache, aux
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.cfg.max_seq:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds the KV capacity "
+                f"max_seq={self.cfg.max_seq}; raise BatchingConfig.max_seq "
+                "or truncate the prompt"
+            )
         self.sched.submit(req)
 
     def _run_sieve(self, counts_per_layer: np.ndarray) -> None:
@@ -485,6 +526,13 @@ class ServingEngine:
         for req in self.sched.prefill_work():
             prompt = np.asarray(req.prompt, np.int32)[None, :]
             batch = {"tokens": jnp.asarray(prompt)}
+            if self.paged is not None:
+                # allocate the prompt's blocks up front; the scatter in
+                # _prefill_chunk_impl writes through this block-table row
+                self.paged.ensure(req.slot, len(req.prompt))
+                batch["block_ids"] = jnp.asarray(
+                    self.paged.block_table[req.slot]
+                )
             if self.uses_cost_split:
                 batch["sieve"] = self._sieve_state
             if self.lm.arch.family == "vlm":
@@ -521,6 +569,15 @@ class ServingEngine:
                 # the request's next-write cursor.
                 position[r.slot] = r.position - 1 if r.generated else r.position
             db = {"tokens": jnp.asarray(tokens), "position": jnp.asarray(position)}
+            if self.paged is not None:
+                # grow block lists to cover this step's KV write, then ship
+                # the (fixed-shape) indexing state with the batch — same
+                # jit signature every step, zero added cache misses
+                for r in batch_reqs:
+                    self.paged.ensure(r.slot, int(position[r.slot]) + 1)
+                db["block_tables"] = jnp.asarray(self.paged.block_table)
+                db["pool_owner"] = jnp.asarray(self.paged.owner)
+                db["pool_pos"] = jnp.asarray(self.paged.block_pos)
             if self.uses_cost_split:
                 db["sieve"] = self._sieve_state
             if self.lm.arch.family == "vlm":
@@ -558,7 +615,24 @@ class ServingEngine:
                     gpu_only=not self.pim_healthy,
                 )
 
+        # KV-capacity cap: the next decode feed writes KV at
+        # ``r.position - 1``; once that reaches max_seq the dense
+        # dynamic_update_slice would clamp and silently overwrite the last
+        # entry (and the paged path would write past its last block) —
+        # finish the request loudly instead.
+        for r in self.sched.active:
+            if (
+                r.generated
+                and not r.done
+                and r.position - 1 >= self.cfg.max_seq
+            ):
+                r.truncated = True
+                self.stats.truncated_requests += 1
+
         done = self.sched.retire(time.perf_counter())
+        if self.paged is not None:
+            for r in done:
+                self.paged.free_slot(r.slot)
         self.stats.steps += 1
         self.stats.wall_time += time.perf_counter() - t0
         if tel.enabled:
@@ -568,6 +642,12 @@ class ServingEngine:
                 self.cfg.n_slots * self.cfg.max_seq
             )
             tel.gauge("engine/kv_occupancy", occ)
+            if self.paged is not None:
+                # fraction of allocatable pool blocks currently owned
+                tel.gauge(
+                    "engine/kv_pool_used",
+                    1.0 - self.paged.n_free / max(self.paged.n_pool - 1, 1),
+                )
             tel.gauge(
                 "engine/batch_occupancy",
                 len(batch_reqs) / max(self.cfg.n_slots, 1),

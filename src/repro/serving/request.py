@@ -39,9 +39,12 @@ class Request:
     slot: Optional[int] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    truncated: bool = False  # hit the KV capacity (max_seq) before eos
 
     @property
     def done(self) -> bool:
+        if self.truncated:
+            return True
         if len(self.generated) >= self.max_new_tokens:
             return True
         return bool(
@@ -72,6 +75,7 @@ class Request:
             "slot": self.slot,
             "first_token_time": self.first_token_time,
             "finish_time": self.finish_time,
+            "truncated": self.truncated,
         }
 
     @classmethod
@@ -88,5 +92,6 @@ class Request:
         req.slot = None if d["slot"] is None else int(d["slot"])
         req.first_token_time = d["first_token_time"]
         req.finish_time = d["finish_time"]
+        req.truncated = bool(d.get("truncated", False))  # pre-paged snapshots
         advance_request_ids(req.req_id + 1)
         return req

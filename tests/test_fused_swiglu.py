@@ -114,6 +114,29 @@ class TestFusedSwigluGmm:
             **_tol(dtype),
         )
 
+    @pytest.mark.parametrize("bn", [32, 16])
+    def test_blocked_output_accumulator(self, bn):
+        """Blocking the d_model output axis (fp32 accumulator (bm, bn)
+        instead of the full (bm, d_model) — the large-d_model VMEM fix)
+        must be numerically identical to the unblocked single-n-tile
+        schedule."""
+        E, C, K, F, N = 4, 16, 64, 96, 64
+        ks = jax.random.split(jax.random.PRNGKey(11), 2)
+        buf = jax.random.normal(ks[0], (E, C, K))
+        wg, wu, wd = _weights(ks[1], E, K, F, N, jnp.float32)
+        sizes = jnp.asarray([16, 0, 7, 1], jnp.int32)
+        full = ops.swiglu_gmm_capacity(
+            buf, wg, wu, wd, sizes, bm=8, bk=32, bf=32, bn=N, interpret=True
+        )
+        blocked = ops.swiglu_gmm_capacity(
+            buf, wg, wu, wd, sizes, bm=8, bk=32, bf=32, bn=bn, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(blocked))
+        exp = ref.fused_swiglu_gmm_ref(buf, wg, wu, wd, sizes)
+        np.testing.assert_allclose(
+            np.asarray(blocked), np.asarray(exp), **_tol(jnp.float32)
+        )
+
     def test_empty_groups_produce_zeros(self):
         E, C, K, F, N = 3, 8, 32, 32, 32
         buf = jnp.ones((E, C, K))
