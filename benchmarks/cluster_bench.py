@@ -20,6 +20,8 @@ import os
 import sys
 import time
 
+from dataclasses import replace as dc_replace
+
 from repro.core import b200_pim_system
 from repro.cluster import (
     ROUTER_POLICIES,
@@ -28,6 +30,9 @@ from repro.cluster import (
     LengthModel,
     PoissonProcess,
     max_rate_under_slo,
+    meets_slo,
+    percentiles,
+    request_ttft,
 )
 from repro.sim import SIM_MODELS
 
@@ -115,6 +120,15 @@ def run_chaos_suite(args) -> dict:
     )
     from repro.telemetry import Telemetry, write_trace
 
+    # validate up front: an unknown name used to surface as a raw KeyError
+    # from deep inside the suite after minutes of runs
+    if args.chaos != "all" and args.chaos not in SCENARIOS:
+        print(
+            f"cluster_bench: unknown chaos scenario {args.chaos!r}; "
+            f"expected 'all' or one of: {', '.join(SCENARIOS)}",
+            file=sys.stderr,
+        )
+        sys.exit(2)
     scenarios = list(SCENARIOS) if args.chaos == "all" else [args.chaos]
     horizon = args.horizon or (4.0 if args.quick else 8.0)
     n_steps = 40 if args.quick else 80
@@ -256,6 +270,295 @@ def run_chaos_suite(args) -> dict:
     return report
 
 
+def run_overload_suite(args) -> dict:
+    """``--overload`` mode: drive the admission-control stack past the
+    knee and gate that it degrades gracefully instead of collapsing.
+
+    Phases (all on the same model x2-replica jsq/sieve cluster):
+
+    1. **knee** — small single-class Poisson sweep *without* admission;
+       the knee is the highest rate whose p99 TTFT *and* TPOT both hold,
+       and its goodput is the reference capacity;
+    2. **burst** — MMPP burst traffic at a 3x-knee mean rate, 70/30
+       interactive/batch with interactive service-start deadlines, run
+       twice on identical arrivals: admission on (token buckets sized
+       from the knee, bounded replica queues, brownout fed by the TTFT
+       SLO) vs. the unprotected control.  Gates: admission goodput holds
+       >= ``--overload-retain`` x knee goodput, interactive p99 TTFT
+       stays within SLO, and the control actually collapses below the
+       same bar (otherwise the scenario isn't stressing anything);
+    3. **brownout** — the admission run must show staged brownout
+       engagement *and* de-escalation (hysteresis works both ways);
+    4. **retry storm** — a replica crash at moderate load with admission
+       on: the retry budget must never exceed its window allowance
+       (peak utilization <= 1.0, storms converted to deferrals) and the
+       4-way conservation invariant must hold (zero lost requests).
+
+    With ``--check`` any gate failure exits nonzero — the CI
+    overload-smoke entry point.
+    """
+    from repro.cluster import (
+        AdmissionConfig,
+        ClassMix,
+        ClusterSimulator,
+        MMPPProcess,
+        ReplicaConfig,
+    )
+    from repro.faults import FaultInjector, make_plan
+
+    n_replicas = 2
+    router, policy = "jsq", "sieve"
+    slo = SLO(ttft=args.slo_ttft, tpot=args.slo_tpot)
+    horizon = args.horizon or (3.0 if args.quick else 6.0)
+    lengths = LengthModel(kind="lognormal", prompt_mean=512, output_mean=64)
+    seed = args.seed
+    retain = args.overload_retain
+    t0 = time.perf_counter()
+    failures = []
+
+    def build(admission=None, replica_cfg=None, telemetry=None):
+        return ClusterSimulator(
+            SIM_MODELS[args.model], b200_pim_system(), policy=policy,
+            n_replicas=n_replicas, router_policy=router, seed=seed,
+            telemetry=telemetry, admission=admission, replica_cfg=replica_cfg,
+        )
+
+    # ---- phase 1: knee (reference capacity, no admission) ----
+    # The sweep horizon must be several TTFT-SLOs long: with a short
+    # window an over-capacity rate still *looks* compliant because the
+    # whole backlog drains inside the TTFT grace — the knee would then
+    # overstate sustainable capacity and every downstream gate inherits
+    # the lie.
+    knee_h = max(horizon, 3.0 * slo.ttft)
+    rates = (
+        [40.0, 60.0, 80.0, 100.0, 120.0]
+        if args.quick
+        else [40.0, 60.0, 80.0, 100.0, 120.0, 140.0, 160.0]
+    )
+    cs = build()
+    by_rate = {}
+    for rate in rates:
+        res = cs.run(PoissonProcess(rate, lengths, seed=seed + 7), knee_h)
+        rep = res.report(slo)
+        if rep["n_completed"] == 0:
+            continue
+        by_rate[rate] = rep
+        print(
+            f"knee-sweep rate={rate:6.1f} "
+            f"ttft_p99={rep['ttft']['p99']} tpot_p99={rep['tpot']['p99']} "
+            f"goodput={rep.get('goodput_rps', 0.0):.1f}",
+            file=sys.stderr,
+        )
+    under = [
+        r for r, rep in by_rate.items()
+        if rep["ttft"]["p99"] is not None
+        and rep["tpot"]["p99"] is not None
+        and rep["ttft"]["p99"] <= slo.ttft
+        and rep["tpot"]["p99"] <= slo.tpot
+    ]
+    knee = max(under) if under else min(by_rate)
+    knee_goodput = by_rate[knee].get("goodput_rps", 0.0)
+    print(
+        f"knee={knee:.1f} rps, goodput={knee_goodput:.1f} rps",
+        file=sys.stderr,
+    )
+    if not under:
+        failures.append("knee: no swept rate satisfied the full SLO")
+
+    # ---- phase 2: 3x-knee MMPP burst, admission vs. control ----
+    # The burst window must be a few TTFT-SLOs long: with a short window
+    # the backlog's head still starts service within the SLO and even the
+    # unprotected control looks compliant.  A sub-capacity cooldown tail
+    # follows so the brownout controller gets traffic to de-escalate on
+    # (phase 3) — gates are computed over burst-window *arrivals* only.
+    burst_mean = 3.0 * knee
+    burst_h = max(horizon, 3.0 * slo.ttft)
+    cool_h = max(1.0, 0.4 * burst_h)
+    mix = ClassMix(
+        p_interactive=0.7,
+        interactive_slack=0.8 * slo.ttft,  # service-start deadline
+    )
+    # dwell-weighted mean = (0.6*0.5 + 0.3*2.0)/0.9 = 1.0 x burst_mean
+    burst_specs = MMPPProcess(
+        rate_calm=0.5 * burst_mean, rate_burst=2.0 * burst_mean,
+        mean_dwell_calm=0.6, mean_dwell_burst=0.3,
+        lengths=lengths, seed=seed + 11, mix=mix,
+    ).generate(burst_h)
+    cool_specs = PoissonProcess(
+        rate=max(0.4 * knee, 1.0), lengths=lengths, seed=seed + 13, mix=mix,
+    ).generate(cool_h)
+    id_off = len(burst_specs) + 1
+    cool_specs = [
+        dc_replace(
+            s,
+            req_id=s.req_id + id_off,
+            arrival_time=s.arrival_time + burst_h,
+            deadline=None if s.deadline is None else s.deadline + burst_h,
+        )
+        for s in cool_specs
+    ]
+    specs = burst_specs + cool_specs
+    total_h = burst_h + cool_h
+    # bucket sizing: the interactive tier gets most of the knee capacity
+    # (it is the goodput-bearing, deadline-guarded class); batch keeps a
+    # small guaranteed share that the brownout controller halves first
+    adm_cfg = AdmissionConfig(
+        interactive_rate=max(1.0 * knee, 1.0),
+        interactive_burst=max(int(0.4 * knee), 8),
+        batch_rate=max(0.1 * knee, 1.0),
+        batch_burst=max(int(0.05 * knee), 4),
+        brownout_ttft=slo.ttft,
+    )
+    rcfg = ReplicaConfig(max_queue=2 * ReplicaConfig().n_slots)
+    tel = None
+    if args.trace_out:
+        from repro.telemetry import Telemetry, write_trace
+
+        tel = Telemetry(enabled=True, capacity=1 << 17)
+    res_adm = build(
+        admission=adm_cfg, replica_cfg=rcfg, telemetry=tel
+    ).run_requests(list(specs), total_h)
+    if tel is not None:
+        path = write_trace(tel, args.trace_out)
+        print(
+            f"# overload trace: {path} ({tel.n_events} events)",
+            file=sys.stderr,
+        )
+    # the control is the *pre-admission* stack: no buckets, no bounded
+    # queues, and no deadlines either (queued-deadline expiry would act
+    # as free admission control and mask the collapse)
+    ctl_specs = [dc_replace(s, deadline=None) for s in specs]
+    res_ctl = build().run_requests(ctl_specs, total_h)
+    rep_adm = res_adm.report(slo)
+    rep_ctl = res_ctl.report(slo)
+
+    def burst_goodput(res) -> float:
+        # SLO-compliant completions among burst-window arrivals per
+        # burst-window second (the cooldown tail must not dilute the gate)
+        return sum(
+            1 for r in res.completed
+            if r.spec.arrival_time < burst_h and meets_slo(r, slo)
+        ) / burst_h
+
+    g_adm = burst_goodput(res_adm)
+    g_ctl = burst_goodput(res_ctl)
+    ttft_i = percentiles([
+        request_ttft(r) for r in res_adm.completed
+        if r.spec.arrival_time < burst_h and r.priority == "interactive"
+    ])["p99"]
+    print(
+        f"burst@3x-knee ({burst_mean:.0f} rps mean): "
+        f"admission goodput={g_adm:.1f} (interactive ttft_p99={ttft_i}) "
+        f"vs control={g_ctl:.1f}; bar={retain * knee_goodput:.1f}",
+        file=sys.stderr,
+    )
+    if g_adm < retain * knee_goodput:
+        failures.append(
+            f"burst: admission goodput {g_adm:.1f} < "
+            f"{retain:.2f}x knee goodput {knee_goodput:.1f}"
+        )
+    if ttft_i is None or ttft_i > slo.ttft:
+        failures.append(
+            f"burst: interactive p99 TTFT {ttft_i} blew the "
+            f"{slo.ttft}s SLO under admission"
+        )
+    if g_ctl >= retain * knee_goodput:
+        failures.append(
+            f"burst: control goodput {g_ctl:.1f} did not collapse "
+            f"(>= {retain:.2f}x knee) — overload point too soft"
+        )
+
+    # ---- phase 3: brownout engaged AND released ----
+    from repro.cluster import STAGE_NAMES
+
+    stage_order = {name: i for i, name in enumerate(STAGE_NAMES)}
+    bstats = (res_adm.admission or {}).get("brownout", {})
+    transitions = bstats.get("transitions", [])
+    up = [tr for tr in transitions
+          if stage_order[tr[2]] > stage_order[tr[1]]]
+    down = [tr for tr in transitions
+            if stage_order[tr[2]] < stage_order[tr[1]]]
+    print(
+        f"brownout: max_stage={bstats.get('max_stage')} "
+        f"{len(up)} escalations, {len(down)} de-escalations",
+        file=sys.stderr,
+    )
+    if not up:
+        failures.append("brownout: never engaged under 3x-knee burst")
+    if not down:
+        failures.append("brownout: never de-escalated (stuck past drain)")
+
+    # ---- phase 4: retry storm under a crash, budget + conservation ----
+    storm_specs = PoissonProcess(
+        rate=max(1.2 * knee, 1.0), lengths=lengths, seed=seed + 23, mix=mix,
+    ).generate(horizon)
+    plan = make_plan(
+        "replica-crash", horizon, n_replicas=n_replicas, seed=seed
+    )
+    res_storm = build(admission=adm_cfg, replica_cfg=rcfg).run_requests(
+        list(storm_specs), horizon, injector=FaultInjector(plan)
+    )
+    n_lost = (
+        res_storm.n_submitted
+        - len(res_storm.completed)
+        - len(res_storm.dropped)
+        - len(res_storm.shed)
+        - len(res_storm.expired)
+    )
+    budget = (res_storm.admission or {}).get("retry_budget", {})
+    peak = budget.get("peak_utilization", 0.0)
+    print(
+        f"retry-storm: lost={n_lost} budget_peak={peak:.2f} "
+        f"retries={budget.get('n_retries')} "
+        f"deferred={budget.get('n_deferred')}",
+        file=sys.stderr,
+    )
+    if n_lost != 0:
+        failures.append(f"retry-storm: {n_lost} requests lost")
+    if peak > 1.0:
+        failures.append(
+            f"retry-storm: retry budget exceeded its window ({peak:.2f})"
+        )
+
+    report = {
+        "mode": "overload",
+        "model": args.model,
+        "slo": {"ttft": args.slo_ttft, "tpot": args.slo_tpot},
+        "horizon": horizon,
+        "seed": seed,
+        "knee_rate": knee,
+        "knee_horizon": knee_h,
+        "knee_goodput": knee_goodput,
+        "knee_sweep": {str(r): by_rate[r] for r in sorted(by_rate)},
+        "burst_mean_rate": burst_mean,
+        "burst_horizon": burst_h,
+        "cooldown_horizon": cool_h,
+        "retain_bar": retain,
+        "burst_admission": rep_adm,
+        "burst_control": rep_ctl,
+        "retry_storm": {
+            "report": res_storm.report(slo),
+            "n_lost": n_lost,
+        },
+        "wall_time_s": time.perf_counter() - t0,
+        "failures": failures,
+    }
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out} ({report['wall_time_s']:.1f}s)", file=sys.stderr)
+    if failures:
+        for msg in failures:
+            print(f"OVERLOAD FAIL: {msg}", file=sys.stderr)
+        if args.check:
+            sys.exit(1)
+    else:
+        print("overload: all admission-control gates hold", file=sys.stderr)
+    return report
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="qwen3-30b", choices=sorted(SIM_MODELS))
@@ -277,8 +580,19 @@ def main(argv=None) -> dict:
         "link-flap, straggler, probe-poison, pim-brownout-engine) or 'all'",
     )
     ap.add_argument(
+        "--overload", action="store_true",
+        help="run the admission-control overload suite instead of the "
+        "rate sweep: knee finding, 3x-knee MMPP burst (admission vs "
+        "unprotected control), brownout hysteresis, retry-storm budget",
+    )
+    ap.add_argument(
+        "--overload-retain", type=float, default=0.8,
+        help="with --overload: goodput at 3x knee must stay >= this "
+        "fraction of the knee goodput (and the control must fall below it)",
+    )
+    ap.add_argument(
         "--check", action="store_true",
-        help="with --chaos: exit nonzero if any recovery invariant fails",
+        help="with --chaos/--overload: exit nonzero if any invariant fails",
     )
     ap.add_argument(
         "--paged", action="store_true",
@@ -292,10 +606,13 @@ def main(argv=None) -> dict:
     if args.out is None:
         args.out = os.path.join(
             "benchmarks", "out",
-            "chaos.json" if args.chaos else "cluster_bench.json",
+            "chaos.json" if args.chaos
+            else ("overload.json" if args.overload else "cluster_bench.json"),
         )
     if args.chaos:
         return run_chaos_suite(args)
+    if args.overload:
+        return run_overload_suite(args)
 
     if args.quick:
         horizon = args.horizon or 3.0

@@ -15,6 +15,59 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.cluster_bench import main as bench_main  # noqa: E402
 
 
+def render_overload(report: dict) -> None:
+    """Human-readable rendering of the overload run's admission-layer
+    counters: shed reasons, per-class outcomes, brownout transitions,
+    breaker state machine, retry-budget utilization."""
+    adm_rep = report["burst_admission"]
+    print(
+        f"overload: knee={report['knee_rate']:.0f}rps "
+        f"(goodput {report['knee_goodput']:.1f}), burst mean "
+        f"{report['burst_mean_rate']:.0f}rps over "
+        f"{report['burst_horizon']:.1f}s",
+        file=sys.stderr,
+    )
+    print(
+        f"  outcomes: completed={adm_rep['n_completed']} "
+        f"shed={adm_rep['n_shed']} expired={adm_rep['n_expired']} "
+        f"dropped={adm_rep['n_dropped']} "
+        f"(control completed={report['burst_control']['n_completed']})",
+        file=sys.stderr,
+    )
+    for reason, n in sorted(adm_rep.get("shed_reasons", {}).items()):
+        print(f"  shed[{reason}] = {n}", file=sys.stderr)
+    for cls, blk in sorted(adm_rep.get("by_class", {}).items()):
+        print(
+            f"  class[{cls}]: completed={blk['n_completed']} "
+            f"shed={blk['n_shed']} expired={blk['n_expired']} "
+            f"ttft_p99={blk['ttft']['p99']}",
+            file=sys.stderr,
+        )
+    adm = adm_rep.get("admission") or {}
+    bro = adm.get("brownout", {})
+    for t, old, new, reason in bro.get("transitions", []):
+        print(
+            f"  brownout t={t:.2f}s {old} -> {new} ({reason})",
+            file=sys.stderr,
+        )
+    storm = report["retry_storm"]["report"].get("admission") or {}
+    budget = storm.get("retry_budget", {})
+    breaker = storm.get("breaker", {})
+    print(
+        f"  retry-storm: retries={budget.get('n_retries')} "
+        f"deferred={budget.get('n_deferred')} "
+        f"budget_peak={budget.get('peak_utilization')} "
+        f"breaker_opens={breaker.get('n_opens')} "
+        f"probes={breaker.get('n_probes')}",
+        file=sys.stderr,
+    )
+    for tr in breaker.get("transitions", []):
+        print(f"  breaker {tr}", file=sys.stderr)
+    if report["failures"]:
+        for msg in report["failures"]:
+            print(f"  FAIL: {msg}", file=sys.stderr)
+
+
 def main() -> None:
     argv = sys.argv[1:]
     if "--full" in argv:
@@ -27,9 +80,16 @@ def main() -> None:
         if "--trace-out" not in argv:
             argv += [
                 "--trace-out",
-                os.path.join("benchmarks", "out", "cluster_trace.json"),
+                os.path.join(
+                    "benchmarks", "out",
+                    "overload_trace.json" if "--overload" in argv
+                    else "cluster_trace.json",
+                ),
             ]
     report = bench_main(argv)
+    if report.get("mode") == "overload":
+        render_overload(report)
+        return
     # Degenerate-point rendering: a sweep point where every request was
     # dropped/shed still serializes (explicit None percentiles + the
     # dropped_all flag) — surface those points instead of crashing on them.

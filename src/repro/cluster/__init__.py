@@ -7,8 +7,21 @@ goodput).  See ``benchmarks/cluster_bench.py`` for the max-QPS-under-SLO
 sweep and ``examples/cluster_serve.py`` for a narrative run.
 """
 
+from .admission import (  # noqa: F401
+    BATCH,
+    INTERACTIVE,
+    PRIORITIES,
+    STAGE_NAMES,
+    AdmissionConfig,
+    AdmissionController,
+    BrownoutController,
+    CircuitBreaker,
+    RetryBudget,
+    TokenBucket,
+)
 from .arrivals import (  # noqa: F401
     ArrivalProcess,
+    ClassMix,
     LengthModel,
     MMPPProcess,
     PoissonProcess,

@@ -1,0 +1,659 @@
+"""Overload-robust admission control for the cluster (and engine) layer.
+
+A burst past the SLO knee must degrade into *explicit, prioritized*
+refusals — not into unbounded queues that blow every SLO at once
+(congestion collapse).  This module holds the four cooperating pieces the
+simulator (and the live engine, via its brownout hook) compose:
+
+* **priority classes + token buckets** — every request carries a
+  ``priority`` (:data:`INTERACTIVE` / :data:`BATCH`) and an optional
+  absolute ``deadline`` (latest acceptable *service start*).  Per-class
+  :class:`TokenBucket` rate limits cap the admitted rate near measured
+  capacity, so the replicas see at most what they can serve and the
+  excess is shed at the front door with a computed ``retry_after``
+  (backpressure to the arrival source) instead of rotting in a queue.
+* **retry budget** (:class:`RetryBudget`) — a global rolling-window cap
+  on crash re-dispatches (retries <= ``ratio`` x admissions per
+  ``window``), layered on the jittered exponential backoff: a partial
+  outage cannot amplify itself into a retry storm, because retries past
+  the budget are *deferred* to the window's next free slot, never
+  silently dropped.
+* **circuit breaker** (:class:`CircuitBreaker`) — closed / open /
+  half-open over the orphan re-dispatch path, driven by the
+  :class:`~repro.faults.health.HealthMonitor` failure census: when the
+  replica pool is gone, retries stop probing it entirely until a
+  cooldown grants limited half-open probes.
+* **staged brownout** (:class:`BrownoutController`) — an SLO-fed state
+  machine ``healthy -> brownout-1 -> brownout-2 -> shed`` with
+  hysteresis (``confirm`` consecutive breaches to escalate one stage,
+  ``recover`` in-bound evaluations to de-escalate), reusing the PR-7
+  :class:`~repro.faults.health.Transition` log so time-to-engage /
+  time-to-clear fall out of the same machinery as fault detection.
+  Stage 1 clamps the batch tier's ``max_new_tokens`` and cuts its bucket
+  rate; stage 2 additionally cuts every class's admit rate (the live
+  engine's analog is the GPU-only ``SieveState`` clamp on the
+  no-recompile refresh path); stage 3 sheds the batch tier outright.
+
+Everything is deterministic in simulated time — no wall clocks, no
+unseeded randomness — so chaos/overload runs replay bit-identically.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.faults.health import FAILED, HealthMonitor, Transition
+
+# ---------------------------------------------------------------------------
+# Priority classes / shed reasons / brownout stages
+# ---------------------------------------------------------------------------
+
+INTERACTIVE = "interactive"
+BATCH = "batch"
+PRIORITIES = (INTERACTIVE, BATCH)
+_PRIORITY_RANK = {INTERACTIVE: 0, BATCH: 1}
+
+# shed reasons (``ClusterRequest.shed_reason`` + per-reason counters)
+SHED_RATE_LIMIT = "rate_limit"  # per-class token bucket empty
+SHED_QUEUE_FULL = "queue_full"  # every candidate replica queue at max_queue
+SHED_NO_REPLICA = "no_replica"  # every replica excluded (pool down)
+SHED_DELAY_BOUND = "delay_bound"  # router's shed_delay estimate exceeded
+SHED_BROWNOUT = "brownout"  # stage-3 brownout: batch tier refused
+
+STAGE_HEALTHY = 0
+STAGE_BROWNOUT1 = 1
+STAGE_BROWNOUT2 = 2
+STAGE_SHED = 3
+STAGE_NAMES = ("healthy", "brownout1", "brownout2", "shed")
+
+
+def priority_rank(priority: str) -> int:
+    """Lower ranks admit first (unknown classes sort after batch)."""
+    return _PRIORITY_RANK.get(priority, len(PRIORITIES))
+
+
+def edf_key(req) -> Tuple[int, float, int]:
+    """EDF queue ordering: priority class first, then earliest deadline,
+    then submission order (so deadline-free traffic keeps exact FIFO
+    semantics — the pre-admission behavior — as the tie-break)."""
+    d = req.deadline
+    return (
+        priority_rank(req.priority),
+        d if d is not None else float("inf"),
+        req.queue_seq,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Token bucket
+# ---------------------------------------------------------------------------
+
+
+class TokenBucket:
+    """Deterministic token bucket in simulated time.
+
+    ``factor`` scales the refill rate without losing accumulated tokens —
+    the brownout controller's admit-rate cut dials it down and back up.
+    """
+
+    def __init__(self, rate: float, burst: float):
+        if rate <= 0 or burst < 1:
+            raise ValueError(f"need rate > 0 and burst >= 1, got {rate}/{burst}")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.factor = 1.0
+        self.tokens = float(burst)
+        self._t = 0.0
+
+    def reset(self) -> None:
+        self.factor = 1.0
+        self.tokens = self.burst
+        self._t = 0.0
+
+    def _refill(self, now: float) -> None:
+        if now > self._t:
+            self.tokens = min(
+                self.burst, self.tokens + (now - self._t) * self.rate * self.factor
+            )
+            self._t = now
+
+    def try_take(self, now: float) -> bool:
+        self._refill(now)
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+    def next_free(self, now: float) -> float:
+        """Earliest time a token will be available (``now`` if one is)."""
+        self._refill(now)
+        if self.tokens >= 1.0:
+            return now
+        eff = self.rate * self.factor
+        if eff <= 0.0:
+            return float("inf")
+        return now + (1.0 - self.tokens) / eff
+
+
+# ---------------------------------------------------------------------------
+# Retry budget
+# ---------------------------------------------------------------------------
+
+
+class RetryBudget:
+    """Rolling-window global cap: retries <= max(min_retries, ratio x
+    admissions in the trailing ``window`` seconds).
+
+    :meth:`acquire_at` never refuses outright — a retry past the budget is
+    *deferred* to the earliest time a slot frees (the oldest in-window
+    retry ageing out), which is exactly the storm-damping semantics: the
+    retry pressure is spread out, not amplified or lost.
+    """
+
+    def __init__(self, window: float = 0.5, ratio: float = 0.25, min_retries: int = 2):
+        if window <= 0 or ratio < 0 or min_retries < 1:
+            raise ValueError(
+                f"need window > 0, ratio >= 0, min_retries >= 1; "
+                f"got {window}/{ratio}/{min_retries}"
+            )
+        self.window = float(window)
+        self.ratio = float(ratio)
+        self.min_retries = int(min_retries)
+        self.reset()
+
+    def reset(self) -> None:
+        self._admissions: List[float] = []
+        self._retries: List[float] = []
+        self.n_admissions = 0
+        self.n_retries = 0
+        self.n_deferred = 0
+        # worst observed (retries in window) / allowance — the "stayed
+        # under budget" gate is peak_utilization <= 1.0
+        self.peak_utilization = 0.0
+
+    def _prune(self, t: float) -> None:
+        lo = t - self.window
+        del self._admissions[: bisect.bisect_left(self._admissions, lo)]
+        del self._retries[: bisect.bisect_left(self._retries, lo)]
+
+    def note_admission(self, now: float) -> None:
+        bisect.insort(self._admissions, now)
+        self.n_admissions += 1
+
+    def allowance(self, now: float) -> int:
+        self._prune(now)
+        return max(self.min_retries, int(self.ratio * len(self._admissions)))
+
+    def acquire_at(self, now: float) -> float:
+        """Register one retry; returns the earliest time it may fire
+        (``now`` when in budget, else deferred to the window's next free
+        slot).  The retry is booked at the returned time, so back-to-back
+        acquisitions during a storm serialize onto the budget."""
+        self._prune(now)
+        t = now
+        allowed = max(self.min_retries, int(self.ratio * len(self._admissions)))
+        n_in = len([x for x in self._retries if x > t - self.window])
+        if n_in >= allowed:
+            # deferred: the slot frees when the oldest booked retry ages
+            # out of the window (allowance growth from new admissions can
+            # only make this earlier; we take the deterministic bound)
+            idx = len(self._retries) - allowed
+            t = self._retries[max(idx, 0)] + self.window
+            self.n_deferred += 1
+        bisect.insort(self._retries, t)
+        self.n_retries += 1
+        util = (n_in + 1) / max(allowed, 1)
+        self.peak_utilization = max(self.peak_utilization, min(util, 1.0))
+        return t
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_admissions": self.n_admissions,
+            "n_retries": self.n_retries,
+            "n_deferred": self.n_deferred,
+            "peak_utilization": self.peak_utilization,
+            "window": self.window,
+            "ratio": self.ratio,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+BREAKER_CLOSED = "closed"
+BREAKER_OPEN = "open"
+BREAKER_HALF_OPEN = "half_open"
+_BREAKER_CODE = {BREAKER_CLOSED: 0.0, BREAKER_HALF_OPEN: 1.0, BREAKER_OPEN: 2.0}
+
+
+class CircuitBreaker:
+    """Closed / open / half-open gate on the orphan re-dispatch path.
+
+    Opens after ``fail_threshold`` consecutive dispatch failures, or
+    immediately when the :class:`HealthMonitor` census reports the whole
+    pool FAILED (:meth:`sync_health` — the "driven by HealthMonitor"
+    path).  After ``cooldown`` it half-opens and grants
+    ``half_open_probes`` probe dispatches; a success closes it, a failure
+    re-opens.  A fresh probe allowance is granted every further cooldown
+    while half-open, so the breaker can never wedge the retry path shut
+    forever (liveness: every deferred retry eventually gets a probe).
+
+    Transitions reuse :class:`repro.faults.health.Transition` (target
+    ``"breaker"``), so chaos reports render breaker flips next to health
+    flips with the same TTD machinery.
+    """
+
+    def __init__(
+        self,
+        fail_threshold: int = 3,
+        cooldown: float = 0.25,
+        half_open_probes: int = 1,
+        telemetry=None,
+    ):
+        if fail_threshold < 1 or cooldown <= 0 or half_open_probes < 1:
+            raise ValueError("bad breaker parameters")
+        self.fail_threshold = int(fail_threshold)
+        self.cooldown = float(cooldown)
+        self.half_open_probes = int(half_open_probes)
+        self.tel = telemetry
+        self.reset()
+
+    def reset(self) -> None:
+        self.state = BREAKER_CLOSED
+        self._fail_streak = 0
+        self._opened_at = 0.0
+        self._probe_grant_t = 0.0
+        self._probes_left = 0
+        self.n_opens = 0
+        self.n_probes = 0
+        self.transitions: List[Transition] = []
+
+    def _set(self, new: str, t: float, reason: str) -> None:
+        if new == self.state:
+            return
+        self.transitions.append(
+            Transition(t=t, target="breaker", old=self.state, new=new, reason=reason)
+        )
+        self.state = new
+        if new == BREAKER_OPEN:
+            self.n_opens += 1
+            self._opened_at = t
+        if self.tel is not None and self.tel.enabled:
+            self.tel.point(
+                "breaker/state", _BREAKER_CODE[new], t_s=t, track="cluster"
+            )
+
+    def poll(self, now: float) -> str:
+        """Advance time-driven transitions; returns the current state."""
+        if self.state == BREAKER_OPEN and now >= self._opened_at + self.cooldown:
+            self._set(BREAKER_HALF_OPEN, now, "cooldown elapsed")
+            self._probes_left = self.half_open_probes
+            self._probe_grant_t = now
+        elif (
+            self.state == BREAKER_HALF_OPEN
+            and self._probes_left <= 0
+            and now >= self._probe_grant_t + self.cooldown
+        ):
+            # probes were consumed without a verdict: grant another round
+            self._probes_left = self.half_open_probes
+            self._probe_grant_t = now
+        return self.state
+
+    def allow(self, now: float) -> bool:
+        """May a (re-)dispatch proceed right now?  Half-open consumes one
+        probe per grant."""
+        st = self.poll(now)
+        if st == BREAKER_CLOSED:
+            return True
+        if st == BREAKER_HALF_OPEN and self._probes_left > 0:
+            self._probes_left -= 1
+            self.n_probes += 1
+            return True
+        return False
+
+    def retry_at(self, now: float) -> float:
+        """When a refused dispatch should try again."""
+        if self.state == BREAKER_OPEN:
+            return max(self._opened_at + self.cooldown, now + 1e-3)
+        return now + self.cooldown  # half-open, probes exhausted
+
+    def on_success(self, now: float) -> None:
+        self._fail_streak = 0
+        if self.state != BREAKER_CLOSED:
+            self._set(BREAKER_CLOSED, now, "probe succeeded")
+
+    def on_failure(self, now: float) -> None:
+        self._fail_streak += 1
+        if self.state == BREAKER_HALF_OPEN:
+            self._set(BREAKER_OPEN, now, "probe failed")
+        elif (
+            self.state == BREAKER_CLOSED
+            and self._fail_streak >= self.fail_threshold
+        ):
+            self._set(BREAKER_OPEN, now, f"{self._fail_streak} consecutive failures")
+
+    def sync_health(self, mon: HealthMonitor, now: float) -> None:
+        """HealthMonitor drive: a fully-FAILED replica census trips the
+        breaker without waiting for ``fail_threshold`` dispatch failures."""
+        counts = mon.status_counts(prefix="replica-")
+        n = sum(counts.values())
+        if n > 0 and counts.get(FAILED, 0) >= n and self.state == BREAKER_CLOSED:
+            self._set(BREAKER_OPEN, now, "health: all replicas failed")
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "state": self.state,
+            "n_opens": self.n_opens,
+            "n_probes": self.n_probes,
+            "transitions": [
+                [tr.t, tr.old, tr.new, tr.reason] for tr in self.transitions
+            ],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Staged brownout
+# ---------------------------------------------------------------------------
+
+
+class BrownoutController:
+    """SLO-fed staged-degradation state machine with hysteresis.
+
+    The pressure signal is ``max(interactive-TTFT EMA, estimated queue
+    delay)`` in units of the TTFT SLO.  Escalation to stage ``k+1``
+    requires ``confirm`` consecutive evaluations above ``enter[k]`` x SLO;
+    de-escalation requires ``recover`` consecutive evaluations below
+    ``exit_frac * enter[k-1]`` x SLO — one burst window never flips the
+    stage, and the enter/exit gap prevents limit-cycling at a threshold.
+    """
+
+    def __init__(
+        self,
+        slo_ttft: float,
+        enter: Tuple[float, float, float] = (0.5, 1.0, 2.0),
+        exit_frac: float = 0.6,
+        confirm: int = 2,
+        recover: int = 3,
+        eval_every: float = 0.05,
+        alpha: float = 0.3,
+        telemetry=None,
+    ):
+        if slo_ttft <= 0:
+            raise ValueError("brownout needs a positive TTFT SLO")
+        if not (len(enter) == 3 and all(a < b for a, b in zip(enter, enter[1:]))):
+            raise ValueError(f"enter thresholds must be 3 increasing values: {enter}")
+        if not (0 < exit_frac < 1):
+            raise ValueError("exit_frac must be in (0, 1)")
+        self.slo_ttft = float(slo_ttft)
+        self.enter = tuple(float(x) * slo_ttft for x in enter)
+        self.exit_frac = float(exit_frac)
+        self.confirm = int(confirm)
+        self.recover = int(recover)
+        self.eval_every = float(eval_every)
+        self.alpha = float(alpha)
+        self.tel = telemetry
+        self.reset()
+
+    def reset(self) -> None:
+        self.stage = STAGE_HEALTHY
+        self.ema_ttft: Optional[float] = None
+        self._hi_streak = 0
+        self._lo_streak = 0
+        self.next_eval = 0.0
+        self.n_evals = 0
+        self.transitions: List[Transition] = []
+
+    def observe_ttft(self, ttft: float) -> None:
+        """Feed one realized interactive TTFT (completion-time signal)."""
+        if self.ema_ttft is None:
+            self.ema_ttft = float(ttft)
+        else:
+            self.ema_ttft = (1 - self.alpha) * self.ema_ttft + self.alpha * float(ttft)
+
+    def signal(self, est_delay: float) -> float:
+        return max(self.ema_ttft or 0.0, est_delay)
+
+    def _set_stage(self, new: int, t: float, reason: str) -> None:
+        self.transitions.append(
+            Transition(
+                t=t,
+                target="brownout",
+                old=STAGE_NAMES[self.stage],
+                new=STAGE_NAMES[new],
+                reason=reason,
+            )
+        )
+        self.stage = new
+        if self.tel is not None and self.tel.enabled:
+            self.tel.point("brownout/stage", float(new), t_s=t, track="cluster")
+
+    def evaluate(self, now: float, est_delay: float) -> int:
+        """One cadence tick; returns the (possibly changed) stage."""
+        self.next_eval = now + self.eval_every
+        self.n_evals += 1
+        sig = self.signal(est_delay)
+        if self.stage < STAGE_SHED and sig > self.enter[self.stage]:
+            self._hi_streak += 1
+            self._lo_streak = 0
+            if self._hi_streak >= self.confirm:
+                self._set_stage(
+                    self.stage + 1, now,
+                    f"pressure {sig:.3f}s > {self.enter[self.stage]:.3f}s",
+                )
+                self._hi_streak = 0
+        elif (
+            self.stage > STAGE_HEALTHY
+            and sig < self.exit_frac * self.enter[self.stage - 1]
+        ):
+            self._lo_streak += 1
+            self._hi_streak = 0
+            if self._lo_streak >= self.recover:
+                self._set_stage(
+                    self.stage - 1, now,
+                    f"pressure {sig:.3f}s < "
+                    f"{self.exit_frac * self.enter[self.stage - 1]:.3f}s",
+                )
+                self._lo_streak = 0
+        else:
+            self._hi_streak = 0
+            self._lo_streak = 0
+        return self.stage
+
+    def time_to_engage(self, t0: float) -> Optional[float]:
+        """Delay from ``t0`` to the first escalation at/after it (the TTD
+        analog for overload instead of faults)."""
+        for tr in self.transitions:
+            if tr.t >= t0 and STAGE_NAMES.index(tr.new) > STAGE_NAMES.index(tr.old):
+                return tr.t - t0
+        return None
+
+    def max_stage(self) -> int:
+        worst = self.stage
+        for tr in self.transitions:
+            worst = max(worst, STAGE_NAMES.index(tr.new))
+        return worst
+
+
+# ---------------------------------------------------------------------------
+# Admission controller (front door)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AdmissionConfig:
+    """Knobs for the whole overload-robustness layer.  ``None`` rates
+    disable that class's bucket; ``brownout_ttft=None`` disables the
+    brownout controller; ``retry_ratio=None`` disables the retry budget;
+    ``breaker=False`` disables the circuit breaker."""
+
+    # per-class token buckets (requests/second, burst in requests)
+    interactive_rate: Optional[float] = None
+    interactive_burst: float = 16.0
+    batch_rate: Optional[float] = None
+    batch_burst: float = 16.0
+    # retry budget (global, rolling window)
+    retry_ratio: Optional[float] = 0.25
+    retry_window: float = 0.5
+    retry_min: int = 2
+    # circuit breaker on the re-dispatch path
+    breaker: bool = True
+    breaker_fail_threshold: int = 3
+    breaker_cooldown: float = 0.25
+    breaker_probes: int = 1
+    # staged brownout (enabled when an SLO target is given)
+    brownout_ttft: Optional[float] = None
+    brownout_enter: Tuple[float, float, float] = (0.5, 1.0, 2.0)
+    brownout_exit_frac: float = 0.6
+    brownout_confirm: int = 2
+    brownout_recover: int = 3
+    brownout_eval_every: float = 0.05
+    brownout_alpha: float = 0.3
+    # stage actions: batch max_new_tokens clamp (stage >= 1), batch
+    # bucket-rate cut (stage >= 1), global admit-rate cut (stage >= 2)
+    brownout_batch_max_new: int = 8
+    brownout_batch_rate_factor: float = 0.5
+    brownout_admit_factor: float = 0.5
+
+
+class AdmissionController:
+    """The cluster's front door: per-class token buckets + the brownout
+    stage's admit policy, with the retry budget and circuit breaker
+    attached for the simulator's re-dispatch path."""
+
+    def __init__(self, cfg: AdmissionConfig, telemetry=None):
+        self.cfg = cfg
+        self.tel = telemetry
+        self._bucket_specs = {
+            INTERACTIVE: (cfg.interactive_rate, cfg.interactive_burst),
+            BATCH: (cfg.batch_rate, cfg.batch_burst),
+        }
+        self.buckets: Dict[str, TokenBucket] = {
+            cls: TokenBucket(rate, burst)
+            for cls, (rate, burst) in self._bucket_specs.items()
+            if rate is not None
+        }
+        self.retry_budget = (
+            RetryBudget(cfg.retry_window, cfg.retry_ratio, cfg.retry_min)
+            if cfg.retry_ratio is not None
+            else None
+        )
+        self.breaker = (
+            CircuitBreaker(
+                cfg.breaker_fail_threshold,
+                cfg.breaker_cooldown,
+                cfg.breaker_probes,
+                telemetry=telemetry,
+            )
+            if cfg.breaker
+            else None
+        )
+        self.brownout = (
+            BrownoutController(
+                cfg.brownout_ttft,
+                enter=cfg.brownout_enter,
+                exit_frac=cfg.brownout_exit_frac,
+                confirm=cfg.brownout_confirm,
+                recover=cfg.brownout_recover,
+                eval_every=cfg.brownout_eval_every,
+                alpha=cfg.brownout_alpha,
+                telemetry=telemetry,
+            )
+            if cfg.brownout_ttft is not None
+            else None
+        )
+        self.reset()
+
+    def reset(self) -> None:
+        for b in self.buckets.values():
+            b.reset()
+        if self.retry_budget is not None:
+            self.retry_budget.reset()
+        if self.breaker is not None:
+            self.breaker.reset()
+        if self.brownout is not None:
+            self.brownout.reset()
+        self.n_admitted: Dict[str, int] = {cls: 0 for cls in PRIORITIES}
+        self.n_clamped = 0
+        self.shed_reasons: Dict[str, int] = {}
+
+    # ---- brownout stage actions -----------------------------------------
+    @property
+    def stage(self) -> int:
+        return self.brownout.stage if self.brownout is not None else STAGE_HEALTHY
+
+    def apply_stage(self) -> None:
+        """Re-derive bucket rate factors from the current stage."""
+        stage = self.stage
+        cut = self.cfg.brownout_admit_factor if stage >= STAGE_BROWNOUT2 else 1.0
+        for cls, b in self.buckets.items():
+            f = cut
+            if cls == BATCH and stage >= STAGE_BROWNOUT1:
+                f *= self.cfg.brownout_batch_rate_factor
+            b.factor = f
+
+    # ---- the front door --------------------------------------------------
+    def count_shed(self, reason: str) -> None:
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def admit(self, req, now: float) -> Optional[str]:
+        """``None`` when admitted (stage-1 batch clamp applied in place),
+        else the shed reason.  Shed requests get ``retry_after`` stamped
+        so the arrival source sees backpressure, not a silent refusal."""
+        cls = req.priority
+        if cls == BATCH and self.stage >= STAGE_SHED:
+            self.count_shed(SHED_BROWNOUT)
+            req.shed_reason = SHED_BROWNOUT
+            req.retry_after = self.retry_after(req, now)
+            return SHED_BROWNOUT
+        bucket = self.buckets.get(cls)
+        if bucket is not None and not bucket.try_take(now):
+            self.count_shed(SHED_RATE_LIMIT)
+            req.shed_reason = SHED_RATE_LIMIT
+            req.retry_after = self.retry_after(req, now)
+            return SHED_RATE_LIMIT
+        if cls == BATCH and self.stage >= STAGE_BROWNOUT1:
+            cap = self.cfg.brownout_batch_max_new
+            if req.max_output is None or req.max_output > cap:
+                req.max_output = cap
+                self.n_clamped += 1
+        self.n_admitted[cls] = self.n_admitted.get(cls, 0) + 1
+        return None
+
+    def retry_after(self, req, now: float) -> float:
+        """Backpressure hint: how long the source should wait before
+        re-offering a shed request."""
+        bucket = self.buckets.get(req.priority)
+        if bucket is not None:
+            t = bucket.next_free(now)
+            if t != float("inf"):
+                return max(t - now, 1e-3)
+        if self.brownout is not None and self.stage >= STAGE_BROWNOUT1:
+            return self.brownout.eval_every * self.brownout.recover
+        return 0.05
+
+    # ---- reporting -------------------------------------------------------
+    def summary(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "n_admitted": dict(self.n_admitted),
+            "n_clamped": self.n_clamped,
+            "shed_reasons": dict(self.shed_reasons),
+            "stage": STAGE_NAMES[self.stage],
+        }
+        if self.brownout is not None:
+            out["brownout"] = {
+                "stage": STAGE_NAMES[self.brownout.stage],
+                "max_stage": STAGE_NAMES[self.brownout.max_stage()],
+                "n_evals": self.brownout.n_evals,
+                "transitions": [
+                    [tr.t, tr.old, tr.new, tr.reason]
+                    for tr in self.brownout.transitions
+                ],
+            }
+        if self.retry_budget is not None:
+            out["retry_budget"] = self.retry_budget.stats()
+        if self.breaker is not None:
+            out["breaker"] = self.breaker.stats()
+        return out

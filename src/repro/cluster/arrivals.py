@@ -24,7 +24,7 @@ seed.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -32,12 +32,54 @@ import numpy as np
 
 @dataclass(frozen=True)
 class RequestSpec:
-    """One request of the offered load (immutable workload description)."""
+    """One request of the offered load (immutable workload description).
+
+    ``priority`` is the request's service class (``"interactive"`` or
+    ``"batch"``); ``deadline`` is the absolute latest acceptable *service
+    start* (first-token) time, or None for no deadline.  Both default to
+    the pre-admission behavior (interactive, no deadline).
+    """
 
     req_id: int
     arrival_time: float  # seconds since trace start
     prompt_len: int
     output_len: int
+    priority: str = "interactive"
+    deadline: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class ClassMix:
+    """Priority/deadline assignment for generated arrivals.
+
+    A fraction ``p_interactive`` of requests (Bernoulli per request, from
+    the process's own seeded RNG) are interactive with
+    ``deadline = arrival + interactive_slack`` (None slack → no
+    deadline); the rest are batch with ``batch_slack`` likewise.
+    """
+
+    p_interactive: float = 1.0
+    interactive_slack: Optional[float] = None
+    batch_slack: Optional[float] = None
+
+    def assign(
+        self, specs: List["RequestSpec"], rng: np.random.Generator
+    ) -> List["RequestSpec"]:
+        if not specs:
+            return specs
+        draws = rng.random(len(specs))
+        out = []
+        for spec, u in zip(specs, draws):
+            interactive = bool(u < self.p_interactive)
+            slack = self.interactive_slack if interactive else self.batch_slack
+            out.append(
+                replace(
+                    spec,
+                    priority="interactive" if interactive else "batch",
+                    deadline=None if slack is None else spec.arrival_time + slack,
+                )
+            )
+        return out
 
 
 @dataclass(frozen=True)
@@ -102,11 +144,18 @@ def _make_specs(
 class PoissonProcess(ArrivalProcess):
     """Homogeneous Poisson arrivals at ``rate`` requests/second."""
 
-    def __init__(self, rate: float, lengths: Optional[LengthModel] = None, seed: int = 0):
+    def __init__(
+        self,
+        rate: float,
+        lengths: Optional[LengthModel] = None,
+        seed: int = 0,
+        mix: Optional[ClassMix] = None,
+    ):
         assert rate > 0
         self.rate = rate
         self.lengths = lengths or LengthModel()
         self.seed = seed
+        self.mix = mix
 
     def generate(self, horizon: float) -> List[RequestSpec]:
         rng = np.random.default_rng(self.seed)
@@ -119,7 +168,8 @@ class PoissonProcess(ArrivalProcess):
             for g in gaps:
                 t += g
                 if t >= horizon:
-                    return _make_specs(np.array(times), self.lengths, rng)
+                    specs = _make_specs(np.array(times), self.lengths, rng)
+                    return self.mix.assign(specs, rng) if self.mix else specs
                 times.append(t)
 
 
@@ -140,12 +190,14 @@ class MMPPProcess(ArrivalProcess):
         mean_dwell_burst: float = 0.5,
         lengths: Optional[LengthModel] = None,
         seed: int = 0,
+        mix: Optional[ClassMix] = None,
     ):
         assert rate_calm > 0 and rate_burst > 0
         self.rates = (rate_calm, rate_burst)
         self.dwells = (mean_dwell_calm, mean_dwell_burst)
         self.lengths = lengths or LengthModel()
         self.seed = seed
+        self.mix = mix
 
     @property
     def mean_rate(self) -> float:
@@ -168,7 +220,8 @@ class MMPPProcess(ArrivalProcess):
                     break
                 times.append(tt)
             t, state = t_end, 1 - state
-        return _make_specs(np.array(times), self.lengths, rng)
+        specs = _make_specs(np.array(times), self.lengths, rng)
+        return self.mix.assign(specs, rng) if self.mix else specs
 
 
 class TraceReplay(ArrivalProcess):
@@ -181,7 +234,13 @@ class TraceReplay(ArrivalProcess):
     stretches the trace clock (e.g. 0.5 doubles the offered rate).
     """
 
-    def __init__(self, records: Sequence, time_scale: float = 1.0):
+    def __init__(
+        self,
+        records: Sequence,
+        time_scale: float = 1.0,
+        mix: Optional[ClassMix] = None,
+        seed: int = 0,
+    ):
         rows = []
         for r in records:
             if isinstance(r, dict):
@@ -194,6 +253,8 @@ class TraceReplay(ArrivalProcess):
         rows.sort(key=lambda x: x[0])
         self.records = rows
         self.time_scale = time_scale
+        self.mix = mix
+        self.seed = seed
 
     @classmethod
     def from_json(cls, path: str, time_scale: float = 1.0) -> "TraceReplay":
@@ -209,4 +270,6 @@ class TraceReplay(ArrivalProcess):
             out.append(
                 RequestSpec(req_id=i, arrival_time=ts, prompt_len=p, output_len=o)
             )
+        if self.mix:
+            out = self.mix.assign(out, np.random.default_rng(self.seed))
         return out

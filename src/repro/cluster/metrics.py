@@ -52,9 +52,12 @@ def request_ttft(r: ClusterRequest) -> float:
 
 
 def request_tpot(r: ClusterRequest) -> Optional[float]:
-    if r.spec.output_len <= 1:
+    # decode tokens actually generated — a brownout-clamped request's TPOT
+    # is measured over the tokens it produced, not the tokens it asked for
+    n = r.generated if getattr(r, "generated", 0) > 0 else r.spec.output_len
+    if n <= 1:
         return None
-    return (r.finish_time - r.first_token_time) / (r.spec.output_len - 1)
+    return (r.finish_time - r.first_token_time) / (n - 1)
 
 
 def request_e2e(r: ClusterRequest) -> float:
@@ -85,6 +88,10 @@ def summarize(
     end_time: Optional[float] = None,
     dropped: Optional[List[ClusterRequest]] = None,
     recovery: Optional[Dict] = None,
+    shed: Optional[List[ClusterRequest]] = None,
+    expired: Optional[List[ClusterRequest]] = None,
+    shed_reasons: Optional[Dict[str, int]] = None,
+    admission: Optional[Dict] = None,
 ) -> Dict:
     """Aggregate a finished cluster run into the standard report dict.
 
@@ -95,12 +102,18 @@ def summarize(
     divide-by-zero.
     """
     dropped = dropped or []
+    shed = shed or []
+    expired = expired or []
     out: Dict = {
         "n_completed": len(completed),
         "n_dropped": len(dropped),
-        "dropped_all": bool(dropped) and not completed,
+        "n_shed": len(shed),
+        "n_expired": len(expired),
+        "dropped_all": bool(dropped or shed or expired) and not completed,
         "horizon": horizon,
     }
+    if shed_reasons:
+        out["shed_reasons"] = dict(shed_reasons)
 
     ttfts = [request_ttft(r) for r in completed]
     tpots = [t for t in (request_tpot(r) for r in completed) if t is not None]
@@ -145,16 +158,61 @@ def summarize(
         }
         # MoE capacity-overflow drops (estimated per step by the replica
         # simulators; live engines report the measured MoEOut.n_dropped)
-        dropped = sum(getattr(rep, "dropped_tokens", 0.0) for rep in replicas)
+        tok_dropped = sum(
+            getattr(rep, "dropped_tokens", 0.0) for rep in replicas
+        )
         routed = sum(getattr(rep, "routed_tokens", 0.0) for rep in replicas)
-        out["expert_dropped_tokens"] = dropped
-        out["expert_drop_rate"] = dropped / routed if routed > 0 else 0.0
+        out["expert_dropped_tokens"] = tok_dropped
+        out["expert_drop_rate"] = tok_dropped / routed if routed > 0 else 0.0
         migrated_in = {
             str(rep.replica_id): getattr(rep, "n_migrated_in", 0)
             for rep in replicas
         }
         if any(migrated_in.values()):
             out["replica_migrated_in"] = migrated_in
+
+    # per-priority-class breakdown — the overload gates read the
+    # interactive tier's TTFT tail and the batch tier's absorbed
+    # degradation from here
+    classes = sorted(
+        {getattr(r, "priority", None) or "interactive"
+         for lst in (completed, shed, expired, dropped) for r in lst}
+    )
+    if classes != ["interactive"] or shed or expired:
+        by_class: Dict[str, Dict] = {}
+        for cls in classes:
+            done_c = [
+                r for r in completed
+                if (getattr(r, "priority", None) or "interactive") == cls
+            ]
+            block: Dict = {
+                "n_completed": len(done_c),
+                "n_shed": sum(
+                    1 for r in shed
+                    if (getattr(r, "priority", None) or "interactive") == cls
+                ),
+                "n_expired": sum(
+                    1 for r in expired
+                    if (getattr(r, "priority", None) or "interactive") == cls
+                ),
+                "ttft": percentiles([request_ttft(r) for r in done_c]),
+                "tpot": percentiles(
+                    [t for t in (request_tpot(r) for r in done_c)
+                     if t is not None]
+                ),
+            }
+            if slo is not None:
+                good_c = [r for r in done_c if meets_slo(r, slo)]
+                block["goodput_rps"] = (
+                    len(good_c) / horizon if horizon > 0 else 0.0
+                )
+            by_class[cls] = block
+        out["by_class"] = by_class
+
+    if admission is not None:
+        # admission-layer summary: brownout transitions/stage, breaker
+        # state machine, retry-budget utilization
+        out["admission"] = admission
 
     if recovery is not None:
         # warm-vs-cold crash recovery accounting (cluster simulator):

@@ -26,6 +26,7 @@ from repro.sim.engine import BatchState, ServingSimulator
 from repro.sim.models import SimModelConfig
 from repro.telemetry import Telemetry
 from repro.telemetry import default as default_telemetry
+from .admission import edf_key
 from .arrivals import RequestSpec
 
 
@@ -50,9 +51,36 @@ class ClusterRequest:
     # interconnect model)
     migrations: int = 0
 
+    # ---- admission-control state (repro.cluster.admission) ----
+    # service class + absolute deadline (latest acceptable first-token
+    # time); resolved from the spec when left at their defaults
+    priority: Optional[str] = None
+    deadline: Optional[float] = None
+    # brownout clamp on generated tokens (None = the spec's output_len)
+    max_output: Optional[int] = None
+    shed_reason: Optional[str] = None  # set when refused admission
+    retry_after: Optional[float] = None  # backpressure hint on shed
+    expire_time: Optional[float] = None  # when the deadline killed it
+    queue_seq: int = 0  # submission order — the EDF FIFO tie-break
+
+    def __post_init__(self):
+        if self.priority is None:
+            self.priority = getattr(self.spec, "priority", "interactive")
+        if self.deadline is None:
+            self.deadline = getattr(self.spec, "deadline", None)
+
+    @property
+    def output_target(self) -> int:
+        """Tokens to generate before retiring: the spec's output length,
+        possibly clamped down by a brownout stage (never below 1)."""
+        n = self.spec.output_len
+        if self.max_output is not None:
+            n = min(n, self.max_output)
+        return max(n, 1)
+
     @property
     def done(self) -> bool:
-        return self.generated >= self.spec.output_len
+        return self.generated >= self.output_target
 
     @property
     def position(self) -> int:
@@ -67,6 +95,10 @@ class ReplicaConfig:
     max_prefills_per_step: int = 2
     seq_bucket: int = 256  # KV-depth quantization for the step-time cache
     step_warmup: int = 2  # cost-table warmup calls before caching
+    # Bound on the *waiting* queue (slot-holders excluded); ``try_submit``
+    # rejects past it (counted as shed-at-replica).  None = unbounded,
+    # the pre-admission behavior.
+    max_queue: Optional[int] = None
     # Upper bound on exact step-jumping (consecutive pure-decode steps with
     # an identical duration key collapse into one event); 1 disables.
     max_step_jump: Optional[int] = None
@@ -156,6 +188,11 @@ class Replica:
         self.last_step_dur = 0.0  # single-step duration of the last step
         self.n_crashes = 0
         self.n_migrated_in = 0  # warm-migrated requests delivered here
+
+        # ---- admission-control state (repro.cluster.admission) ----
+        self._queue_seq = 0  # per-replica submission counter (EDF tie-break)
+        self.n_rejected_full = 0  # try_submit refusals (queue at max_queue)
+        self.n_expired = 0  # queued requests killed by their deadline
 
     # ---- load signals used by the router --------------------------------
     @property
@@ -289,20 +326,79 @@ class Replica:
         self.last_step_dur = 0.0
         self.n_crashes = 0
         self.n_migrated_in = 0
+        self._queue_seq = 0
+        self.n_rejected_full = 0
+        self.n_expired = 0
         self.set_pim_degrade(1.0)
         self.set_link_degrade(1.0)
+
+    @property
+    def queue_full(self) -> bool:
+        return (
+            self.cfg.max_queue is not None
+            and len(self.queue) >= self.cfg.max_queue
+        )
 
     def submit(self, req: ClusterRequest, now: float) -> None:
         req.dispatch_time = now
         req.replica_id = self.replica_id
+        req.queue_seq = self._queue_seq
+        self._queue_seq += 1
         self.queue.append(req)
+
+    def try_submit(self, req: ClusterRequest, now: float) -> bool:
+        """Bounded-queue submit: refuse (shed-at-replica) when the waiting
+        queue is at ``max_queue``.  Plain :meth:`submit` stays unbounded
+        for control-plane deliveries (warm migrations must land)."""
+        if self.queue_full:
+            self.n_rejected_full += 1
+            if self.tel.enabled:
+                self.tel.point(
+                    "replica/rejected_full", float(self.n_rejected_full),
+                    t_s=now, track=self.track,
+                )
+            return False
+        self.submit(req, now)
+        return True
+
+    def next_queue_deadline(self) -> Optional[float]:
+        """Earliest deadline among *queued* (not yet admitted) requests —
+        an event-loop wakeup candidate so expiries fire exactly on time."""
+        ds = [r.deadline for r in self.queue if r.deadline is not None]
+        return min(ds) if ds else None
+
+    def expire_queue(self, now: float) -> List[ClusterRequest]:
+        """Remove queued requests whose deadline has passed (they can no
+        longer start service in time — holding a queue position only
+        starves requests that can still meet theirs).  Loud: stamped with
+        ``expire_time``, counted, and surfaced to the caller for the
+        conservation ledger."""
+        if not self.queue:
+            return []
+        expired = [r for r in self.queue if r.deadline is not None and r.deadline <= now]
+        for r in expired:
+            _remove_identity(self.queue, r)
+            r.expire_time = now
+            r.replica_id = None
+            self.n_expired += 1
+            if self.tel.enabled:
+                self.tel.point(
+                    "replica/expired", float(self.n_expired),
+                    t_s=now, track=self.track,
+                )
+        return expired
 
     def _admit(self, now: float) -> None:
         if not self.queue:
             return
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
-                req = self.queue.pop(0)
+                # EDF with class priority: interactive before batch,
+                # earliest deadline first, submission order as the
+                # tie-break — deadline-free single-class traffic (the
+                # default) admits in exactly the historical FIFO order.
+                req = min(self.queue, key=edf_key)
+                _remove_identity(self.queue, req)
                 req.admit_time = now
                 self.slots[i] = req
                 self._active_cache = None
@@ -385,7 +481,7 @@ class Replica:
         self.last_step_dur = dur
         n_jump = 1
         if not prefill_work and decoding and self.cfg.max_step_jump != 1:
-            j = min(r.spec.output_len - r.generated for r in decoding)
+            j = min(r.output_target - r.generated for r in decoding)
             b = self.cfg.seq_bucket
             seq = max(mean_seq, 1)
             j = min(j, -(-seq // b) * b - seq + 1)  # stay in the seq bucket
@@ -452,10 +548,10 @@ class Replica:
         # of every slot (retirement is rare relative to steps).
         done = []
         for r in decoding:
-            if r.generated >= r.spec.output_len:
+            if r.generated >= r.output_target:
                 done.append(r)
         for r, _ in prefill_work:
-            if r.generated >= r.spec.output_len:
+            if r.generated >= r.output_target:
                 done.append(r)
         if done:
             slots = self.slots
@@ -474,11 +570,11 @@ class Replica:
                     # SLO time series at retirement (same definitions as
                     # cluster.metrics: TPOT over the decode phase, E2E
                     # from arrival)
-                    if r.spec.output_len > 1:
+                    if r.generated > 1:
                         tel.point(
                             "slo/tpot",
                             (now - r.first_token_time)
-                            / (r.spec.output_len - 1),
+                            / (r.generated - 1),
                             t_s=now, track=self.track,
                         )
                     tel.point(

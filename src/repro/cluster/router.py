@@ -24,8 +24,9 @@ explicit drops instead of unbounded queueing that blows every SLO.
 
 from __future__ import annotations
 
-from typing import List, Optional, Set
+from typing import Dict, List, Optional, Set
 
+from .admission import SHED_DELAY_BOUND, SHED_NO_REPLICA, SHED_QUEUE_FULL
 from .replica import ClusterRequest, Replica
 
 ROUTER_POLICIES = ("round_robin", "jsq", "least_kv")
@@ -48,6 +49,7 @@ class Router:
         self._rr_next = 0
         self.dispatched = 0
         self.n_shed = 0
+        self.shed_reasons: Dict[str, int] = {}
         # replica ids the health layer has taken out of rotation
         self.excluded: Set[int] = set()
         # replica ids to avoid while any non-deprioritized choice exists
@@ -68,6 +70,7 @@ class Router:
         self.excluded.clear()
         self.deprioritized.clear()
         self.n_shed = 0
+        self.shed_reasons = {}
 
     # ---- choice ---------------------------------------------------------
     def _pick(self, pool: List[Replica]) -> Replica:
@@ -80,11 +83,14 @@ class Router:
         # least_kv
         return min(pool, key=lambda r: (r.kv_load, r.replica_id))
 
-    def choose(self) -> Optional[Replica]:
-        """The dispatch target, or None when every replica is excluded."""
+    def choose(self, skip_full: bool = False) -> Optional[Replica]:
+        """The dispatch target, or None when every replica is excluded
+        (with ``skip_full``: or at its bounded-queue cap)."""
         pool = [
             r for r in self.replicas if r.replica_id not in self.excluded
         ]
+        if skip_full:
+            pool = [r for r in pool if not r.queue_full]
         if not pool:
             return None
         preferred = [
@@ -100,18 +106,45 @@ class Router:
             return 0.0  # no observations yet: admit optimistically
         return r.queue_len * (r.busy_time / r.n_steps)
 
+    def min_estimated_delay(self) -> float:
+        """Best-case queueing delay across the live pool — the brownout
+        controller's queue-pressure signal and the shed path's
+        ``retry_after`` backpressure hint."""
+        pool = [
+            r for r in self.replicas if r.replica_id not in self.excluded
+        ]
+        if not pool:
+            return float("inf")
+        return min(self._estimated_delay(r) for r in pool)
+
+    def _shed(self, req: ClusterRequest, reason: str, now: float) -> None:
+        self.n_shed += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+        req.shed_reason = reason
+        if req.retry_after is None:
+            # backpressure to the arrival source: the live pool's best
+            # current delay estimate is when re-offering could succeed
+            d = self.min_estimated_delay()
+            req.retry_after = d if d != float("inf") else 0.05
+
     def dispatch(self, req: ClusterRequest, now: float) -> Optional[Replica]:
         """Route one request; returns the target replica, or None when the
-        request was shed (admission control) or no replica is available."""
-        r = self.choose()
+        request was shed (``req.shed_reason`` says why: pool down, every
+        bounded queue full, or the delay-bound admission check)."""
+        r = self.choose(skip_full=True)
         if r is None:
-            self.n_shed += 1
+            pool_exists = any(
+                rep.replica_id not in self.excluded for rep in self.replicas
+            )
+            self._shed(
+                req, SHED_QUEUE_FULL if pool_exists else SHED_NO_REPLICA, now
+            )
             return None
         if (
             self.shed_delay is not None
             and self._estimated_delay(r) > self.shed_delay
         ):
-            self.n_shed += 1
+            self._shed(req, SHED_DELAY_BOUND, now)
             return None
         r.submit(req, now)
         self.dispatched += 1

@@ -32,13 +32,18 @@ Fault semantics (repro.faults):
   (EMA + spike detection) and flags sustained inflation DEGRADED, which
   deprioritizes the replica in the router until the duration signal
   recovers.
-* **load shedding** — with ``shed_delay`` set the router refuses arrivals
-  whose estimated queueing delay exceeds the bound (see
-  :class:`Router`); shed requests are counted dropped.
+* **load shedding / admission control** — with ``shed_delay`` set the
+  router refuses arrivals whose estimated queueing delay exceeds the
+  bound (see :class:`Router`); with an :class:`AdmissionConfig` the full
+  overload layer engages (per-class token buckets, EDF bounded queues
+  with loud deadline expiry, retry budget + circuit breaker on the
+  re-dispatch path, staged brownout) — see
+  :mod:`repro.cluster.admission`.
 
-Request conservation generalizes under faults: every submitted request is
-either completed or explicitly dropped (shed or retries exhausted) —
-asserted after every run and pinned by the chaos tests.
+Request conservation generalizes under faults and overload: every
+submitted request leaves exactly one explicit outcome —
+``completed + shed + expired + dropped == submitted`` — asserted after
+every run and pinned by the chaos and admission tests.
 """
 
 from __future__ import annotations
@@ -63,6 +68,7 @@ from repro.recovery.journal import RecoveryJournal
 from repro.sim.engine import BatchState
 from repro.sim.interconnect import InterconnectModel
 from repro.sim.models import SimModelConfig
+from .admission import INTERACTIVE, AdmissionConfig, AdmissionController
 from .arrivals import ArrivalProcess, RequestSpec
 from .metrics import SLO, summarize
 from .replica import ClusterRequest, Replica, ReplicaConfig
@@ -78,9 +84,16 @@ class ClusterResult:
     end_time: float  # when the last request finished (drain included)
     replicas: List[Replica]
     n_submitted: int
-    # requests that did not complete: shed by admission control or
-    # re-dispatched past the retry budget after crashes
+    # requests that did not complete, by explicit outcome:
+    # dropped — crash recovery exhausted (retries past the budget)
+    # shed — refused at admission (rate limit, bounded queues, delay
+    #        bound, brownout, pool down), each with a shed_reason
+    # expired — deadline passed before service start (queued or awaiting
+    #           re-dispatch), stamped with expire_time
     dropped: List[ClusterRequest] = field(default_factory=list)
+    shed: List[ClusterRequest] = field(default_factory=list)
+    expired: List[ClusterRequest] = field(default_factory=list)
+    shed_reasons: Dict[str, int] = field(default_factory=dict)
     # applied fault actions (t, phase, kind, target, magnitude) and the
     # health transitions observed — the chaos determinism tests compare
     # these across same-seed runs
@@ -94,6 +107,13 @@ class ClusterResult:
     n_migrations: int = 0
     n_cold_redispatch: int = 0
     journal: Optional[RecoveryJournal] = None
+    # admission-layer summary (brownout transitions, breaker, retry
+    # budget); None when the run had no AdmissionController
+    admission: Optional[Dict] = None
+
+    @property
+    def n_expired(self) -> int:
+        return len(self.expired)
 
     def report(self, slo: Optional[SLO] = None) -> Dict:
         return summarize(
@@ -103,6 +123,9 @@ class ClusterResult:
             replicas=self.replicas,
             end_time=self.end_time,
             dropped=self.dropped,
+            shed=self.shed,
+            expired=self.expired,
+            shed_reasons=self.shed_reasons,
             recovery={
                 "n_migrations": self.n_migrations,
                 "n_cold_redispatch": self.n_cold_redispatch,
@@ -110,6 +133,7 @@ class ClusterResult:
                     len(self.journal) if self.journal is not None else 0
                 ),
             },
+            admission=self.admission,
         )
 
 
@@ -147,6 +171,7 @@ class ClusterSimulator:
         health: Optional[HealthMonitor] = None,
         migrate_kv: bool = False,
         backoff_base: float = 0.02,
+        admission: Optional[AdmissionConfig] = None,
     ):
         # one Telemetry instance spans all replicas: each replica records
         # onto its own ``replica-{i}`` track in simulated time, so a run
@@ -174,6 +199,14 @@ class ClusterSimulator:
             telemetry=telemetry,
         )
         self.router = Router(router_policy, self.replicas, shed_delay=shed_delay)
+        # overload-robustness layer (repro.cluster.admission): per-class
+        # token buckets, retry budget, circuit breaker, staged brownout.
+        # None keeps the pre-admission behavior bit-identical.
+        self.admission = (
+            AdmissionController(admission, telemetry=telemetry)
+            if admission is not None
+            else None
+        )
 
     def set_router(self, router_policy: str) -> None:
         """Swap the routing policy while keeping the replicas (and their
@@ -262,6 +295,22 @@ class ClusterSimulator:
         journal *drives* the decisions instead."""
         jr = self.journal
         for req in orphans:
+            # Deadline expiry before any recovery work: an orphan whose
+            # service-start deadline has passed (and never produced a first
+            # token) gets neither a migration nor a retry slot.  The
+            # condition is deterministic state, so record() — a
+            # passthrough-to-expect during replay — keeps both modes on the
+            # same journal sequence.
+            if (
+                req.deadline is not None
+                and req.first_token_time is None
+                and req.deadline <= now + _EPS
+            ):
+                jr.record(now, jrn.EXPIRED, req=req.spec.req_id)
+                req.expire_time = now
+                req.replica_id = None
+                self._expired.append(req)
+                continue
             if jr.replaying:
                 kind = jr.peek_kind()
                 if kind == jrn.MIGRATE:
@@ -313,11 +362,24 @@ class ClusterSimulator:
                 * (2.0 ** (req.retries - 1))
                 * (0.5 + self._backoff_rng.random())
             )
-            jr.record(
+            # retry budget: past the rolling-window cap, the retry is
+            # deferred to the window's next free slot (folded into the
+            # journaled delay so replay adopts the same schedule)
+            adm = self.admission
+            if adm is not None and adm.retry_budget is not None:
+                grant = adm.retry_budget.acquire_at(now)
+                delay = max(delay, grant - now)
+            if (
+                adm is not None
+                and adm.breaker is not None
+                and adm.breaker.state != "closed"
+            ):
+                delay = max(delay, adm.breaker.retry_at(now) - now)
+            e = jr.record(
                 now, jrn.BACKOFF,
                 req=req.spec.req_id, delay=delay, retry=req.retries,
             )
-            self._schedule_cold_retry(req, now, delay)
+            self._schedule_cold_retry(req, now, float(e["delay"]))
 
     def _schedule_migration(
         self, req: ClusterRequest, now: float, target: int, handoff: float
@@ -343,6 +405,8 @@ class ClusterSimulator:
     ) -> None:
         """Apply due migration arrivals and backoff retries."""
         jr = self.journal
+        adm = self.admission
+        breaker = adm.breaker if adm is not None else None
         if self._migrations:
             due = [m for m in self._migrations if m[0] <= now + _EPS]
             if due:
@@ -364,12 +428,61 @@ class ClusterSimulator:
             if due:
                 self._retries = [r for r in self._retries if r[0] > now + _EPS]
                 for _, req in due:
-                    if self.router.dispatch(req, now) is None:
+                    # deadline check mirrors _handle_orphans: a retry that
+                    # can no longer start in time expires loudly here
+                    if (
+                        req.deadline is not None
+                        and req.first_token_time is None
+                        and req.deadline <= now + _EPS
+                    ):
+                        jr.record(now, jrn.EXPIRED, req=req.spec.req_id)
+                        req.expire_time = now
+                        self._expired.append(req)
+                        continue
+                    # circuit breaker on the re-dispatch path: while open
+                    # (or half-open with probes spent) the retry is
+                    # deferred — NOT dropped and NOT charged a retry — to
+                    # the breaker's next probe window.  Bounded: every
+                    # cooldown grants fresh half-open probes, and each
+                    # failed probe dispatch below burns a real retry.
+                    if breaker is not None and not breaker.allow(now):
+                        e = jr.record(
+                            now, jrn.BACKOFF,
+                            req=req.spec.req_id,
+                            delay=breaker.retry_at(now) - now,
+                            retry=req.retries, reason="breaker",
+                        )
+                        self._retries.append((now + float(e["delay"]), req))
+                        continue
+                    if self.router.dispatch(req, now) is not None:
+                        if breaker is not None:
+                            breaker.on_success(now)
+                        continue
+                    # dispatch failed (pool down / queues full): charge a
+                    # retry and back off again rather than dropping on the
+                    # first refusal; past max_retries it drops for real
+                    if breaker is not None:
+                        breaker.on_failure(now)
+                    req.retries += 1
+                    if req.retries > self.max_retries:
                         jr.record(
                             now, jrn.DROP,
                             req=req.spec.req_id, reason="no_replica",
                         )
                         dropped.append(req)
+                        continue
+                    delay = (
+                        self.backoff_base
+                        * (2.0 ** (req.retries - 1))
+                        * (0.5 + self._backoff_rng.random())
+                    )
+                    if breaker is not None and breaker.state != "closed":
+                        delay = max(delay, breaker.retry_at(now) - now)
+                    e = jr.record(
+                        now, jrn.BACKOFF,
+                        req=req.spec.req_id, delay=delay, retry=req.retries,
+                    )
+                    self._retries.append((now + float(e["delay"]), req))
 
     def run_requests(
         self,
@@ -389,9 +502,16 @@ class ClusterSimulator:
         self._backoff_rng = np.random.default_rng(self._seed + 0x5EED)
         self.n_migrations = 0
         self.n_cold_redispatch = 0
+        self._expired: List[ClusterRequest] = []
         for rep in self.replicas:  # allow back-to-back runs on one cluster
             rep.reset_requests()
         self.router.reset_health()
+        adm = self.admission
+        if adm is not None:
+            adm.reset()
+        # queued-deadline expiry only needs event-loop wakeups when some
+        # request actually carries a deadline
+        deadlines_active = any(s.deadline is not None for s in specs)
         if specs:
             # Batched cost-table warmup on a representative batch state
             # (full decode slots at the trace's mean KV depth + one prefill
@@ -414,13 +534,14 @@ class ClusterSimulator:
         now = 0.0
         steps = 0
         dropped: List[ClusterRequest] = []
+        shed: List[ClusterRequest] = []
         # crash orphans awaiting their detection-time re-dispatch
         self._orphans: List[ClusterRequest] = []
         detections: List[Tuple[float, int]] = []  # (t_detect, replica_id)
         mon = self.health
         while True:
             # next event: earliest of (arrival, step completion, fault
-            # action, pending crash detection)
+            # action, pending crash detection, queued-request deadline)
             t_next = specs[i].arrival_time if i < len(specs) else None
             for rep in self.replicas:
                 if rep.busy_until is not None and (
@@ -440,6 +561,13 @@ class ClusterSimulator:
             for t_r, _ in self._retries:
                 if t_next is None or t_r < t_next:
                     t_next = t_r
+            if deadlines_active:
+                # each queued deadline fires at most once (the sweep below
+                # removes the request), so these wakeups cannot loop
+                for rep in self.replicas:
+                    t_e = rep.next_queue_deadline()
+                    if t_e is not None and (t_next is None or t_e < t_next):
+                        t_next = t_e
             if t_next is None:
                 break  # nothing pending anywhere -> drained
             now = t_next
@@ -459,6 +587,12 @@ class ClusterSimulator:
                                 f"replica-{rid}", t=now,
                                 reason="heartbeat timeout",
                             )
+                            if adm is not None and adm.breaker is not None:
+                                # a confirmed crash is a dispatch-path
+                                # failure signal; a fully-failed census
+                                # force-opens the breaker immediately
+                                adm.breaker.on_failure(now)
+                                adm.breaker.sync_health(mon, now)
                             # rescue requests routed to the corpse during
                             # the detection window
                             self._orphans.extend(rep.take_queue())
@@ -472,14 +606,49 @@ class ClusterSimulator:
                         )
                         self._handle_orphans(orphans, now, dropped)
             self._deliver_recovery_events(now, dropped)
+            if deadlines_active:
+                # loud queued-deadline expiry: requests that can no longer
+                # start service in time leave the queue at their deadline
+                for rep in self.replicas:
+                    if rep.queue:
+                        self._expired.extend(rep.expire_queue(now))
+            if adm is not None and adm.brownout is not None and (
+                now >= adm.brownout.next_eval
+            ):
+                # lazy cadence: evaluated when the event loop is awake
+                # anyway (never an event candidate, so an idle cluster
+                # never spins on brownout ticks)
+                est = self.router.min_estimated_delay()
+                adm.brownout.evaluate(
+                    now, est if est != float("inf") else adm.brownout.slo_ttft
+                )
+                adm.apply_stage()
 
             while i < len(specs) and specs[i].arrival_time <= now + _EPS:
-                if self.router.dispatch(ClusterRequest(spec=specs[i]), now) is None:
-                    dropped.append(ClusterRequest(spec=specs[i]))
+                req = ClusterRequest(spec=specs[i])
                 i += 1
+                if adm is not None and adm.admit(req, now) is not None:
+                    shed.append(req)  # refused at the front door
+                    continue
+                if self.router.dispatch(req, now) is None:
+                    shed.append(req)  # pool down / queues full / delay bound
+                    continue
+                if adm is not None and adm.retry_budget is not None:
+                    adm.retry_budget.note_admission(now)
             for rep in self.replicas:
                 if rep.busy_until is not None and rep.busy_until <= now + _EPS:
-                    rep.finish_step(now)
+                    done = rep.finish_step(now)
+                    # realized interactive TTFTs feed the brownout
+                    # controller's pressure signal
+                    if adm is not None and adm.brownout is not None:
+                        for r in done:
+                            if (
+                                r.priority == INTERACTIVE
+                                and r.first_token_time is not None
+                            ):
+                                adm.brownout.observe_ttft(
+                                    r.first_token_time - r.spec.arrival_time
+                                )
                     # per-replica step-duration health signal (EMA + spike
                     # detection); sustained inflation -> DEGRADED ->
                     # deprioritized until the signal clears
@@ -518,22 +687,34 @@ class ClusterSimulator:
                 )
 
         completed = [r for rep in self.replicas for r in rep.completed]
-        n_accounted = len(completed) + len(dropped)
+        expired = self._expired
+        n_accounted = len(completed) + len(dropped) + len(shed) + len(expired)
         assert n_accounted == len(specs), (
             f"request conservation violated: {len(specs)} submitted, "
-            f"{len(completed)} completed + {len(dropped)} dropped"
+            f"{len(completed)} completed + {len(shed)} shed + "
+            f"{len(expired)} expired + {len(dropped)} dropped"
         )
-        # exactly-once: no request may complete (or drop) twice — a
-        # migrated request must leave exactly one completion record
-        outcome_ids = [r.spec.req_id for r in completed] + [
-            r.spec.req_id for r in dropped
+        # exactly-once: no request may leave two outcome records — a
+        # migrated/retried request must complete (or shed/expire/drop)
+        # exactly once
+        outcome_ids = [
+            r.spec.req_id
+            for lst in (completed, dropped, shed, expired)
+            for r in lst
         ]
         assert len(outcome_ids) == len(set(outcome_ids)), (
-            "duplicate completion/drop detected"
+            "duplicate request outcome detected"
         )
         if self.journal.replaying:
             self.journal.finish_replay()
         end_time = max((r.finish_time for r in completed), default=0.0)
+        # shed reasons from the final outcomes (a retry refused once but
+        # eventually completed is not a shed), admission-level refusals
+        # included via the reason stamped at shed time
+        shed_reasons: Dict[str, int] = {}
+        for r in shed:
+            key = r.shed_reason or "unknown"
+            shed_reasons[key] = shed_reasons.get(key, 0) + 1
         return ClusterResult(
             completed=completed,
             horizon=horizon,
@@ -541,10 +722,14 @@ class ClusterSimulator:
             replicas=self.replicas,
             n_submitted=len(specs),
             dropped=dropped,
+            shed=shed,
+            expired=expired,
+            shed_reasons=shed_reasons,
             fault_log=injector.timeline_log() if injector is not None else [],
             transitions=list(mon.transitions),
-            n_shed=self.router.n_shed,
+            n_shed=len(shed),
             n_migrations=self.n_migrations,
             n_cold_redispatch=self.n_cold_redispatch,
             journal=self.journal,
+            admission=adm.summary() if adm is not None else None,
         )

@@ -213,7 +213,16 @@ def run_cluster_chaos(
         g_after_chaos / g_after_base if g_after_base > 0 else None
     )
 
-    n_lost = chaos.n_submitted - len(chaos.completed) - len(chaos.dropped)
+    # every submitted request must leave exactly one explicit outcome:
+    # completed, dropped (retries exhausted), shed (admission), or
+    # expired (deadline) — anything else is silently lost
+    n_lost = (
+        chaos.n_submitted
+        - len(chaos.completed)
+        - len(chaos.dropped)
+        - len(chaos.shed)
+        - len(chaos.expired)
+    )
 
     def _orphan_e2e(res) -> Optional[float]:
         # mean end-to-end latency of requests the recovery path touched
@@ -245,6 +254,7 @@ def run_cluster_chaos(
             cold_n_redispatch=cold.n_cold_redispatch,
             cold_n_lost=(
                 cold.n_submitted - len(cold.completed) - len(cold.dropped)
+                - len(cold.shed) - len(cold.expired)
             ),
         )
     return {
@@ -270,6 +280,7 @@ def run_cluster_chaos(
         "n_completed": len(chaos.completed),
         "n_dropped": len(chaos.dropped),
         "n_shed": chaos.n_shed,
+        "n_expired": len(chaos.expired),
         "n_lost": n_lost,
         "recovery": recovery,
         "baseline": base.report(slo),

@@ -226,6 +226,17 @@ class HealthMonitor:
     def targets(self) -> List[str]:
         return sorted(self._targets)
 
+    def status_counts(self, prefix: str = "") -> Dict[str, int]:
+        """Census of per-target statuses (optionally restricted to targets
+        whose name starts with ``prefix``) — the circuit breaker's drive
+        signal: ``counts[FAILED] == total`` means the pool is gone."""
+        counts = {HEALTHY: 0, DEGRADED: 0, FAILED: 0}
+        for name, st in self._targets.items():
+            if prefix and not name.startswith(prefix):
+                continue
+            counts[st.status] = counts.get(st.status, 0) + 1
+        return counts
+
     def time_to_detect(self, target: str, fault_t: float) -> Optional[float]:
         """Time from ``fault_t`` to the first non-healthy transition of
         ``target`` at or after it; None if never detected."""

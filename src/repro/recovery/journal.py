@@ -31,6 +31,7 @@ MIGRATE = "migrate"  # warm KV handoff scheduled to a surviving replica
 COLD_REDISPATCH = "cold_redispatch"  # progress reset + backoff re-dispatch
 BACKOFF = "backoff"  # jittered exponential delay drawn for a retry
 DROP = "drop"  # retry budget exhausted
+EXPIRED = "expired"  # deadline passed while awaiting re-dispatch
 
 JOURNAL_VERSION = 1
 

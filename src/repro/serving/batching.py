@@ -149,8 +149,11 @@ class SlotScheduler:
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * cfg.n_slots
         self.finished: List[Request] = []
+        self._sub_seq = 0  # submission order — the EDF admit tie-break
 
     def submit(self, req: Request) -> None:
+        req._sub_seq = self._sub_seq
+        self._sub_seq += 1
         self.queue.append(req)
 
     @property
@@ -161,12 +164,37 @@ class SlotScheduler:
     def idle(self) -> bool:
         return not self.queue and not self.active
 
+    def expire_queue(self, now: float) -> List[Request]:
+        """Remove queued requests whose service-start deadline has passed
+        (marked ``expired`` — a terminal outcome, counted by the engine)."""
+        expired = [
+            r for r in self.queue if r.deadline is not None and r.deadline <= now
+        ]
+        for r in expired:
+            self.queue.remove(r)
+            r.expired = True
+        return expired
+
     def admit(self) -> List[Request]:
-        """Move queued requests into free slots; returns newly admitted."""
+        """Move queued requests into free slots; returns newly admitted.
+
+        Selection is priority-aware EDF: interactive before batch,
+        earliest deadline first, FIFO submission order as the tie-break —
+        so default traffic (one class, no deadlines) admits in exactly
+        the historical FIFO order.
+        """
         admitted = []
         for i, r in enumerate(self.slots):
             if r is None and self.queue:
-                req = self.queue.popleft()
+                req = min(
+                    self.queue,
+                    key=lambda q: (
+                        0 if q.priority == "interactive" else 1,
+                        q.deadline if q.deadline is not None else float("inf"),
+                        getattr(q, "_sub_seq", q.req_id),
+                    ),
+                )
+                self.queue.remove(req)
                 req.slot = i
                 self.slots[i] = req
                 admitted.append(req)

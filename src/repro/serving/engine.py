@@ -83,6 +83,10 @@ class EngineStats:
     # requests force-finished at the KV capacity (max_seq) — the loud
     # alternative to the old silent clamp-and-overwrite of the last entry
     truncated_requests: int = 0
+    # admission-control terminal outcomes: deadline passed while queued /
+    # batch request refused at submit under brownout stage 3
+    expired_requests: int = 0
+    shed_requests: int = 0
     partitions: List[Dict] = field(default_factory=list)
 
     @property
@@ -112,6 +116,7 @@ class ServingEngine:
         telemetry: Optional[Telemetry] = None,
         cost_source: str = "model",
         health: Optional[HealthMonitor] = None,
+        brownout_batch_max_new: int = 8,
     ):
         if cost_source not in COST_SOURCES:
             raise ValueError(
@@ -168,6 +173,11 @@ class ServingEngine:
         # the measured feed is quarantined (model-proxy fallback)
         self.pim_healthy = True
         self.health = health
+        # cluster-driven brownout stage (0 = healthy .. 3 = shed): stage 1+
+        # clamps batch-tier max_new_tokens at submit, stage 2+ forces the
+        # GPU-only sieve export, stage 3 refuses new batch requests
+        self.brownout_stage = 0
+        self.brownout_batch_max_new = max(int(brownout_batch_max_new), 1)
         if cost_source == "measured" and not self.is_moe:
             raise ValueError(
                 "cost_source='measured' feeds the MoE cost table; "
@@ -351,14 +361,50 @@ class ServingEngine:
         return logits, new_cache, aux
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns False when admission refused it
+        (brownout stage 3 sheds the batch tier at the door)."""
         if len(req.prompt) > self.cfg.max_seq:
             raise ValueError(
                 f"prompt length {len(req.prompt)} exceeds the KV capacity "
                 f"max_seq={self.cfg.max_seq}; raise BatchingConfig.max_seq "
                 "or truncate the prompt"
             )
+        if req.priority == "batch":
+            if self.brownout_stage >= 3:
+                self.stats.shed_requests += 1
+                if self.tel.enabled:
+                    self.tel.counter("engine/shed_requests")
+                return False
+            if self.brownout_stage >= 1:
+                # degrade, don't refuse: the batch tier keeps flowing but
+                # each request's decode budget is clamped
+                req.max_new_tokens = min(
+                    req.max_new_tokens, self.brownout_batch_max_new
+                )
         self.sched.submit(req)
+        return True
+
+    def set_brownout_stage(self, stage: int) -> None:
+        """Adopt a cluster-level brownout stage (idempotent).
+
+        Stage 2+ immediately re-exports the sieve state GPU-only through
+        the fixed-shape refresh path — same compiled step, zero jit-cache
+        misses — shifting expert work off the PIM stack while the cluster
+        is saturated; dropping back below 2 restores the table-driven
+        split at the same cost.
+        """
+        stage = max(int(stage), 0)
+        if stage == self.brownout_stage:
+            return
+        self.brownout_stage = stage
+        if self.uses_cost_split:
+            self._refresh_sieve_state(
+                step=self.stats.steps,
+                gpu_only=(stage >= 2) or not self.pim_healthy,
+            )
+        if self.tel.enabled:
+            self.tel.gauge("engine/brownout_stage", float(stage))
 
     def _run_sieve(self, counts_per_layer: np.ndarray) -> None:
         """Host-side scheduler pass over this step's per-layer counts."""
@@ -520,6 +566,15 @@ class ServingEngine:
         step_span = tel.span("engine/step", value=float(self.stats.steps))
         step_span.__enter__()
         with tel.span("engine/admit"):
+            # queued requests past their service-start deadline leave
+            # loudly before slot assignment — they never held KV
+            expired = self.sched.expire_queue(t0)
+            for r in expired:
+                r.finish_time = t0
+                self.sched.finished.append(r)
+                self.stats.expired_requests += 1
+            if expired and tel.enabled:
+                tel.counter("engine/expired_requests", len(expired))
             self.sched.admit()
 
         # ---- prefill ----
@@ -612,7 +667,8 @@ class ServingEngine:
             with tel.span("engine/sieve_refresh"):
                 self._refresh_sieve_state(
                     step=self.stats.steps + 1,
-                    gpu_only=not self.pim_healthy,
+                    gpu_only=not self.pim_healthy
+                    or self.brownout_stage >= 2,
                 )
 
         # KV-capacity cap: the next decode feed writes KV at
@@ -633,6 +689,9 @@ class ServingEngine:
         if self.paged is not None:
             for r in done:
                 self.paged.free_slot(r.slot)
+        # deadline-expired queue entries are terminal too — surface them
+        # to the caller after the paged free loop (they never held a slot)
+        done = expired + done
         self.stats.steps += 1
         self.stats.wall_time += time.perf_counter() - t0
         if tel.enabled:

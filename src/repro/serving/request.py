@@ -32,6 +32,11 @@ class Request:
     eos_id: Optional[int] = None
     arrival_time: float = 0.0
     req_id: int = field(default_factory=_alloc_id)
+    # admission-control metadata: service class ("interactive"/"batch")
+    # and the latest acceptable service-start time (engine clock, same
+    # base as arrival_time); None = no deadline
+    priority: str = "interactive"
+    deadline: Optional[float] = None
 
     # runtime state
     generated: List[int] = field(default_factory=list)
@@ -40,10 +45,11 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     truncated: bool = False  # hit the KV capacity (max_seq) before eos
+    expired: bool = False  # deadline passed while still queued
 
     @property
     def done(self) -> bool:
-        if self.truncated:
+        if self.truncated or self.expired:
             return True
         if len(self.generated) >= self.max_new_tokens:
             return True
@@ -76,6 +82,9 @@ class Request:
             "first_token_time": self.first_token_time,
             "finish_time": self.finish_time,
             "truncated": self.truncated,
+            "priority": self.priority,
+            "deadline": self.deadline,
+            "expired": self.expired,
         }
 
     @classmethod
@@ -93,5 +102,9 @@ class Request:
         req.first_token_time = d["first_token_time"]
         req.finish_time = d["finish_time"]
         req.truncated = bool(d.get("truncated", False))  # pre-paged snapshots
+        # pre-admission snapshots carry no class/deadline fields
+        req.priority = str(d.get("priority", "interactive"))
+        req.deadline = d.get("deadline", None)
+        req.expired = bool(d.get("expired", False))
         advance_request_ids(req.req_id + 1)
         return req

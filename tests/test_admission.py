@@ -1,0 +1,588 @@
+"""Admission control: token buckets, retry budget, circuit breaker,
+EDF queues, deadline expiry, staged brownout, and the cluster/engine
+integration invariants (4-way conservation under overload + chaos)."""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import b200_pim_system
+from repro.cluster import (
+    SLO,
+    AdmissionConfig,
+    AdmissionController,
+    BrownoutController,
+    CircuitBreaker,
+    ClassMix,
+    ClusterRequest,
+    ClusterSimulator,
+    LengthModel,
+    MMPPProcess,
+    PoissonProcess,
+    Replica,
+    RequestSpec,
+    RetryBudget,
+    Router,
+    TokenBucket,
+)
+from repro.cluster.admission import (
+    BATCH,
+    INTERACTIVE,
+    SHED_QUEUE_FULL,
+    SHED_RATE_LIMIT,
+    STAGE_BROWNOUT1,
+    STAGE_HEALTHY,
+    edf_key,
+    priority_rank,
+)
+from repro.cluster.replica import ReplicaConfig
+from repro.faults import FaultInjector, HealthMonitor, make_plan
+from repro.sim import SIM_MODELS
+
+MODEL = SIM_MODELS["qwen3-30b"]
+
+
+def spec(i, t=0.0, priority=INTERACTIVE, deadline=None, plen=64, olen=8):
+    return RequestSpec(
+        req_id=i, arrival_time=t, prompt_len=plen, output_len=olen,
+        priority=priority, deadline=deadline,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Token bucket
+# ---------------------------------------------------------------------------
+
+
+class TestTokenBucket:
+    def test_burst_then_refusal(self):
+        b = TokenBucket(rate=10.0, burst=3)
+        assert [b.try_take(0.0) for _ in range(4)] == [True, True, True, False]
+
+    def test_refill_at_rate(self):
+        b = TokenBucket(rate=10.0, burst=1)
+        assert b.try_take(0.0)
+        assert not b.try_take(0.05)  # half a token accrued
+        assert b.try_take(0.1)  # exactly one token at rate 10
+
+    def test_next_free_is_exact(self):
+        b = TokenBucket(rate=4.0, burst=1)
+        assert b.next_free(0.0) == 0.0
+        assert b.try_take(0.0)
+        t = b.next_free(0.0)
+        assert t == pytest.approx(0.25)
+        assert b.try_take(t)
+
+    def test_factor_scales_refill_not_stock(self):
+        b = TokenBucket(rate=10.0, burst=2)
+        b.factor = 0.5  # brownout admit cut: half the refill rate
+        assert b.try_take(0.0) and b.try_take(0.0)  # stock untouched
+        assert not b.try_take(0.1)  # only half a token at 5/s
+        assert b.try_take(0.2)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            TokenBucket(rate=0.0, burst=1)
+        with pytest.raises(ValueError):
+            TokenBucket(rate=1.0, burst=0)
+
+
+# ---------------------------------------------------------------------------
+# Retry budget
+# ---------------------------------------------------------------------------
+
+
+class TestRetryBudget:
+    def test_in_budget_fires_immediately(self):
+        rb = RetryBudget(window=1.0, ratio=0.5, min_retries=2)
+        for t in np.linspace(0.0, 0.9, 10):
+            rb.note_admission(float(t))
+        assert rb.acquire_at(1.0) == 1.0
+        assert rb.n_deferred == 0
+
+    def test_storm_defers_past_allowance(self):
+        rb = RetryBudget(window=0.5, ratio=0.25, min_retries=2)
+        # no admissions -> allowance = min_retries = 2
+        t0 = rb.acquire_at(1.0)
+        t1 = rb.acquire_at(1.0)
+        t2 = rb.acquire_at(1.0)
+        assert (t0, t1) == (1.0, 1.0)
+        assert t2 > 1.0  # third retry in the window is deferred
+        assert rb.n_deferred == 1
+        assert rb.peak_utilization <= 1.0
+
+    def test_deferrals_serialize_monotone(self):
+        rb = RetryBudget(window=0.5, ratio=0.25, min_retries=1)
+        grants = [rb.acquire_at(0.0) for _ in range(6)]
+        assert grants == sorted(grants)
+        # one per window once saturated
+        gaps = np.diff(grants[1:])
+        assert all(g >= rb.window - 1e-9 for g in gaps)
+
+    def test_peak_utilization_caps_at_one(self):
+        rb = RetryBudget(window=0.5, ratio=0.25, min_retries=1)
+        for _ in range(20):
+            rb.acquire_at(0.0)
+        assert rb.peak_utilization <= 1.0
+        assert rb.n_retries == 20
+        assert rb.stats()["n_deferred"] == rb.n_deferred > 0
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+
+class TestCircuitBreaker:
+    def test_opens_after_threshold(self):
+        cb = CircuitBreaker(fail_threshold=3, cooldown=0.25)
+        cb.on_failure(0.0)
+        cb.on_failure(0.01)
+        assert cb.state == "closed"
+        cb.on_failure(0.02)
+        assert cb.state == "open"
+        assert not cb.allow(0.03)
+
+    def test_half_open_probe_then_close(self):
+        cb = CircuitBreaker(fail_threshold=1, cooldown=0.25, half_open_probes=1)
+        cb.on_failure(0.0)
+        assert cb.state == "open"
+        assert cb.allow(0.3)  # cooldown elapsed: half-open grants a probe
+        assert cb.state == "half_open"
+        assert not cb.allow(0.3)  # single probe consumed
+        cb.on_success(0.31)
+        assert cb.state == "closed"
+        assert cb.allow(0.32)
+
+    def test_failed_probe_reopens(self):
+        cb = CircuitBreaker(fail_threshold=1, cooldown=0.25)
+        cb.on_failure(0.0)
+        assert cb.allow(0.3)
+        cb.on_failure(0.31)
+        assert cb.state == "open"
+        assert cb.n_opens == 2
+
+    def test_liveness_probes_regranted_every_cooldown(self):
+        # a breaker whose probes are consumed without a verdict must keep
+        # granting fresh probes — the retry path can never wedge shut
+        cb = CircuitBreaker(fail_threshold=1, cooldown=0.25, half_open_probes=1)
+        cb.on_failure(0.0)
+        assert cb.allow(0.3)  # probe 1 (no verdict follows)
+        assert not cb.allow(0.35)
+        assert cb.allow(0.3 + 0.26)  # next cooldown: fresh probe
+        assert cb.n_probes == 2
+
+    def test_retry_at_bounded(self):
+        cb = CircuitBreaker(fail_threshold=1, cooldown=0.25)
+        cb.on_failure(0.0)
+        assert cb.retry_at(0.1) == pytest.approx(0.25)
+        assert cb.retry_at(0.4) > 0.4
+
+    def test_sync_health_opens_on_all_failed_census(self):
+        mon = HealthMonitor(warmup=1, confirm=1)
+        mon.mark_failed("replica-0", t=0.0, reason="crash")
+        mon.mark_failed("replica-1", t=0.0, reason="crash")
+        cb = CircuitBreaker()
+        cb.sync_health(mon, 0.01)
+        assert cb.state == "open"
+        mon2 = HealthMonitor(warmup=1, confirm=1)
+        mon2.mark_failed("replica-0", t=0.0, reason="crash")
+        mon2.mark_recovered("replica-1", t=0.0, reason="fine")
+        cb2 = CircuitBreaker()
+        cb2.sync_health(mon2, 0.01)
+        assert cb2.state == "closed"  # pool not fully gone
+
+    def test_transitions_logged(self):
+        cb = CircuitBreaker(fail_threshold=1, cooldown=0.25)
+        cb.on_failure(0.0)
+        cb.allow(0.3)
+        cb.on_success(0.31)
+        seq = [(tr.old, tr.new) for tr in cb.transitions]
+        assert seq == [
+            ("closed", "open"), ("open", "half_open"), ("half_open", "closed")
+        ]
+
+
+# ---------------------------------------------------------------------------
+# EDF ordering
+# ---------------------------------------------------------------------------
+
+
+class TestEDF:
+    def test_priority_rank(self):
+        assert priority_rank(INTERACTIVE) < priority_rank(BATCH)
+        assert priority_rank("mystery") > priority_rank(BATCH)
+
+    def test_edf_key_ordering(self):
+        def req(priority, deadline, seq):
+            r = ClusterRequest(spec=spec(seq, priority=priority, deadline=deadline))
+            r.queue_seq = seq
+            return r
+
+        a = req(INTERACTIVE, 1.0, 3)
+        b = req(INTERACTIVE, 2.0, 1)
+        c = req(INTERACTIVE, None, 0)
+        d = req(BATCH, 0.5, 2)
+        order = sorted([a, b, c, d], key=edf_key)
+        assert order == [a, b, c, d]  # class, then deadline, then seq
+
+    def test_fifo_equivalence_without_deadlines(self):
+        # single-class deadline-free traffic must admit in exact
+        # submission order — the pre-admission behavior, bit-for-bit
+        reqs = [ClusterRequest(spec=spec(i)) for i in range(6)]
+        rep = Replica(0, MODEL, b200_pim_system(), "sieve")
+        for r in reqs:
+            rep.submit(r, now=0.0)
+        keys = [edf_key(r) for r in rep.queue]
+        assert keys == sorted(keys)
+        assert [min(rep.queue, key=edf_key)] == [reqs[0]]
+
+
+# ---------------------------------------------------------------------------
+# Bounded replica queues + deadline expiry
+# ---------------------------------------------------------------------------
+
+
+class TestReplicaQueueBounds:
+    def make_replica(self, max_queue=2):
+        return Replica(
+            0, MODEL, b200_pim_system(), "sieve",
+            cfg=ReplicaConfig(max_queue=max_queue),
+        )
+
+    def test_try_submit_rejects_past_bound(self):
+        rep = self.make_replica(max_queue=2)
+        rs = [ClusterRequest(spec=spec(i)) for i in range(3)]
+        assert rep.try_submit(rs[0], 0.0)
+        assert rep.try_submit(rs[1], 0.0)
+        assert not rep.try_submit(rs[2], 0.0)
+        assert rep.n_rejected_full == 1
+        assert len(rep.queue) == 2
+
+    def test_router_quue_full_shed_reason_distinct(self):
+        rep = self.make_replica(max_queue=1)
+        router = Router("jsq", [rep])
+        r0 = ClusterRequest(spec=spec(0))
+        r1 = ClusterRequest(spec=spec(1))
+        # fill the slot-free queue (no start_step yet: everything queues)
+        rep.submit(r0, now=0.0)
+        assert router.dispatch(r1, now=0.0) is None
+        assert r1.shed_reason == SHED_QUEUE_FULL
+        assert r1.retry_after is not None and r1.retry_after >= 0.0
+        assert router.shed_reasons.get(SHED_QUEUE_FULL) == 1
+
+    def test_expire_queue_removes_past_deadline(self):
+        rep = self.make_replica(max_queue=None)
+        live = ClusterRequest(spec=spec(0, deadline=5.0))
+        dead = ClusterRequest(spec=spec(1, deadline=0.5))
+        nodl = ClusterRequest(spec=spec(2))
+        for r in (live, dead, nodl):
+            rep.submit(r, now=0.0)
+        expired = rep.expire_queue(1.0)
+        assert expired == [dead]
+        assert dead.expire_time == 1.0
+        assert rep.n_expired == 1
+        assert sorted(r.spec.req_id for r in rep.queue) == [0, 2]
+        assert rep.next_queue_deadline() == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Brownout hysteresis
+# ---------------------------------------------------------------------------
+
+
+class TestBrownout:
+    def test_single_breach_does_not_escalate(self):
+        bc = BrownoutController(slo_ttft=1.0, confirm=2, recover=2)
+        assert bc.evaluate(0.0, est_delay=10.0) == STAGE_HEALTHY
+        assert bc.evaluate(0.05, est_delay=0.0) == STAGE_HEALTHY
+        assert bc.evaluate(0.10, est_delay=10.0) == STAGE_HEALTHY
+        assert not bc.transitions  # streak broken: never confirmed
+
+    def test_confirm_streak_escalates_and_recover_deescalates(self):
+        bc = BrownoutController(slo_ttft=1.0, confirm=2, recover=3)
+        t = 0.0
+        for _ in range(2):
+            bc.evaluate(t, est_delay=0.8)  # > enter[0] = 0.5
+            t += 0.05
+        assert bc.stage == STAGE_BROWNOUT1
+        # recovery below exit = 0.6 * 0.5 = 0.3, needs 3 in a row
+        bc.evaluate(t, est_delay=0.1); t += 0.05
+        bc.evaluate(t, est_delay=0.1); t += 0.05
+        assert bc.stage == STAGE_BROWNOUT1
+        bc.evaluate(t, est_delay=0.1)
+        assert bc.stage == STAGE_HEALTHY
+        assert bc.max_stage() == STAGE_BROWNOUT1
+        assert bc.time_to_engage(0.0) == pytest.approx(0.05)
+
+    def test_band_between_exit_and_enter_holds_stage(self):
+        bc = BrownoutController(slo_ttft=1.0, confirm=1, recover=1)
+        bc.evaluate(0.0, est_delay=0.8)
+        assert bc.stage == STAGE_BROWNOUT1
+        for k in range(5):  # 0.4 is between exit 0.3 and enter 0.5
+            bc.evaluate(0.05 * (k + 1), est_delay=0.4)
+        assert bc.stage == STAGE_BROWNOUT1  # hysteresis band: no flap
+
+    def test_ema_feeds_signal(self):
+        bc = BrownoutController(slo_ttft=1.0, alpha=0.5)
+        bc.observe_ttft(2.0)
+        bc.observe_ttft(1.0)
+        assert bc.ema_ttft == pytest.approx(1.5)
+        assert bc.signal(0.2) == pytest.approx(1.5)
+        assert bc.signal(3.0) == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# Admission controller front door
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionController:
+    def test_rate_limit_shed_stamps_reason_and_retry_after(self):
+        adm = AdmissionController(
+            AdmissionConfig(interactive_rate=10.0, interactive_burst=1)
+        )
+        r0 = ClusterRequest(spec=spec(0))
+        r1 = ClusterRequest(spec=spec(1))
+        assert adm.admit(r0, 0.0) is None
+        assert adm.admit(r1, 0.0) == SHED_RATE_LIMIT
+        assert r1.shed_reason == SHED_RATE_LIMIT
+        assert r1.retry_after == pytest.approx(0.1, rel=0.1)
+        assert adm.summary()["shed_reasons"] == {SHED_RATE_LIMIT: 1}
+
+    def test_stage1_clamps_batch_output(self):
+        adm = AdmissionController(
+            AdmissionConfig(brownout_ttft=1.0, brownout_batch_max_new=4)
+        )
+        adm.brownout.stage = STAGE_BROWNOUT1
+        adm.apply_stage()
+        b = ClusterRequest(spec=spec(0, priority=BATCH, olen=64))
+        i = ClusterRequest(spec=spec(1, priority=INTERACTIVE, olen=64))
+        assert adm.admit(b, 0.0) is None
+        assert adm.admit(i, 0.0) is None
+        assert b.output_target == 4
+        assert i.output_target == 64  # interactive never clamped
+        assert adm.n_clamped == 1
+
+    def test_stage3_sheds_batch_admits_interactive(self):
+        from repro.cluster.admission import SHED_BROWNOUT, STAGE_SHED
+
+        adm = AdmissionController(AdmissionConfig(brownout_ttft=1.0))
+        adm.brownout.stage = STAGE_SHED
+        b = ClusterRequest(spec=spec(0, priority=BATCH))
+        i = ClusterRequest(spec=spec(1, priority=INTERACTIVE))
+        assert adm.admit(b, 0.0) == SHED_BROWNOUT
+        assert adm.admit(i, 0.0) is None
+
+    def test_noop_config_admits_everything(self):
+        adm = AdmissionController(AdmissionConfig())
+        for i in range(100):
+            assert adm.admit(ClusterRequest(spec=spec(i)), 0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Cluster integration
+# ---------------------------------------------------------------------------
+
+
+def run_cluster(specs, horizon, admission=None, replica_cfg=None,
+                injector=None, **kw):
+    cs = ClusterSimulator(
+        MODEL, b200_pim_system(), policy="sieve", n_replicas=2,
+        router_policy="jsq", seed=0, admission=admission,
+        replica_cfg=replica_cfg, **kw,
+    )
+    return cs, cs.run_requests(list(specs), horizon, injector=injector)
+
+
+class TestClusterIntegration:
+    def test_noop_admission_matches_disabled(self):
+        # an AdmissionConfig with no buckets / no brownout must reproduce
+        # the admission=None run exactly (no behavioral drift by default)
+        specs = PoissonProcess(60.0, seed=3).generate(1.5)
+        _, base = run_cluster(specs, 1.5)
+        _, noop = run_cluster(specs, 1.5, admission=AdmissionConfig())
+        key = lambda res: [
+            (r.spec.req_id, r.first_token_time, r.finish_time)
+            for r in sorted(res.completed, key=lambda r: r.spec.req_id)
+        ]
+        assert key(base) == key(noop)
+
+    def test_overload_conserves_and_splits_by_class(self):
+        mix = ClassMix(p_interactive=0.6, interactive_slack=0.5)
+        specs = MMPPProcess(
+            120.0, 420.0, 0.3, 0.2, seed=5, mix=mix,
+        ).generate(1.5)
+        _, res = run_cluster(
+            specs, 1.5,
+            admission=AdmissionConfig(
+                interactive_rate=60.0, batch_rate=15.0, brownout_ttft=0.5,
+            ),
+            replica_cfg=ReplicaConfig(max_queue=8),
+        )
+        total = (
+            len(res.completed) + len(res.dropped)
+            + len(res.shed) + len(res.expired)
+        )
+        assert total == res.n_submitted
+        rep = res.report(SLO(ttft=0.5, tpot=0.02))
+        assert rep["n_shed"] == len(res.shed)
+        assert rep["n_expired"] == len(res.expired)
+        assert set(rep["by_class"]) <= {INTERACTIVE, BATCH}
+        assert rep["admission"] is not None
+        assert sum(rep["shed_reasons"].values()) == rep["n_shed"]
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        rate=st.floats(20.0, 300.0),
+        p_int=st.floats(0.0, 1.0),
+        slack=st.floats(0.05, 2.0),
+    )
+    def test_conservation_property_under_overload_and_chaos(
+        self, seed, rate, p_int, slack
+    ):
+        # every submitted request leaves exactly one outcome, under
+        # arbitrary overload, class mixes, tight deadlines, bounded
+        # queues, AND a replica crash driving the orphan-retry/breaker
+        # path (re-orphans included)
+        horizon = 1.2
+        mix = ClassMix(
+            p_interactive=p_int, interactive_slack=slack, batch_slack=2 * slack
+        )
+        specs = PoissonProcess(rate, seed=seed, mix=mix).generate(horizon)
+        plan = make_plan("replica-crash", horizon, n_replicas=2, seed=seed)
+        _, res = run_cluster(
+            specs, horizon,
+            admission=AdmissionConfig(
+                interactive_rate=0.6 * rate + 1.0,
+                batch_rate=0.2 * rate + 1.0,
+                brownout_ttft=0.4,
+            ),
+            replica_cfg=ReplicaConfig(max_queue=6),
+            injector=FaultInjector(plan),
+        )
+        outcomes = [res.completed, res.dropped, res.shed, res.expired]
+        assert sum(map(len, outcomes)) == res.n_submitted == len(specs)
+        ids = [r.spec.req_id for lst in outcomes for r in lst]
+        assert len(ids) == len(set(ids))  # exactly-once, no double-count
+
+    def test_breaker_opens_when_pool_fully_failed(self):
+        # crash the whole pool: health census drives the breaker open and
+        # queued orphans still resolve to explicit outcomes
+        specs = PoissonProcess(80.0, seed=2).generate(1.0)
+        cs = ClusterSimulator(
+            MODEL, b200_pim_system(), policy="sieve", n_replicas=1,
+            router_policy="jsq", seed=0,
+            admission=AdmissionConfig(interactive_rate=200.0),
+        )
+        plan = make_plan("replica-crash", 1.0, n_replicas=1, seed=0)
+        res = cs.run_requests(
+            list(specs), 1.0, injector=FaultInjector(plan)
+        )
+        st_ = res.admission["breaker"]
+        assert st_["n_opens"] >= 1
+        total = (
+            len(res.completed) + len(res.dropped)
+            + len(res.shed) + len(res.expired)
+        )
+        assert total == res.n_submitted
+
+    def test_retry_budget_bounded_under_crash(self):
+        mix = ClassMix(p_interactive=0.7, interactive_slack=1.0)
+        specs = PoissonProcess(100.0, seed=9, mix=mix).generate(1.5)
+        plan = make_plan("replica-crash", 1.5, n_replicas=2, seed=1)
+        _, res = run_cluster(
+            specs, 1.5,
+            admission=AdmissionConfig(interactive_rate=90.0, batch_rate=30.0),
+            injector=FaultInjector(plan),
+        )
+        budget = res.admission["retry_budget"]
+        assert budget["peak_utilization"] <= 1.0
+        assert budget["n_retries"] >= 1  # the crash actually exercised it
+
+
+# ---------------------------------------------------------------------------
+# Engine hooks (brownout stages, queue expiry, snapshot fields)
+# ---------------------------------------------------------------------------
+
+
+class TestEngineBrownout:
+    def test_stage1_clamps_batch_stage3_sheds_batch(self):
+        from test_serving import make_engine, reqs
+
+        eng = make_engine(n_slots=2)
+        eng.set_brownout_stage(1)
+        b = reqs(1, new=32)[0]
+        b.priority = "batch"
+        i = reqs(1, new=32, seed=1)[0]
+        assert eng.submit(b) and eng.submit(i)
+        assert b.max_new_tokens == eng.brownout_batch_max_new
+        assert i.max_new_tokens == 32  # interactive never clamped
+        eng.set_brownout_stage(3)
+        b2 = reqs(1, seed=2)[0]
+        b2.priority = "batch"
+        i2 = reqs(1, seed=3)[0]
+        assert not eng.submit(b2)
+        assert eng.submit(i2)
+        assert eng.stats.shed_requests == 1
+
+    def test_stage2_forces_gpu_only_without_recompile(self):
+        from test_serving import make_engine, reqs
+
+        eng = make_engine(n_slots=2)
+        assert eng.uses_cost_split
+        for r in reqs(2):
+            eng.submit(r)
+        eng.run_until_done()  # warm every jit entry point
+        n0 = eng._decode._cache_size() + eng._prefill_chunk._cache_size()
+        assert not eng._sieve_gpu_only
+        eng.set_brownout_stage(2)
+        assert eng._sieve_gpu_only
+        assert eng.brownout_stage == 2
+        for r in reqs(2, seed=4):
+            eng.submit(r)
+        eng.run_until_done()
+        n1 = eng._decode._cache_size() + eng._prefill_chunk._cache_size()
+        assert n1 == n0  # fixed-shape refresh: zero jit-cache misses
+        eng.set_brownout_stage(0)
+        assert not eng._sieve_gpu_only  # pim healthy again -> split restored
+
+    def test_step_expires_queued_past_deadline(self):
+        from test_serving import make_engine, reqs
+
+        eng = make_engine(n_slots=4)
+        rs = reqs(6)
+        for r in rs[:2]:
+            r.deadline = 1e-9  # perf_counter clock: already in the past
+        for r in rs:
+            eng.submit(r)
+        done_first = eng.step()
+        expired = [r for r in done_first if r.expired]
+        assert len(expired) == 2
+        assert all(r.generated == [] and r.finish_time is not None
+                   for r in expired)
+        assert eng.stats.expired_requests == 2
+        rest = eng.run_until_done()
+        finished = [r for r in done_first + rest if not r.expired]
+        assert len(finished) == 4
+        assert all(len(r.generated) == r.max_new_tokens for r in finished)
+
+    def test_snapshot_roundtrip_preserves_admission_fields(self):
+        from repro.serving import Request
+
+        r = Request(prompt=[1, 2, 3], max_new_tokens=4,
+                    priority="batch", deadline=12.5)
+        r.expired = True
+        back = Request.from_state(r.to_state())
+        assert (back.priority, back.deadline, back.expired) == (
+            "batch", 12.5, True
+        )
+        legacy = r.to_state()
+        for k in ("priority", "deadline", "expired"):
+            legacy.pop(k)
+        old = Request.from_state(legacy)  # pre-admission snapshots load
+        assert (old.priority, old.deadline, old.expired) == (
+            "interactive", None, False
+        )

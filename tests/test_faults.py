@@ -340,7 +340,7 @@ class TestClusterChaos:
         assert r["n_lost"] == 0
         assert r["n_completed"] + r["n_dropped"] == r["n_submitted"]
 
-    def test_shedding_counts_as_dropped(self):
+    def test_shedding_is_a_distinct_conserved_outcome(self):
         from repro.cluster import ClusterSimulator, LengthModel, PoissonProcess
         from repro.core import b200_pim_system
         from repro.sim import SIM_MODELS
@@ -360,9 +360,14 @@ class TestClusterChaos:
             2.0,
         )
         assert res.n_shed > 0
-        assert len(res.completed) + len(res.dropped) == res.n_submitted
+        total = (
+            len(res.completed) + len(res.dropped)
+            + len(res.shed) + len(res.expired)
+        )
+        assert total == res.n_submitted
         rep = res.report()
         assert rep["n_dropped"] == len(res.dropped)
+        assert rep["n_shed"] == len(res.shed) == res.n_shed
 
 
 # ---------------------------------------------------------------------------
